@@ -1,0 +1,33 @@
+"""Real threaded-engine measurement on this host: per-stream busy seconds
+for a HeteGen-offloaded OPT-125M decode (mechanism demo; the container is
+CPU-only so absolute numbers are not A10 numbers)."""
+from repro.benchmarks_shim import *  # noqa
+
+
+def run():
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.hw import PAPER_A10
+    from repro.models import model as M
+    from repro.serving.offload_runtime import OffloadGenerator
+
+    cfg = get_config("opt-125m")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    prompt = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (1, 16)).astype(np.int32)
+    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0)
+    res = off.generate(prompt, 8)
+    st = res["stream_stats"]
+    rows = [
+        ("engine.opt125m.decode_tok_s", res["tokens_per_s"]),
+        ("engine.opt125m.alpha", res["alpha"]),
+        ("engine.opt125m.cpu_busy_s", st.cpu),
+        ("engine.opt125m.pin_busy_s", st.pin),
+        ("engine.opt125m.trans_busy_s", st.trans),
+        ("engine.opt125m.dev_busy_s", st.dev),
+        ("engine.opt125m.pinned_overhead_MB",
+         res["pinned_overhead_bytes"] / 1e6),
+    ]
+    off.close()
+    return rows

@@ -1,0 +1,47 @@
+"""Kernel-level microbenchmarks: ref (XLA-compiled) wall time per call +
+theoretical bytes/flops per kernel shape (the Pallas kernels themselves
+are TPU-target; interpret mode is not a timing proxy)."""
+from repro.benchmarks_shim import *  # noqa
+
+
+def run():
+    import time
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.kernels import ref
+
+    rng = np.random.default_rng(0)
+    rows = []
+
+    def timeit(name, fn, *args, flops=None):
+        jfn = jax.jit(fn)
+        jfn(*args)[0].block_until_ready() if isinstance(jfn(*args), tuple) \
+            else jax.block_until_ready(jfn(*args))
+        t0 = time.perf_counter()
+        for _ in range(3):
+            jax.block_until_ready(jfn(*args))
+        us = (time.perf_counter() - t0) / 3 * 1e6
+        rows.append((f"kernels.{name}_us", us))
+        if flops:
+            rows.append((f"kernels.{name}_gflops_s", flops / us / 1e3))
+
+    m = k = n = 512
+    x = jnp.asarray(rng.standard_normal((m, k)), jnp.float32)
+    w = jnp.asarray(rng.standard_normal((k, n)), jnp.float32)
+    timeit("matmul_512", lambda a, b: ref.matmul(a, b), x, w,
+           flops=2 * m * k * n)
+
+    q = jnp.asarray(rng.standard_normal((1, 8, 512, 64)), jnp.float32)
+    kk = jnp.asarray(rng.standard_normal((1, 8, 512, 64)), jnp.float32)
+    timeit("flash_512", lambda a, b: ref.flash_attention(a, b, b), q, kk,
+           flops=4 * 8 * 512 * 512 * 64)
+
+    xs = jnp.asarray(rng.standard_normal((2, 256, 4, 16)), jnp.float32)
+    dt = jnp.abs(jnp.asarray(rng.standard_normal((2, 256, 4)), jnp.float32))
+    a = -jnp.ones((4,), jnp.float32) * 0.5
+    bm = jnp.asarray(rng.standard_normal((2, 256, 4, 8)), jnp.float32)
+    timeit("ssd_chunk_256", lambda *t: ref.ssd_chunk(*t, chunk=64)[0],
+           xs, dt, a, bm, bm)
+    return rows

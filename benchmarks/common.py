@@ -1,0 +1,58 @@
+"""Shared helpers for the paper-reproduction benchmarks."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+from repro.configs import get_config
+from repro.core.sim import SimModule
+
+
+def opt_decode_modules(arch: str, prefill_len: int = 512,
+                       batch: int = 1) -> List[SimModule]:
+    """Per-decode-step module list for an OPT config (the paper's models).
+
+    Linear weights in fp16 (the paper's deployment dtype); attention core
+    touches the KV cache for ``prefill_len`` tokens.
+    """
+    cfg = get_config(arch)
+    d, f = cfg.d_model, cfg.d_ff
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    by = 2                                      # fp16 weights at deployment
+    mods: List[SimModule] = []
+    for l in range(cfg.n_layers):
+        mods += [
+            SimModule(f"l{l}.wq", "linear", d * hq * hd * by, hq * hd,
+                      "attn", 2 * batch * d * hq * hd),
+            SimModule(f"l{l}.wk", "linear", d * hkv * hd * by, hkv * hd,
+                      "attn", 2 * batch * d * hkv * hd),
+            SimModule(f"l{l}.wv", "linear", d * hkv * hd * by, hkv * hd,
+                      "attn", 2 * batch * d * hkv * hd),
+            SimModule(f"l{l}.attn", "attn_core", 0, 0, "attn",
+                      4 * batch * d * prefill_len,
+                      cache_bytes=2 * batch * hkv * hd * prefill_len * by),
+            SimModule(f"l{l}.wo", "linear", hq * hd * d * by, d, "attn",
+                      2 * batch * hq * hd * d),
+            SimModule(f"l{l}.w_in", "linear", d * f * by, f, "mlp",
+                      2 * batch * d * f),
+            SimModule(f"l{l}.w_down", "linear", f * d * by, d, "mlp_down",
+                      2 * batch * f * d),
+        ]
+    return mods
+
+
+def weight_bytes(mods) -> int:
+    return sum(m.nbytes for m in mods if m.kind == "linear")
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.s = time.perf_counter() - self.t0
+
+    @property
+    def us(self):
+        return self.s * 1e6

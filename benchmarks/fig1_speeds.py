@@ -1,0 +1,28 @@
+"""Paper Fig. 1 — processing speeds of GPU / CPU / I/O on an OPT-30B MLP
+linear, expressed as parameter bytes per second (the paper's convention:
+'parameter size divided by processing time').
+
+Reported for the paper's A10+Xeon rig (hardware model) AND measured on
+this host's CPU (real wall-clock GEMV) for calibration.
+"""
+from repro.benchmarks_shim import *  # noqa
+
+
+def run():
+    import numpy as np
+    from repro.core.alpha_benchmark import (measure_host_linear,
+                                            measure_staging_copy)
+    from repro.core.hw import PAPER_A10, TPU_V5E
+
+    d, f = 7168, 28672                      # OPT-30B MLP first linear
+    nbytes = d * f * 2
+    rows = []
+    for hw in (PAPER_A10, TPU_V5E):
+        rows.append((f"fig1.{hw.name}.accel_Bps", hw.v_gpu(1.0)))
+        rows.append((f"fig1.{hw.name}.cpu_Bps", hw.v_cpu(1.0)))
+        rows.append((f"fig1.{hw.name}.link_Bps", hw.v_com()))
+    t_cpu = measure_host_linear(d, f, batch=1, dtype=np.float32)
+    t_pin = measure_staging_copy(nbytes)
+    rows.append(("fig1.this_host.cpu_Bps", d * f * 4 / t_cpu))
+    rows.append(("fig1.this_host.staging_Bps", nbytes / t_pin))
+    return rows

@@ -1,0 +1,28 @@
+"""Paper Fig. 2 — OPT-30B memory breakdown (batch 1, seq 512): linears
+dominate (>97%), motivating linear-only offload."""
+from repro.benchmarks_shim import *  # noqa
+
+
+def run():
+    from repro.configs import get_config
+    from repro.models.config import kv_cache_bytes
+
+    cfg = get_config("opt-30b")
+    by = 2
+    d, f, hd, hq = cfg.d_model, cfg.d_ff, cfg.hd, cfg.n_heads
+    lin_attn = cfg.n_layers * (3 * d * hq * hd + hq * hd * d) * by
+    lin_mlp = cfg.n_layers * (d * f + f * d) * by
+    emb = cfg.vocab_size * d * by + cfg.max_seq * d * by
+    norms = cfg.n_layers * 4 * d * by + 2 * d * by
+    kv = kv_cache_bytes(cfg, batch=1, seq=512)
+    total = lin_attn + lin_mlp + emb + norms + kv
+    frac_lin = (lin_attn + lin_mlp) / total
+    assert frac_lin > 0.9, frac_lin
+    return [
+        ("fig2.linear_attn_GB", lin_attn / 1e9),
+        ("fig2.linear_mlp_GB", lin_mlp / 1e9),
+        ("fig2.embedding_GB", emb / 1e9),
+        ("fig2.norms_GB", norms / 1e9),
+        ("fig2.kv_cache_GB", kv / 1e9),
+        ("fig2.linear_fraction", frac_lin),
+    ]

@@ -1,0 +1,27 @@
+"""Roofline summary from the dry-run records (one row per single-pod cell:
+the three terms + dominant bound)."""
+from repro.benchmarks_shim import *  # noqa
+
+
+def run():
+    import os
+    from repro.analysis.roofline import enrich, load_records
+
+    out = []
+    d = os.environ.get("REPRO_DRYRUN_DIR", "experiments/dryrun")
+    if not os.path.isdir(d):
+        return [("roofline.records_found", 0)]
+    recs = [r for r in load_records(d) if r.get("mesh") == "single"]
+    n_ok = 0
+    for r in recs:
+        e = enrich(r)
+        if e is None:
+            continue
+        n_ok += 1
+        key = f"roofline.{e['arch']}.{e['shape']}"
+        out.append((f"{key}.bound_ms", e["bound_s"] * 1e3))
+        out.append((f"{key}.dominant", e["dominant"]))
+        out.append((f"{key}.useful_flops_ratio",
+                    round(e["useful_flops_ratio"], 3)))
+    out.insert(0, ("roofline.records_found", n_ok))
+    return out

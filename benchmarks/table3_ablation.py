@@ -1,0 +1,33 @@
+"""Paper Table 3 — ablations, relative decode throughput (paper: all=100%,
+no-hybrid 77.7%, no-async-manager 94.9%, no-alpha-benchmark 92.8%,
+no-module-scheduler 32.1%)."""
+from repro.benchmarks_shim import *  # noqa
+
+
+def run():
+    from benchmarks.common import opt_decode_modules, weight_bytes
+    from repro.core.hw import PAPER_A10
+    from repro.core.sim import run_strategy
+
+    mods = opt_decode_modules("opt-13b")
+    budget = 0.6 * weight_bytes(mods)        # ample-memory regime
+    full = run_strategy(mods, "hetegen", PAPER_A10,
+                        gpu_mem_budget=budget).tokens_per_s
+    rows = [("table3.all_pct", 100.0)]
+    variants = {
+        "no_hybrid_parallelism": dict(strategy="hetegen_pinned"),
+        "no_async_param_manager": dict(strategy="hetegen",
+                                       async_manager=False),
+        "no_alpha_benchmark": dict(strategy="hetegen",
+                                   use_alpha_benchmark=False),
+        "no_module_scheduler": dict(strategy="hetegen",
+                                    use_module_scheduler=False),
+    }
+    for name, kw in variants.items():
+        strat = kw.pop("strategy")
+        t = run_strategy(mods, strat, PAPER_A10, gpu_mem_budget=budget,
+                         **kw).tokens_per_s
+        pct = 100.0 * t / full
+        assert pct <= 100.0 + 1e-6, name
+        rows.append((f"table3.{name}_pct", pct))
+    return rows

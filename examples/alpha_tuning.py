@@ -1,0 +1,43 @@
+"""Run the alpha benchmark + module scheduler against THIS host's measured
+CPU/staging speeds (paper §4.4-4.5 end to end).
+
+    PYTHONPATH=src python examples/alpha_tuning.py
+"""
+from repro.configs import get_config
+from repro.core.alpha import alpha_analytic
+from repro.core.alpha_benchmark import calibrated_speeds, refine_alpha
+from repro.core.hw import TPU_V5E
+from repro.core.policy import build_policy
+from repro.serving.offload_runtime import enumerate_linears
+
+
+def main():
+    print("calibrating this host (matmul + staging copy)...")
+    sp = calibrated_speeds(4096, 4096)
+    for k, v in sp.items():
+        print(f"  {k}: {v/1e9:.2f} GB/s")
+    a0 = alpha_analytic(sp["v_cpu"], sp["v_gpu"], sp["v_com"])
+    print(f"analytic prior alpha0 = {a0:.4f}")
+
+    nbytes = 4096 * 4096 * 4
+    fit = refine_alpha(
+        lambda a: (1 - a) * nbytes / sp["v_cpu"],
+        lambda a: max(a * nbytes / sp["v_pin"], a * nbytes / sp["v_com"]),
+        a0)
+    print(f"refined alpha = {fit.alpha:.4f} "
+          f"(predicted module time {fit.predicted_time*1e3:.2f} ms)")
+
+    cfg = get_config("opt-6.7b")
+    linears = enumerate_linears(cfg)
+    for frac, label in ((0.0, "fully offloaded"), (0.5, "half budget"),
+                        (1.0, "full budget")):
+        budget = frac * sum(s.nbytes for s in linears)
+        pol = build_policy(linears, TPU_V5E, budget_bytes=budget)
+        n_res = sum(1 for p in pol.plan if p.mode == "resident")
+        print(f"{label:16s}: alpha={pol.alpha:.3f} resident={n_res}/"
+              f"{len(pol.plan)} modules, predicted step "
+              f"{pol.predicted_step_time*1e3:.1f} ms")
+
+
+if __name__ == "__main__":
+    main()

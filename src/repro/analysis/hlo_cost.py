@@ -1,0 +1,509 @@
+"""Trip-count-aware cost analysis of post-optimization HLO text.
+
+XLA's built-in ``compiled.cost_analysis()`` visits a ``while`` body ONCE
+(verified empirically: flops identical for scan length 7 vs 14), which
+under-counts scanned-layer models by the layer count.  This analyzer parses
+``compiled.as_text()`` (the SPMD-partitioned, per-device module) and:
+
+  * counts matmul FLOPs from ``dot`` ops (2 * prod(result) * contracted),
+    including dots inside fused computations and (for conv frontends)
+    ``convolution`` ops;
+  * approximates HBM traffic as operand+result bytes of top-level ops in
+    each computation (post-fusion, each top-level op is ~one HBM
+    round-trip; intra-fusion traffic is free, which is the point of
+    fusion);
+  * sums collective wire bytes with ring formulas on per-device shapes:
+        all-reduce        2 * S * (n-1)/n
+        all-gather        S_out * (n-1)/n
+        reduce-scatter    S_in  * (n-1)/n
+        all-to-all        S * (n-1)/n
+        collective-permute S
+  * multiplies every ``while`` body's cost by its trip count, extracted
+    from the loop condition's comparison constant (lax.scan emits
+    ``compare(iter, constant(N)), direction=LT``); nested loops multiply.
+
+All numbers are PER DEVICE (the module is the per-device SPMD program).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+
+def _shape_bytes(type_str: str, cap: Optional[int] = None) -> int:
+    """bytes of 'f32[32,256]{1,0}' or tuple '(f32[2], s32[])'.
+
+    ``cap`` bounds bytes-per-element: XLA:CPU upcasts bf16 weights/caches
+    to fp32 shadows (no native bf16 GEMM), which a TPU lowering would not
+    do — analyses of bf16 models pass cap=2 so traffic reflects the
+    program as designed.  (Genuinely-fp32 accumulators are then counted at
+    2 B/elem; they are a rounding error next to weights/KV, and the
+    uncapped number is strictly more wrong.  Methodology note in
+    EXPERIMENTS.md §Roofline.)
+    """
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        by = _DTYPE_BYTES[dt]
+        if cap is not None and by > cap and dt in ("f32", "f64", "bf16",
+                                                   "f16"):
+            by = cap
+        total += n * by
+    return total
+
+
+def _shape_elems(type_str: str) -> int:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return 0
+    dims = m.group(2)
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n
+
+
+@dataclasses.dataclass
+class Instruction:
+    name: str
+    type_str: str
+    op: str
+    args: List[str]
+    raw: str
+
+
+@dataclasses.dataclass
+class Computation:
+    name: str
+    instructions: List[Instruction]
+
+
+@dataclasses.dataclass
+class CostReport:
+    flops: float = 0.0
+    bytes: float = 0.0
+    collective_bytes: Dict[str, float] = dataclasses.field(
+        default_factory=dict)
+    collective_count: int = 0
+
+    @property
+    def total_collective_bytes(self) -> float:
+        return sum(self.collective_bytes.values())
+
+    def scaled(self, k: float) -> "CostReport":
+        return CostReport(
+            flops=self.flops * k, bytes=self.bytes * k,
+            collective_bytes={kk: v * k
+                              for kk, v in self.collective_bytes.items()},
+            collective_count=int(self.collective_count * k))
+
+    def add(self, other: "CostReport") -> None:
+        self.flops += other.flops
+        self.bytes += other.bytes
+        for k, v in other.collective_bytes.items():
+            self.collective_bytes[k] = self.collective_bytes.get(k, 0.0) + v
+        self.collective_count += other.collective_count
+
+
+# result type is either a tuple "(...)" — which may contain /*index=N*/
+# comments and layout braces, but never nested parens — or a plain shape
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*"
+    r"(\([^()]*\)|[\w\[\]\{\},\s/*]+?)\s+"
+    r"([\w\-]+)\((.*?)\)(.*)$")
+
+
+def parse_hlo(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        stripped = line.strip()
+        header = re.match(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\(.*\))?\s*->.*{",
+                          stripped)
+        if header and not stripped.startswith("//"):
+            cur = Computation(header.group(1), [])
+            comps[cur.name] = cur
+            continue
+        if stripped.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, op, args, tail = m.groups()
+        cur.instructions.append(Instruction(
+            name=name, type_str=type_str.strip(), op=op,
+            args=[a.strip().lstrip("%") for a in _split_args(args)],
+            raw=line))
+    return comps
+
+
+def _split_args(s: str) -> List[str]:
+    out, depth, cur = [], 0, []
+    for ch in s:
+        if ch == "," and depth == 0:
+            out.append("".join(cur))
+            cur = []
+        else:
+            if ch in "([{":
+                depth += 1
+            elif ch in ")]}":
+                depth -= 1
+            cur.append(ch)
+    if cur:
+        out.append("".join(cur))
+    return [a for a in (x.strip() for x in out) if a]
+
+
+def _dot_flops(instr: Instruction, symtab: Dict[str, str]) -> float:
+    # flops = 2 * prod(result_dims) * prod(contracted dims of lhs)
+    res = _shape_elems(instr.type_str)
+    mdims = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", instr.raw)
+    lhs = instr.args[0].split(" ")[-1].lstrip("%") if instr.args else ""
+    lhs_type = symtab.get(lhs, "")
+    ms = _SHAPE_RE.search(lhs_type)
+    if not ms or not mdims:
+        return 2.0 * res            # fallback: treat as elementwise-ish
+    dims = [int(d) for d in ms.group(2).split(",")] if ms.group(2) else []
+    contracted = 1
+    for di in (int(x) for x in mdims.group(1).split(",") if x):
+        if di < len(dims):
+            contracted *= dims[di]
+    return 2.0 * res * contracted
+
+
+def _conv_flops(instr: Instruction, symtab: Dict[str, str]) -> float:
+    res = _shape_elems(instr.type_str)
+    rhs = instr.args[1].split(" ")[-1].lstrip("%") if len(instr.args) > 1 \
+        else ""
+    k = _shape_elems(symtab.get(rhs, ""))
+    return 2.0 * res * max(k, 1) ** 0.5   # rough; conv is negligible here
+
+
+def _group_size(raw: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", raw)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", raw)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _trip_count(cond: Computation) -> int:
+    consts = {}
+    for ins in cond.instructions:
+        m = re.match(r"\s*(?:ROOT\s+)?%?[\w\.\-]+\s*=\s*s32\[\]\s+"
+                     r"constant\((\d+)\)", ins.raw)
+        if m:
+            consts[ins.name] = int(m.group(1))
+    for ins in cond.instructions:
+        if ins.op == "compare" and "direction=LT" in ins.raw:
+            for a in ins.args:
+                nm = a.split(" ")[-1].lstrip("%")
+                if nm in consts:
+                    return consts[nm]
+    # fallback: any s32 constant in the condition
+    if consts:
+        return max(consts.values())
+    return 1
+
+
+class HloCostAnalyzer:
+    def __init__(self, text: str, *, max_bytes_per_elem: Optional[int] = None):
+        self.comps = parse_hlo(text)
+        self.cap = max_bytes_per_elem
+        self.symtab: Dict[str, str] = {}
+        for c in self.comps.values():
+            for ins in c.instructions:
+                self.symtab[ins.name] = ins.type_str
+        self._memo: Dict[str, CostReport] = {}
+        self._memo_eff: Dict[str, Dict] = {}
+
+    def _sb(self, type_str: str) -> int:
+        return _shape_bytes(type_str, self.cap)
+
+    _MOVEMENT_OPS = {"convert", "bitcast", "copy", "reshape", "transpose",
+                     "select", "broadcast", "iota", "compare", "slice",
+                     "concatenate", "pad", "tuple", "get-tuple-element",
+                     "parameter", "constant", "dynamic-slice",
+                     "dynamic-update-slice", "clamp", "and", "or", "not"}
+
+    def _fusion_has_math(self, comp_name: str) -> bool:
+        """False for movement-only fusions (dtype-shadow copies, layout
+        shuffles, select-based in-place updates) — lowering artifacts of
+        the CPU backend's aliasing/precision constraints that a TPU
+        lowering of the same program performs in place.  Billed 0 bytes
+        when the dtype cap is active; methodology in EXPERIMENTS.md."""
+        key = "__math__" + comp_name
+        if key in self._memo_eff:
+            return self._memo_eff[key]
+        comp = self.comps.get(comp_name)
+        has = False
+        if comp is not None:
+            for ins in comp.instructions:
+                if ins.op in ("fusion", "call"):
+                    callee = self._called(ins.raw, "calls") or \
+                        self._called(ins.raw, "to_apply")
+                    if callee and self._fusion_has_math(callee):
+                        has = True
+                        break
+                elif ins.op not in self._MOVEMENT_OPS:
+                    # scalar index arithmetic (e.g. the s32 adds of a
+                    # select-lowered in-place update) is not math traffic
+                    big_res = _shape_elems(ins.type_str) > 4096
+                    big_arg = any(
+                        _shape_elems(self.symtab.get(
+                            a.split(" ")[-1].lstrip("%"), "")) > 4096
+                        for a in ins.args)
+                    if big_res or big_arg:
+                        has = True
+                        break
+        self._memo_eff[key] = has
+        return has
+
+    # ------------------------------------------------------------------
+    def _called(self, raw: str, key: str) -> Optional[str]:
+        m = re.search(key + r"=%?([\w\.\-]+)", raw)
+        return m.group(1) if m else None
+
+    def _fusion_traffic(self, comp_name: str):
+        """(result_override_bytes | None, {param_index: effective_bytes}).
+
+        * a fusion operand whose every (convert/bitcast/copy-transparent)
+          use is a ``dynamic-slice``/``gather`` only reads the sliced rows;
+        * an operand that is the *target* of a root ``dynamic-update-slice``
+          is updated in place: traffic = update size, and the fusion's
+          result is billed at the update size too (the full-buffer result
+          is aliased, not rewritten — XLA:CPU materializes an fp32 shadow
+          here that a TPU lowering would not).
+        """
+        if comp_name in self._memo_eff:
+            return self._memo_eff[comp_name]
+        comp = self.comps.get(comp_name)
+        result_override = None
+        out: Dict[int, float] = {}
+        if comp is not None:
+            pname_by_idx: Dict[str, int] = {}
+            for ins in comp.instructions:
+                if ins.op == "parameter":
+                    m = re.search(r"parameter\((\d+)\)", ins.raw)
+                    if m:
+                        pname_by_idx[ins.name] = int(m.group(1))
+            transparent_of: Dict[str, str] = {}   # alias -> param name
+            uses: Dict[str, List[Instruction]] = {}
+            for ins in comp.instructions:
+                srcs = set()
+                for a in ins.args:
+                    nm = a.split(" ")[-1].lstrip("%")
+                    root = transparent_of.get(nm, nm)
+                    if root in pname_by_idx:
+                        srcs.add(root)
+                        uses.setdefault(root, []).append(ins)
+                if ins.op in ("convert", "bitcast", "copy") and len(srcs) == 1:
+                    transparent_of[ins.name] = next(iter(srcs))
+            root_ins = comp.instructions[-1] if comp.instructions else None
+            for ins in comp.instructions:
+                if "ROOT" in ins.raw:
+                    root_ins = ins
+            for pname, idx in pname_by_idx.items():
+                us = uses.get(pname, [])
+                sliced = [u for u in us
+                          if u.op in ("dynamic-slice", "gather")]
+                dus_target = [
+                    u for u in us if u.op == "dynamic-update-slice"
+                    and transparent_of.get(
+                        u.args[0].split(" ")[-1].lstrip("%"),
+                        u.args[0].split(" ")[-1].lstrip("%")) == pname]
+                transparent_only = [u for u in us
+                                    if u.op in ("convert", "bitcast", "copy")]
+                other = [u for u in us if u not in sliced
+                         and u not in dus_target
+                         and u not in transparent_only]
+                if us and not other and (sliced or dus_target):
+                    eff = 0.0
+                    for u in sliced:
+                        eff += self._sb(u.type_str)
+                    for u in dus_target:
+                        upd = u.args[1].split(" ")[-1].lstrip("%") \
+                            if len(u.args) > 1 else ""
+                        eff += self._sb(self.symtab.get(upd, ""))
+                    out[idx] = eff
+            # walk back from ROOT through convert/bitcast/copy: a fused
+            # in-place cache update may be wrapped in dtype converts
+            defs = {i.name: i for i in comp.instructions}
+            root_eff = root_ins
+            seen = 0
+            while root_eff is not None and \
+                    root_eff.op in ("convert", "bitcast", "copy") and \
+                    root_eff.args and seen < 8:
+                nm = root_eff.args[0].split(" ")[-1].lstrip("%")
+                root_eff = defs.get(nm)
+                seen += 1
+            if root_eff is not None and \
+                    root_eff.op == "dynamic-update-slice":
+                upd = root_eff.args[1].split(" ")[-1].lstrip("%") \
+                    if len(root_eff.args) > 1 else ""
+                result_override = float(self._sb(self.symtab.get(upd, "")))
+        self._memo_eff[comp_name] = (result_override, out)
+        return result_override, out
+
+    def _fusion_flops(self, comp_name: str) -> float:
+        comp = self.comps.get(comp_name)
+        if comp is None:
+            return 0.0
+        fl = 0.0
+        for ins in comp.instructions:
+            if ins.op == "dot":
+                fl += _dot_flops(ins, self.symtab)
+            elif ins.op == "convolution":
+                fl += _conv_flops(ins, self.symtab)
+            elif ins.op in ("fusion", "call"):
+                callee = self._called(ins.raw, "calls") or \
+                    self._called(ins.raw, "to_apply")
+                if callee:
+                    fl += self._fusion_flops(callee)
+        return fl
+
+    def cost_of(self, comp_name: str) -> CostReport:
+        if comp_name in self._memo:
+            return self._memo[comp_name]
+        comp = self.comps.get(comp_name)
+        rep = CostReport()
+        if comp is None:
+            return rep
+        self._memo[comp_name] = rep     # cycle guard
+        skip_bytes_ops = {"parameter", "constant", "get-tuple-element",
+                          "tuple", "bitcast", "iota"}
+        for ins in comp.instructions:
+            if ins.op == "while":
+                body = self._called(ins.raw, "body")
+                cond = self._called(ins.raw, "condition")
+                trips = _trip_count(self.comps[cond]) if cond in self.comps \
+                    else 1
+                if body:
+                    inner = self.cost_of(body)
+                    rep.add(inner.scaled(max(trips, 1)))
+                continue
+            if ins.op == "conditional":
+                for branch in re.findall(r"(?:true_computation|"
+                                         r"false_computation|branch_\w+)="
+                                         r"%?([\w\.\-]+)", ins.raw):
+                    rep.add(self.cost_of(branch))
+                continue
+            if ins.op in ("call", "async-start"):
+                callee = self._called(ins.raw, "to_apply") or \
+                    self._called(ins.raw, "calls")
+                if callee:
+                    rep.add(self.cost_of(callee))
+
+            # flops
+            if ins.op == "dot":
+                rep.flops += _dot_flops(ins, self.symtab)
+            elif ins.op == "convolution":
+                rep.flops += _conv_flops(ins, self.symtab)
+            elif ins.op == "fusion":
+                callee = self._called(ins.raw, "calls")
+                if callee:
+                    rep.flops += self._fusion_flops(callee)
+
+            # collectives (wire bytes, per device)
+            opn = ins.op.replace("-start", "")
+            if opn in _COLLECTIVES:
+                n = _group_size(ins.raw, 1)
+                if n > 1:
+                    if opn == "all-reduce":
+                        size = sum(self._sb(self.symtab.get(a.split(" ")
+                                   [-1].lstrip("%"), "")) for a in ins.args)
+                        wire = 2.0 * size * (n - 1) / n
+                    elif opn == "all-gather":
+                        size = self._sb(ins.type_str)
+                        wire = size * (n - 1) / n
+                    elif opn in ("reduce-scatter", "all-to-all"):
+                        size = sum(self._sb(self.symtab.get(a.split(" ")
+                                   [-1].lstrip("%"), "")) for a in ins.args)
+                        wire = size * (n - 1) / n
+                    else:  # collective-permute
+                        size = self._sb(ins.type_str)
+                        wire = float(size)
+                    rep.collective_bytes[opn] = \
+                        rep.collective_bytes.get(opn, 0.0) + wire
+                    rep.collective_count += 1
+
+            # memory traffic (slice-aware: in-place cache updates and
+            # gathers bill only the rows they touch)
+            if ins.op in skip_bytes_ops or ins.op.endswith("-done") \
+                    or ins.op == "while":
+                continue
+            if ins.op == "dynamic-update-slice":
+                upd = ins.args[1].split(" ")[-1].lstrip("%") \
+                    if len(ins.args) > 1 else ""
+                rep.bytes += 2.0 * self._sb(self.symtab.get(upd, ""))
+                continue
+            if ins.op in ("dynamic-slice", "gather"):
+                rep.bytes += 2.0 * self._sb(ins.type_str)
+                continue
+            if self.cap is not None and ins.op in ("copy", "transpose",
+                                                   "convert", "select",
+                                                   "reshape"):
+                continue          # movement artifact (see _fusion_has_math)
+            if ins.op == "fusion":
+                callee = self._called(ins.raw, "calls")
+                if self.cap is not None and callee \
+                        and not self._fusion_has_math(callee):
+                    # movement-only fusion: bill the sliced flows only
+                    _, eff_only = self._fusion_traffic(callee)
+                    rep.bytes += sum(eff_only.values())
+                    continue
+                override, eff = self._fusion_traffic(callee) if callee \
+                    else (None, {})
+                b = override if override is not None \
+                    else self._sb(ins.type_str)
+                for i, a in enumerate(ins.args):
+                    nm = a.split(" ")[-1].lstrip("%")
+                    if i in eff:
+                        b += eff[i]
+                    else:
+                        b += self._sb(self.symtab.get(nm, ""))
+                rep.bytes += b
+                continue
+            b = self._sb(ins.type_str)
+            for a in ins.args:
+                nm = a.split(" ")[-1].lstrip("%")
+                b += self._sb(self.symtab.get(nm, ""))
+            rep.bytes += b
+        return rep
+
+    def entry_cost(self) -> CostReport:
+        # ENTRY computation: jax names it e.g. 'main.123' / first parsed
+        for name in self.comps:
+            if name.startswith("main"):
+                return self.cost_of(name)
+        first = next(iter(self.comps))
+        return self.cost_of(first)
+
+
+def analyze_compiled(compiled, *, max_bytes_per_elem=None) -> CostReport:
+    return HloCostAnalyzer(compiled.as_text(),
+                           max_bytes_per_elem=max_bytes_per_elem).entry_cost()

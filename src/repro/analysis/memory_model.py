@@ -1,0 +1,117 @@
+"""Analytic per-device TPU HBM footprint for a (config, shape, mesh) cell.
+
+``compiled.memory_analysis()`` on the CPU backend structurally overstates
+the TPU footprint of the same program: XLA:CPU (a) materializes fp32
+shadows of every bf16 weight/cache (no native bf16 GEMM) and (b) "widens"
+loop-local buffers across iterations (``wide.*`` computations), e.g.
+stacking all grad-accum microbatches' remat buffers.  Neither transform
+exists in the TPU lowering, so the dry-run records BOTH the raw CPU
+numbers and this analytic estimate (formula below, fully determined by
+config + sharding specs):
+
+  train:   params + grads(fp32, param-sharded) + optimizer moments
+           + remat-saved layer inputs (one per scanned layer, microbatch
+             tokens, sharded per the activation rules) x 2 (double buffer)
+           + attention workspace (fp32 score chunk x 2)
+           + logits buffer (micro tokens x vocab shard, fp32 x 2)
+  serve:   params + cache + attention workspace + logits
+  all:     x 1.25 slack for fragmentation/fusion temporaries
+
+Exactness: parameter/optimizer/cache terms are exact (leaf-by-leaf bytes
+divided by their PartitionSpec shard factors); activation terms are a
+model, cross-checked against small-config compiled footprints in
+tests/test_roofline.py.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.distributed import specs as SP
+from repro.distributed.shardings import ShardingRules
+from repro.models.config import ModelConfig, kv_cache_bytes
+
+
+def _shard_factor(spec: P, rules: ShardingRules) -> int:
+    f = 1
+    for part in spec:
+        if part is None:
+            continue
+        axes = part if isinstance(part, tuple) else (part,)
+        for a in axes:
+            f *= rules.mesh_shape.get(a, 1)
+    return f
+
+
+def tree_bytes_per_device(shapes, specs, rules: ShardingRules) -> int:
+    flat_s = jax.tree_util.tree_leaves(shapes)
+    flat_p = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, P))
+    total = 0
+    for leaf, spec in zip(flat_s, flat_p):
+        n = 1
+        for d in leaf.shape:
+            n *= d
+        total += n * leaf.dtype.itemsize // max(_shard_factor(spec, rules), 1)
+    return total
+
+
+def estimate(cfg: ModelConfig, *, kind: str, batch: int, seq: int,
+             rules: ShardingRules, accum: int = 1, accum_dtype_bytes: int = 4,
+             param_shapes=None, param_spec=None,
+             opt_shapes=None, opt_spec=None,
+             cache_shapes=None, cache_spec=None) -> Dict[str, float]:
+    ms = rules.mesh_shape.get("model", 1)
+    batch_shards = 1
+    for a in ("pod", "data"):
+        batch_shards *= rules.mesh_shape.get(a, 1)
+    dt = cfg.dtype_bytes()
+
+    out: Dict[str, float] = {}
+    if param_shapes is not None:
+        out["params"] = tree_bytes_per_device(param_shapes, param_spec, rules)
+    if opt_shapes is not None:
+        out["optimizer"] = tree_bytes_per_device(opt_shapes, opt_spec, rules)
+    if cache_shapes is not None:
+        out["cache"] = tree_bytes_per_device(cache_shapes, cache_spec, rules)
+
+    d, v = cfg.d_model, cfg.vocab_size
+    hq_loc = max(cfg.n_heads // ms, 1) if cfg.n_heads else 1
+    v_loc = v // ms if v % ms == 0 else v
+
+    if kind == "train":
+        micro_rows = max(batch // max(accum, 1), 1)
+        rows_loc = max(micro_rows // batch_shards, 1)
+        seq_shards = ms if (rules.table.get("seq") and seq % ms == 0) else 1
+        tok_loc = rows_loc * (seq // seq_shards)
+        n_saved = cfg.n_layers
+        saved = n_saved * tok_loc * d * dt * 2          # x2 double buffer
+        out["grads_accum"] = out.get("params", 0) * (accum_dtype_bytes / dt)
+        chunk_q = min(1024, seq)
+        attn_ws = rows_loc * hq_loc * chunk_q * seq * 4 * 2
+        logits = tok_loc * v_loc * 4 * 2
+        # per-layer live set during bwd: x, normed h, ff activations
+        ff_loc = max(cfg.d_ff // ms, 1) if cfg.d_ff else cfg.d_inner // ms \
+            if cfg.ssm_state else d
+        layer_live = tok_loc * (3 * d + 2 * ff_loc) * 4
+        out["activations"] = saved + attn_ws + logits + layer_live
+    else:
+        rows_loc = max(batch // batch_shards, 1)
+        attn_ws = rows_loc * hq_loc * min(1024, max(seq // 32, 1)) * 4 * 2 \
+            if kind == "prefill" else rows_loc * hq_loc * seq * 4
+        logits = rows_loc * v_loc * 4 * 2
+        out["activations"] = attn_ws + logits
+
+    # slack only on the modeled activation term; params/opt/cache/grads
+    # are exact per-spec byte counts
+    act = out.get("activations", 0.0)
+    out["total"] = sum(v for k, v in out.items() if k != "activations") \
+        + 1.5 * act
+    out["activations"] = act
+    out["fits_16GB"] = out["total"] <= 16e9
+    return out

@@ -1,0 +1,2 @@
+"""Import shim so benchmark modules run via ``python -m benchmarks.run``
+with PYTHONPATH=src (keeps benchmarks/ importable without installing)."""

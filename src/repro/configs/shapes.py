@@ -1,0 +1,101 @@
+"""Assigned input shapes and ``input_specs`` (ShapeDtypeStruct stand-ins).
+
+Each LM-family architecture is paired with four shapes:
+
+    train_4k      seq 4,096   global_batch 256   -> train_step
+    prefill_32k   seq 32,768  global_batch 32    -> prefill_step
+    decode_32k    seq 32,768  global_batch 128   -> serve_step (1 new token,
+                                                   KV cache of seq_len)
+    long_500k     seq 524,288 global_batch 1     -> serve_step; requires a
+                  sub-quadratic trunk: run for SSM/hybrid archs only (the
+                  skip list for full-attention archs is in DESIGN.md §5)
+
+``input_specs`` allocates nothing — every leaf is a ``ShapeDtypeStruct`` —
+so the 512-chip dry-run can lower/compile the full configs on one host.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.model import init_cache
+
+
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    kind: str            # train | prefill | decode
+    seq: int
+    batch: int
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", "train", 4_096, 256),
+    "prefill_32k": ShapeSpec("prefill_32k", "prefill", 32_768, 32),
+    "decode_32k": ShapeSpec("decode_32k", "decode", 32_768, 128),
+    "long_500k": ShapeSpec("long_500k", "decode", 524_288, 1),
+}
+
+
+def shape_applicable(cfg: ModelConfig, shape: str) -> Tuple[bool, str]:
+    """(runnable, reason-if-skipped) for an (arch, shape) cell."""
+    s = SHAPES[shape]
+    if s.name == "long_500k" and not cfg.sub_quadratic:
+        return False, ("full-attention trunk: 500k-token decode requires a "
+                       "sub-quadratic architecture (DESIGN.md §5)")
+    return True, ""
+
+
+def input_specs(cfg: ModelConfig, shape: str, *, batch_override: Optional[int] = None,
+                spec_only: bool = True) -> Dict:
+    """Step-function inputs for one (arch, shape) cell.
+
+    train   -> {"tokens", "labels"} (+ stub-frontend embeds)
+    prefill -> {"batch": {...}, "cache": zero cache sized to seq}
+    decode  -> {"token", "cache" (full), "cache_len"}
+    """
+    s = SHAPES[shape]
+    b = batch_override or s.batch
+    i32, f = jnp.int32, jnp.dtype(cfg.dtype)
+
+    def mk(shp, dt):
+        if spec_only:
+            return jax.ShapeDtypeStruct(shp, dt)
+        if jnp.issubdtype(dt, jnp.integer):
+            return jnp.zeros(shp, dt)
+        return jnp.zeros(shp, dt)
+
+    if s.kind == "train":
+        batch: Dict = {}
+        if cfg.embeds_input:
+            batch["embeds"] = mk((b, s.seq, cfg.d_model), f)
+        else:
+            batch["tokens"] = mk((b, s.seq), i32)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = mk((b, cfg.encoder_seq, cfg.d_model), f)
+            if "tokens" not in batch:
+                batch["tokens"] = mk((b, s.seq), i32)
+        batch["labels"] = mk((b, s.seq), i32)
+        return {"batch": batch}
+
+    if s.kind == "prefill":
+        batch = {}
+        if cfg.embeds_input:
+            batch["embeds"] = mk((b, s.seq, cfg.d_model), f)
+        else:
+            batch["tokens"] = mk((b, s.seq), i32)
+        if cfg.family == "encdec":
+            batch["enc_embeds"] = mk((b, cfg.encoder_seq, cfg.d_model), f)
+            if "tokens" not in batch:
+                batch["tokens"] = mk((b, s.seq), i32)
+        cache = init_cache(cfg, b, s.seq, spec_only=spec_only)
+        return {"batch": batch, "cache": cache}
+
+    # decode: one new token against a cache of length seq
+    cache = init_cache(cfg, b, s.seq, spec_only=spec_only)
+    return {"token": mk((b,), i32), "cache": cache}

@@ -1,0 +1,29 @@
+"""HeteGen core — the paper's contribution as composable JAX/host modules.
+
+Public surface:
+
+    alpha            — the computation-distribution law (Eq. 4-9)
+    alpha_benchmark  — measurement-refined alpha (Eq. 10-12)
+    module_scheduler — gain-ranked residency promotion (Eq. 13)
+    param_manager    — asynchronous pinned-ring staging (§4.3)
+    engine           — threaded hybrid heterogeneous runtime (§4.2)
+    policy           — scheduler stage gluing the above (Fig. 4)
+    sim              — discrete-event performance model (Figs. 5/8, Tables 2/3)
+    hw               — hardware constants (paper's A10 rig; TPU v5e target)
+"""
+
+from repro.core.alpha import (  # noqa: F401
+    AlphaDecision,
+    alpha_analytic,
+    alpha_approx,
+    alpha_from_times,
+    alpha_hybrid,
+    decide,
+    quantize_alpha,
+    split_columns,
+)
+from repro.core.engine import HeteGenEngine, ModulePlan, StreamStats  # noqa: F401
+from repro.core.hw import HARDWARE, PAPER_A10, TPU_V5E, HardwareSpec  # noqa: F401
+from repro.core.module_scheduler import ModuleInfo, SchedulePlan, schedule  # noqa: F401
+from repro.core.param_manager import AsyncParamManager  # noqa: F401
+from repro.core.policy import LinearSpec, PolicyResult, build_policy  # noqa: F401

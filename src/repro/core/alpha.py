@@ -1,0 +1,141 @@
+"""HeteGen's computation-distribution law (paper §3.2 and §4.2).
+
+``alpha`` is the fraction of a linear module's weight computed **on the
+accelerator** (with its weights streamed over the link); ``1 - alpha`` is
+computed on the host CPU, concurrently.  The paper derives (Eq. 4):
+
+    (1-a) W / V_cpu  =  a W / V_gpu  +  a W / V_com
+
+i.e. host compute time balances (device compute + weight transfer), giving
+(Eq. 5):
+
+    a = 1 / ( V_cpu/V_com + V_cpu/V_gpu + 1 )
+
+With device compute negligible relative to the link (Eq. 6):
+
+    a ≈ V_com / (V_com + V_cpu)
+
+and in measured-time form (Eq. 7), with T'_x the time for the *whole*
+operator on resource x:
+
+    a ≈ T'_cpu / (T'_cpu + T'_com)
+
+The hybrid strategy (paper Fig. 5c) splits communication into pin||transfer
+(Eq. 8-9):
+
+    T_cpu = T_gpu + max(T_pin, T_trans)
+    a ≈ T'_cpu / (T'_cpu + max(T'_pin, T'_trans))
+
+All functions are pure and unit-free (any consistent speed/time units).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+
+def alpha_analytic(v_cpu: float, v_gpu: float, v_com: float) -> float:
+    """Exact distribution ratio, paper Eq. 5."""
+    if v_cpu <= 0:
+        return 1.0  # no host compute available: everything on the device
+    if v_gpu <= 0 or v_com <= 0:
+        return 0.0  # no device or no link: everything stays on the host
+    return 1.0 / (v_cpu / v_com + v_cpu / v_gpu + 1.0)
+
+
+def alpha_approx(v_cpu: float, v_com: float) -> float:
+    """Approximate ratio ignoring device compute time, paper Eq. 6."""
+    if v_cpu <= 0:
+        return 1.0
+    if v_com <= 0:
+        return 0.0
+    return v_com / (v_com + v_cpu)
+
+
+def alpha_from_times(t_cpu: float, t_com: float) -> float:
+    """Measured-time form, paper Eq. 7.
+
+    ``t_cpu``/``t_com``: time to run / transfer the WHOLE operator on the
+    host / over the link.
+    """
+    if t_cpu <= 0:
+        return 0.0
+    if t_com <= 0:
+        return 1.0
+    return t_cpu / (t_cpu + t_com)
+
+
+def alpha_hybrid(t_cpu: float, t_pin: float, t_trans: float) -> float:
+    """Hybrid pin||transfer form, paper Eq. 9."""
+    return alpha_from_times(t_cpu, max(t_pin, t_trans))
+
+
+def balance_residual(alpha: float, v_cpu: float, v_gpu: float,
+                     v_com: float) -> float:
+    """Signed imbalance of Eq. 4 at a given alpha (0 at the optimum).
+
+    Positive means the host side is slower (alpha too small).
+    """
+    t_host = (1.0 - alpha) / v_cpu if v_cpu > 0 else float("inf")
+    t_dev = alpha / v_gpu + alpha / v_com
+    return t_host - t_dev
+
+
+def quantize_alpha(alpha: float, n_out: int, tile: int = 128) -> float:
+    """Round alpha to a whole number of MXU-aligned output-column tiles.
+
+    TPU adaptation (DESIGN.md §2): the device-side fraction of a split
+    linear is laid out in ``tile``-wide column blocks so the streamed matmul
+    hits the 128x128 systolic array without re-layout.  Returns the achieved
+    fraction ``k*tile/n_out`` closest to ``alpha`` (clamped to [0, 1]).
+    """
+    if n_out <= 0:
+        raise ValueError("n_out must be positive")
+    alpha = min(max(alpha, 0.0), 1.0)
+    n_tiles = max(1, -(-n_out // tile))  # ceil
+    k = round(alpha * n_out / tile)
+    k = min(max(k, 0), n_tiles)
+    cols = min(k * tile, n_out)
+    return cols / n_out
+
+
+def split_columns(alpha: float, n_out: int, tile: int = 128) -> int:
+    """Number of output columns assigned to the device (tile-aligned)."""
+    return int(round(quantize_alpha(alpha, n_out, tile) * n_out))
+
+
+@dataclasses.dataclass(frozen=True)
+class AlphaDecision:
+    """A resolved distribution for one module."""
+
+    alpha: float                 # achieved (tile-quantized) fraction
+    device_cols: int             # output columns on the device
+    host_cols: int               # output columns on the host
+    t_cpu: float                 # predicted host time at this alpha
+    t_com: float                 # predicted link time at this alpha
+
+    @property
+    def predicted_latency(self) -> float:
+        return max(self.t_cpu, self.t_com)
+
+
+def decide(n_out: int, bytes_total: float, *, v_cpu: float, v_gpu: float,
+           v_com: float, v_pin: float | None = None,
+           tile: int = 128) -> AlphaDecision:
+    """End-to-end alpha decision for a module with ``n_out`` output columns.
+
+    Uses the hybrid law when ``v_pin`` is given (communication limited by
+    max(pin, transfer) — paper Eq. 9), else the exact analytic law (Eq. 5).
+    """
+    if v_pin is not None:
+        # effective link speed under pin||transfer parallelism
+        v_eff = min(v_com, v_pin) if v_pin < v_com else v_com
+        a = alpha_analytic(v_cpu, v_gpu, v_eff)
+    else:
+        a = alpha_analytic(v_cpu, v_gpu, v_com)
+    a_q = quantize_alpha(a, n_out, tile)
+    dev_cols = split_columns(a, n_out, tile)
+    t_cpu = (1 - a_q) * bytes_total / v_cpu if v_cpu > 0 else float("inf")
+    t_com = a_q * bytes_total / v_com if v_com > 0 else float("inf")
+    return AlphaDecision(alpha=a_q, device_cols=dev_cols,
+                         host_cols=n_out - dev_cols, t_cpu=t_cpu, t_com=t_com)

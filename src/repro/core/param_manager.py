@@ -1,0 +1,208 @@
+"""Asynchronous parameter manager (paper §4.3, Fig. 6).
+
+Hybrid heterogeneous parallelism needs every streamed module's weights to be
+*pinned* (staged into a DMA-able buffer) before its transfer starts.  The
+manager guarantees:
+
+  * asynchrony — pinning of the *next* module in a size group overlaps the
+    current module's compute/transfer (the preceding module "prepares the
+    pinned weights for the subsequent parameters");
+  * bounded memory — at most one spare pinned parameter per group: each
+    group owns a ring of two fixed slots (consume one while staging the
+    other), sized to the group's largest member.  Groups exist because
+    within a group module sizes are uniform, so pin times are uniform and
+    no bubbles form (paper: linears-in-attention vs linears-in-MLP).
+
+On a TPU host "pinning" is the staging memcpy into the DMA ring
+(DESIGN.md §2); here it is a real ``np.copyto`` into a preallocated buffer,
+executed by a dedicated pin thread, so overlap and ordering are real even
+though the container is CPU-only.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Dict, List, Optional, Sequence
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class PinSlot:
+    buffer: np.ndarray                    # preallocated staging memory
+    name: Optional[str] = None            # module currently staged
+    ready: Optional[Future] = None        # resolves when staging completes
+    in_use: bool = False                  # acquired and not yet released
+
+
+class GroupRing:
+    """Two-slot staging ring for one size group."""
+
+    def __init__(self, group: str, slot_bytes: int):
+        self.group = group
+        self.slot_bytes = slot_bytes
+        self.slots = [PinSlot(np.empty(slot_bytes, dtype=np.uint8))
+                      for _ in range(2)]
+        self.lock = threading.Condition()
+
+    def slot_for(self, name: str) -> Optional[PinSlot]:
+        for s in self.slots:
+            if s.name == name:
+                return s
+        return None
+
+    def free_slot(self) -> Optional[PinSlot]:
+        for s in self.slots:
+            if not s.in_use and s.ready is None:
+                return s
+        return None
+
+
+class AsyncParamManager:
+    """Stages module weights into pinned rings ahead of use.
+
+    Typical engine driving pattern (paper Fig. 6)::
+
+        mgr.prefetch(first_module_of_each_group)
+        for module in plan:
+            mgr.prefetch(next_same_group_module(module))   # stage ahead
+            buf = mgr.acquire(module)                      # wait if needed
+            ... transfer buf, compute ...
+            mgr.release(module)
+    """
+
+    def __init__(self, weights: Dict[str, np.ndarray],
+                 groups: Dict[str, str]):
+        """``weights``: host arrays per module; ``groups``: module -> group."""
+        self.weights = weights
+        self.groups = groups
+        by_group: Dict[str, List[str]] = {}
+        for name, g in groups.items():
+            by_group.setdefault(g, []).append(name)
+        self.rings: Dict[str, GroupRing] = {}
+        for g, names in by_group.items():
+            slot_bytes = max(weights[n].nbytes for n in names)
+            self.rings[g] = GroupRing(g, slot_bytes)
+        self._pinner = ThreadPoolExecutor(max_workers=1,
+                                          thread_name_prefix="pin")
+        self.events: List[tuple] = []     # (op, module, t) for tests/metrics
+        self._events_lock = threading.Lock()
+        self.pin_seconds = 0.0
+
+    # ------------------------------------------------------------------
+    def _log(self, op: str, name: str) -> None:
+        with self._events_lock:
+            self.events.append((op, name, time.perf_counter()))
+
+    def _do_pin(self, slot: PinSlot, name: str) -> np.ndarray:
+        t0 = time.perf_counter()
+        src = self.weights[name]
+        flat = src.reshape(-1).view(np.uint8)
+        dst = slot.buffer[: flat.nbytes]
+        np.copyto(dst, flat)
+        self.pin_seconds += time.perf_counter() - t0
+        self._log("pinned", name)
+        return dst.view(src.dtype).reshape(src.shape)
+
+    # ------------------------------------------------------------------
+    def prefetch(self, name: Optional[str]) -> bool:
+        """Begin staging ``name`` if a slot is free.  Non-blocking.
+
+        Returns True if staging was started (or already staged/running).
+        """
+        if name is None:
+            return False
+        ring = self.rings[self.groups[name]]
+        with ring.lock:
+            if ring.slot_for(name) is not None:
+                return True
+            slot = ring.free_slot()
+            if slot is None:
+                return False          # ring full: caller retries after release
+            slot.name = name
+            slot.ready = self._pinner.submit(self._do_pin, slot, name)
+            self._log("pin_start", name)
+            return True
+
+    def acquire(self, name: str) -> np.ndarray:
+        """Return the staged weights for ``name``.
+
+        Pins synchronously if the prefetch never happened (the non-async
+        ablation path).  If the ring is clogged by prefetched-but-unconsumed
+        entries (out-of-order access), the least-relevant staged slot is
+        evicted — ``acquire`` always makes progress unless both slots are
+        simultaneously *in use*, which the engine's prompt ``release`` rules
+        out.
+        """
+        ring = self.rings[self.groups[name]]
+        with ring.lock:
+            slot = ring.slot_for(name)
+            if slot is None:
+                slot = ring.free_slot()
+                if slot is None:
+                    # evict a staged, not-in-use slot
+                    deadline = time.monotonic() + 30.0
+                    while slot is None:
+                        for s in ring.slots:
+                            if not s.in_use and s.name != name:
+                                slot = s
+                                break
+                        if slot is None:
+                            if not ring.lock.wait(timeout=0.5) and \
+                                    time.monotonic() > deadline:
+                                raise RuntimeError(
+                                    f"pin ring wedged acquiring {name!r}: "
+                                    f"both slots in use")
+                    if slot.ready is not None:
+                        slot.ready.result()   # drain in-flight pin first
+                        self._log("evicted", slot.name or "?")
+                slot.name = name
+                slot.ready = self._pinner.submit(self._do_pin, slot, name)
+                self._log("pin_start_sync", name)
+            slot.in_use = True
+        arr = slot.ready.result()
+        self._log("acquired", name)
+        return arr
+
+    def release(self, name: str) -> None:
+        """Mark ``name``'s slot reusable (its transfer has consumed it)."""
+        ring = self.rings[self.groups[name]]
+        with ring.lock:
+            slot = ring.slot_for(name)
+            if slot is not None:
+                slot.name = None
+                slot.ready = None
+                slot.in_use = False
+                ring.lock.notify_all()
+        self._log("released", name)
+
+    # ------------------------------------------------------------------
+    def pinned_overhead_bytes(self) -> int:
+        """Total staging memory — paper bound: <= 2 slots per group."""
+        return sum(2 * r.slot_bytes for r in self.rings.values())
+
+    def shutdown(self) -> None:
+        self._pinner.shutdown(wait=True)
+
+
+def plan_prefetch_order(plan: Sequence[str], groups: Dict[str, str]
+                        ) -> Dict[str, Optional[str]]:
+    """next-same-group module for each module, wrapping to the next step.
+
+    Implements Fig. 6: "the preceding heterogeneous module prepares the
+    pinned weights for the subsequent parameters ... if it is the last
+    module within a layer, it proceeds to the first parameter in the
+    following layer" (and the last module of the step wraps to the first of
+    the next step).
+    """
+    nxt: Dict[str, Optional[str]] = {}
+    by_group: Dict[str, List[str]] = {}
+    for name in plan:
+        by_group.setdefault(groups[name], []).append(name)
+    for g, names in by_group.items():
+        for i, name in enumerate(names):
+            nxt[name] = names[(i + 1) % len(names)] if len(names) > 1 else None
+    return nxt

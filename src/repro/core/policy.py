@@ -1,0 +1,116 @@
+"""Scheduler stage — turn a model's linear inventory into a placement plan.
+
+Implements the paper's Fig. 4 scheduling pipeline:
+
+    alpha benchmark  ->  per-module alpha        (§4.4, Eq. 9-12)
+    value function   ->  residency promotion     (§4.5, Eq. 13)
+    plan             ->  ModulePlan list for the runtime engine
+
+The same planner feeds both the real threaded engine
+(:mod:`repro.core.engine`) and the simulator (:mod:`repro.core.sim`).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Sequence
+
+from repro.core import alpha as alpha_lib
+from repro.core.engine import ModulePlan
+from repro.core.hw import HardwareSpec
+from repro.core.module_scheduler import ModuleInfo, SchedulePlan, schedule
+
+
+@dataclasses.dataclass(frozen=True)
+class LinearSpec:
+    """Static description of one linear module in a model."""
+
+    name: str
+    n_in: int
+    n_out: int
+    group: str                  # "attn" | "mlp" | ... (pin-ring size group)
+    dtype_bytes: int = 4
+    calls: int = 1              # invocations per decode step (shared blocks)
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_in * self.n_out * self.dtype_bytes
+
+
+@dataclasses.dataclass
+class PolicyResult:
+    plan: List[ModulePlan]
+    alpha: float                       # resolved streaming alpha
+    schedule: Optional[SchedulePlan]   # residency plan (None if no budget)
+    predicted_step_time: float         # sum of per-module critical paths
+    resident_bytes: int = 0            # accelerator bytes held by residents
+
+
+def build_policy(
+    linears: Sequence[LinearSpec],
+    hw: HardwareSpec,
+    *,
+    budget_bytes: Optional[float] = None,
+    batch: int = 1,
+    use_alpha_benchmark: bool = True,
+    use_module_scheduler: bool = True,
+    tile: int = 128,
+) -> PolicyResult:
+    """Resolve alpha + residency for a model's linears (paper Fig. 4).
+
+    ``budget_bytes`` — accelerator memory available for weights (None means
+    'only the streaming ring fits': fully offloaded operation).
+    """
+    intensity = max(batch, 1)          # decode: ~batch FLOPs per weight byte
+    v_cpu = hw.v_cpu(intensity)
+    v_gpu = hw.v_gpu(intensity)
+    v_com = hw.v_com()
+    v_pin = hw.v_pin()
+
+    a0 = alpha_lib.alpha_analytic(v_cpu, v_gpu, min(v_com, max(v_com, v_pin)))
+    a = a0
+    if use_alpha_benchmark:
+        from repro.core.alpha_benchmark import refine_alpha
+
+        probe = max(linears, key=lambda s: s.nbytes)
+
+        def t_cpu_fn(x: float) -> float:
+            return (1.0 - x) * probe.nbytes / v_cpu
+
+        def t_com_fn(x: float) -> float:
+            dev = x * probe.nbytes
+            return max(dev / v_pin, dev / v_com)
+
+        a = refine_alpha(t_cpu_fn, t_com_fn, a0).alpha
+
+    # Residency promotion (Eq. 13).
+    plan_map: Dict[str, str] = {s.name: "hetegen" for s in linears}
+    sched = None
+    if use_module_scheduler and budget_bytes is not None:
+        infos = [ModuleInfo(name=s.name, mem_bytes=s.nbytes,
+                            t_cpu=(1.0 - a) * s.nbytes / v_cpu,
+                            calls=s.calls) for s in linears]
+        ring = 2 * max((alpha_lib.quantize_alpha(a, s.n_out, tile) * s.nbytes
+                        for s in linears), default=0.0)
+        sched = schedule(infos, max(0.0, (budget_bytes or 0.0) - ring))
+        for name in sched.resident:
+            plan_map[name] = "resident"
+
+    plan: List[ModulePlan] = []
+    t_pred = 0.0
+    resident_bytes = 0
+    for s in linears:
+        mode = plan_map[s.name]
+        if mode == "resident":
+            plan.append(ModulePlan(s.name, s.group, "resident"))
+            t_pred += s.calls * s.nbytes / hw.accel_mem_bw
+            resident_bytes += s.nbytes
+        else:
+            aq = alpha_lib.quantize_alpha(a, s.n_out, tile)
+            plan.append(ModulePlan(s.name, s.group, "hetegen", aq))
+            t_cpu = (1.0 - aq) * s.nbytes / v_cpu
+            t_com = max(aq * s.nbytes / v_com, aq * s.nbytes / v_pin)
+            t_pred += s.calls * max(t_cpu, t_com)
+    return PolicyResult(plan=plan, alpha=a, schedule=sched,
+                        predicted_step_time=t_pred,
+                        resident_bytes=resident_bytes)

@@ -1,0 +1,125 @@
+"""Gradient compression for DCN-crossing collectives.
+
+At 1000+ node scale the pod-crossing gradient all-reduce rides the
+data-center network (25 GB/s/host vs 50 GB/s/link ICI), so the cross-pod
+term dominates.  This module provides int8 uniform quantization with
+per-chunk scales and **error feedback** (the quantization residual is
+carried into the next step, which keeps SGD convergence — Karimireddy et
+al. 2019):
+
+    q, scale = quantize(g + e);   e' = (g + e) - dequantize(q, scale)
+
+``compressed_psum_mean`` runs inside ``shard_map``: each member all-gathers
+the int8 payload + fp32 scales (wire bytes ~= 1/4 of fp32) and reduces
+locally — the collective itself moves compressed data, unlike
+quantize-then-psum-fp32 schemes.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def quantize_int8(x: jax.Array, chunk: int = 2048
+                  ) -> Tuple[jax.Array, jax.Array, Tuple[int, ...]]:
+    """Uniform symmetric int8 quantization with per-chunk scales.
+
+    Returns (q int8 (n_chunks, chunk), scales fp32 (n_chunks,), shape).
+    """
+    shape = x.shape
+    flat = x.astype(jnp.float32).reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % chunk
+    flat = jnp.pad(flat, (0, pad))
+    blocks = flat.reshape(-1, chunk)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(blocks / scale[:, None]), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale, shape
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array,
+                    shape: Tuple[int, ...]) -> jax.Array:
+    flat = (q.astype(jnp.float32) * scale[:, None]).reshape(-1)
+    n = int(np.prod(shape)) if shape else 1
+    return flat[:n].reshape(shape)
+
+
+def quantization_error(x: jax.Array, chunk: int = 2048) -> jax.Array:
+    q, s, shp = quantize_int8(x, chunk)
+    return x.astype(jnp.float32) - dequantize_int8(q, s, shp)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback state over a gradient pytree
+# ---------------------------------------------------------------------------
+
+def ef_init(grads):
+    return jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+
+def ef_compress(grads, ef_state, chunk: int = 2048):
+    """(grads, error) -> (quantized payloads, new error)."""
+
+    def one(g, e):
+        corrected = g.astype(jnp.float32) + e
+        q, s, shp = quantize_int8(corrected, chunk)
+        new_e = corrected - dequantize_int8(q, s, shp)
+        return (q, s, shp), new_e
+
+    flat_g, tdef = jax.tree.flatten(grads)
+    flat_e = tdef.flatten_up_to(ef_state)
+    outs = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    payload = jax.tree.unflatten(tdef, [o[0] for o in outs])
+    new_ef = jax.tree.unflatten(tdef, [o[1] for o in outs])
+    return payload, new_ef
+
+
+# ---------------------------------------------------------------------------
+# Compressed mean-all-reduce (shard_map collective)
+# ---------------------------------------------------------------------------
+
+def compressed_psum_mean(x: jax.Array, axis_name: str,
+                         chunk: int = 2048) -> jax.Array:
+    """Mean over ``axis_name`` members moving int8 on the wire.
+
+    all_gather(int8 q) + all_gather(fp32 scales), dequantize + mean locally.
+    Wire bytes: n + n/chunk*4  vs  4n for fp32 psum (~3.9x compression).
+    """
+    q, scale, shape = quantize_int8(x, chunk)
+    qs = jax.lax.all_gather(q, axis_name)            # (N, n_chunks, chunk)
+    ss = jax.lax.all_gather(scale, axis_name)
+    n_members = qs.shape[0]
+    deq = jax.vmap(lambda qq, sc: dequantize_int8(qq, sc, shape))(qs, ss)
+    return jnp.mean(deq, axis=0)
+
+
+def make_compressed_allreduce(mesh, axis: str = "pod", chunk: int = 2048):
+    """Gradient-tree mean-all-reduce over ``axis`` with int8 wire format.
+
+    Use for the DCN (pod) axis; ICI-local reductions stay fp32/bf16 (they
+    are not the bottleneck).  Returns a function grads -> grads.
+    """
+    from jax import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    def reduce_tree(grads):
+        def one(g):
+            fn = shard_map(
+                functools.partial(compressed_psum_mean, axis_name=axis,
+                                  chunk=chunk),
+                mesh=mesh,
+                in_specs=P(axis),
+                out_specs=P(),
+                check_vma=False,   # value IS replicated after the local mean
+            )
+            stacked = jnp.broadcast_to(g[None], (mesh.shape[axis],) + g.shape)
+            return fn(stacked)
+        return jax.tree.map(one, grads)
+
+    return reduce_tree

@@ -1,0 +1,317 @@
+"""Derive PartitionSpec trees for params / optimizer state / caches / batches.
+
+Specs are assigned by leaf *path* (the parameter's role) and guarded by the
+leaf *shape* (a mesh axis is never assigned to a dim it does not divide).
+The table implements Megatron-style TP + EP with batch data-parallel over
+("pod", "data") — see DESIGN.md §4.
+
+Used by launch/dryrun.py (and any real launcher) to produce in_shardings /
+out_shardings for ``jax.jit``.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.shardings import ShardingRules
+from repro.models.config import ModelConfig
+
+
+# (path regex, logical axes per dim — right-aligned against leaf shape)
+# first match wins; "×" rows document intent
+_PARAM_RULES: Tuple[Tuple[str, Tuple[Optional[str], ...]], ...] = (
+    # embeddings: vocab-sharded (so tied lm_head logits shard over vocab;
+    # the input-side gather costs one small (tokens x d) all-reduce)
+    (r"\['embed'\]$",            ("vocab", None)),
+    (r"\['lm_head'\]$",          (None, "vocab")),
+    (r"\['pos'\]$",              (None, None)),
+    (r"\['enc_pos'\]$",          (None, None)),
+    # attention projections (leading stack dims absorbed as None)
+    (r"\['wq'\]$",               (None, "qkv")),
+    (r"\['wk'\]$",               (None, "qkv")),
+    (r"\['wv'\]$",               (None, "qkv")),
+    (r"\['wo'\]$",               ("qkv", None)),
+    (r"\['bq'\]$",               ("qkv",)),
+    (r"\['bk'\]$",               ("qkv",)),
+    (r"\['bv'\]$",               ("qkv",)),
+    # MLA factors: head-expanded matrices shard on the head dim
+    (r"\['wq_b'\]$",             (None, "qkv")),
+    (r"\['wk_b'\]$",             (None, "qkv")),
+    (r"\['wv_b'\]$",             (None, "qkv")),
+    (r"\['wq_a'\]$",             (None, None)),
+    (r"\['wkv_a'\]$",            (None, None)),
+    # MLP
+    (r"\['w_gate'\]$",           (None, "ff")),
+    (r"\['w_up'\]$",             (None, "ff")),
+    (r"\['w_in'\]$",             (None, "ff")),
+    (r"\['b_in'\]$",             ("ff",)),
+    (r"\['w_down'\]$",           ("ff", None)),
+    # MoE experts (EP on the expert dim)
+    (r"\['we_\w+'\]$",           ("experts", None, None)),
+    (r"\['ws_gate'\]$",          (None, "ff")),
+    (r"\['ws_up'\]$",            (None, "ff")),
+    (r"\['ws_down'\]$",          ("ff", None)),
+    (r"\['router'\]$",           (None, None)),
+    # mamba2 (heads on model axis; B/C small -> replicated)
+    (r"\['w_z'\]$",              (None, "ff")),
+    (r"\['w_x'\]$",              (None, "ff")),
+    (r"\['w_dt'\]$",             (None, "ssm_heads")),
+    (r"\['w_bc'\]$",             (None, None)),
+    (r"\['conv_x_w'\]$",         (None, "ff")),
+    (r"\['conv_x_b'\]$",         ("ff",)),
+    (r"\['conv_bc_\w'\]$",       (None, None)),
+    (r"\['A_log'\]$",            ("ssm_heads",)),
+    (r"\['D'\]$",                ("ssm_heads",)),
+    (r"\['dt_bias'\]$",          ("ssm_heads",)),
+    (r"\['gnorm'\]$",            ("ff",)),
+    (r"\['out_proj'\]$",         ("ff", None)),
+    # shared-block lora
+    (r"\['shared_lora'\]\['a'\]$", (None, None, None)),
+    (r"\['shared_lora'\]\['b'\]$", (None, None, "qkv")),
+    (r"\['proj'\]$",             (None, None)),
+)
+
+_EXTRA_TABLE = {}
+
+
+_FSDP_IN = re.compile(
+    r"\['(wq|wk|wv|w_gate|w_up|w_in|w_z|w_x)'\]$")   # shard input dim (d)
+_FSDP_OUT = re.compile(r"\['(wo|w_down|out_proj)'\]$")  # shard output dim
+# experts: gate/up shard the OUTPUT dim (f) so the d-contraction stays
+# local; down shards its INPUT dim (f) to match — one activation
+# all-reduce per MoE layer instead of three (§Perf hillclimb #1)
+_FSDP_EXPERT_OUT = re.compile(r"\['we_(gate|up|in)'\]$")
+_FSDP_EXPERT_IN = re.compile(r"\['we_down'\]$")
+# fsdp only pays when the model-sharded leaf is still large; below this
+# the weight all-gathers it induces cost more than the memory it saves
+FSDP_MIN_BYTES_PER_CHIP = 512 * 2**20
+
+
+def _spec_for_param(path: str, shape: Tuple[int, ...],
+                    rules: ShardingRules, fsdp: bool = False,
+                    kv_divisible: bool = True) -> P:
+    # GQA with kv_heads < TP: sharding wk/wv at sub-head granularity
+    # forces GSPMD to all-gather attention scores (1.1 TB/step measured on
+    # mistral train — §Perf hillclimb #2).  Megatron's answer: replicate
+    # K/V projections across the model axis; q heads carry the TP.
+    if not kv_divisible and re.search(r"\['(wk|wv|bk|bv)'\]$", path):
+        parts = [None] * len(shape)
+        # the replicated-over-model K/V weights of a >=100B arch would
+        # cost GBs per chip (nemotron: 8.7 GB); store their input dim
+        # data-sharded instead (one small activation all-reduce per use)
+        if fsdp and len(shape) >= 2 and "data" in rules.mesh_axes:
+            dp = rules.mesh_shape.get("data", 1)
+            if shape[-2] % dp == 0:
+                parts[-2] = "data"
+        return P(*parts)
+    for pat, logical in _PARAM_RULES:
+        if re.search(pat, path):
+            # right-align logical axes against the shape (stack dims -> None)
+            pad = (None,) * (len(shape) - len(logical))
+            logical = pad + tuple(logical)[-len(shape):] \
+                if len(logical) <= len(shape) else logical[-len(shape):]
+            parts = []
+            for dim, ax in zip(shape, logical):
+                if ax in _EXTRA_TABLE:
+                    axes = _EXTRA_TABLE[ax]
+                    if axes is None:
+                        parts.append(None)
+                        continue
+                    prod = 1
+                    keep = []
+                    for a in axes:
+                        n = rules.mesh_shape.get(a, 1)
+                        if a in rules.mesh_axes and dim % (prod * n) == 0:
+                            keep.append(a)
+                            prod *= n
+                    parts.append(tuple(keep) or None if len(keep) != 1
+                                 else keep[0])
+                else:
+                    got = rules._axes_for(ax, dim)
+                    parts.append(None if got is None
+                                 else (got[0] if len(got) == 1 else got))
+            if fsdp and "data" in rules.mesh_axes:
+                dp = rules.mesh_shape.get("data", 1)
+                # bytes/chip after the base (model/expert) sharding
+                shard_f = 1
+                for part in parts:
+                    for a in (part if isinstance(part, tuple)
+                              else (part,) if part else ()):
+                        shard_f *= rules.mesh_shape.get(a, 1)
+                n_elems = 1
+                for dsz in shape:
+                    n_elems *= dsz
+                per_chip = n_elems * 2 / max(shard_f, 1)     # bf16
+                tgt = None
+                if per_chip >= FSDP_MIN_BYTES_PER_CHIP:
+                    if _FSDP_IN.search(path) and len(shape) >= 2:
+                        tgt = len(shape) - 2       # input dim
+                    elif _FSDP_OUT.search(path) and len(shape) >= 2:
+                        tgt = len(shape) - 1       # output dim
+                    elif _FSDP_EXPERT_OUT.search(path) and len(shape) >= 3:
+                        tgt = len(shape) - 1       # per-expert output dim
+                    elif _FSDP_EXPERT_IN.search(path) and len(shape) >= 3:
+                        tgt = len(shape) - 2       # down: input dim (f)
+                if tgt is not None and parts[tgt] is None \
+                        and shape[tgt] % dp == 0:
+                    parts[tgt] = "data"
+            return P(*parts)
+    return P(*([None] * len(shape)))    # norms, scalars, biases: replicated
+
+
+def param_specs(cfg: ModelConfig, rules: ShardingRules,
+                params_shape: Optional[Any] = None, *,
+                serve: bool = False):
+    """PartitionSpec tree matching ``init_params(cfg, key)``.
+
+    ``serve``: serving keeps wk/wv TP-sharded even at sub-head
+    granularity (the cache is seq-sharded, attention reads are local);
+    training replicates them when kv_heads < TP to keep attention math
+    head-local (§Perf hillclimb #2).
+    """
+    if params_shape is None:
+        from repro.models.model import init_params
+        params_shape = jax.eval_shape(
+            lambda k: init_params(cfg, k), jax.random.PRNGKey(0))
+    ms = rules.mesh_shape.get("model", 1)
+    kv_div = True if serve else \
+        ((cfg.n_kv_heads % ms == 0) if cfg.n_kv_heads else True)
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shape)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        out.append(_spec_for_param(path, leaf.shape, rules, fsdp=cfg.fsdp,
+                                   kv_divisible=kv_div))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_specs(cfg: ModelConfig, rules: ShardingRules, opt_shape,
+                    pspecs) -> Any:
+    """Optimizer-state specs mirroring the parameter layout.
+
+    adamw m/v inherit the param spec; adafactor vr/vc drop the reduced dim.
+    Scalars replicate.
+    """
+    pflat = {jax.tree_util.keystr(kp): spec for kp, spec in
+             jax.tree_util.tree_flatten_with_path(pspecs)[0]}
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_shape)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        spec = None
+        m = re.match(r"\['(m|v)'\](.*)$", path)
+        if m:
+            spec = pflat.get(m.group(2))
+        m2 = re.match(r"\['s'\](.*)\['(vr|vc|v)'\]$", path)
+        if m2:
+            base = pflat.get(m2.group(1))
+            if base is not None:
+                parts = list(base)
+                if m2.group(2) == "vr":      # mean over last dim
+                    parts = parts[:-1]
+                elif m2.group(2) == "vc":    # mean over second-to-last dim
+                    parts = parts[:-2] + parts[-1:]
+                spec = P(*parts)
+        if spec is None or len(spec) != len(leaf.shape):
+            spec = P(*([None] * len(leaf.shape)))
+        out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def cache_specs(cfg: ModelConfig, rules: ShardingRules, cache_shape) -> Any:
+    """Specs for the KV/state cache.
+
+    Batch shards over ("pod","data") where divisible; heads shard over
+    "model" when the head count divides it, otherwise the sequence dim
+    takes the model axis (long-context small-head caches).
+    """
+    ms = rules.mesh_shape.get("model", 1)
+    batch_axes = [a for a in ("pod", "data") if a in rules.mesh_axes]
+
+    def bspec(dim):
+        keep, prod = [], 1
+        for a in batch_axes:
+            n = rules.mesh_shape[a]
+            if dim % (prod * n) == 0:
+                keep.append(a)
+                prod *= n
+        return tuple(keep) or None if len(keep) != 1 else keep[0]
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shape)
+    out = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        shape = leaf.shape
+        key = path.strip("[]'")
+        if re.search(r"\['(ks|vs)\d+'\]$", path):
+            st, b, hkv, t = shape
+            if hkv % ms == 0 and ms > 1:
+                spec = P(None, bspec(b), "model", None)
+            elif t % ms == 0 and ms > 1:
+                spec = P(None, bspec(b), None, "model")
+            else:
+                spec = P(None, bspec(b), None, None)
+        elif re.search(r"\['(k|v|shared_k|shared_v)\d*'\]$", path):
+            # (stack, B, Hkv, T, hd) — attention-native layout
+            st, b, hkv, t, hd = shape
+            if hkv % ms == 0 and ms > 1:
+                spec = P(None, bspec(b), "model", None, None)
+            elif t % ms == 0 and ms > 1:
+                spec = P(None, bspec(b), None, "model", None)
+            else:
+                spec = P(None, bspec(b), None, None, None)
+        elif re.search(r"\['(lat|kr)\d+'\]$", path):
+            st, b, t, r = shape
+            spec = P(None, bspec(b), "model" if t % ms == 0 else None, None)
+        elif re.search(r"\['cross_[kv]'\]$", path):
+            st, b, t, hkv, hd = shape
+            spec = P(None, bspec(b), None,
+                     "model" if hkv % ms == 0 else None, None)
+        elif re.search(r"\['ssm(_tail)?'\]$", path):
+            # (..., B, H, P, N)
+            h = shape[-3]
+            lead = [None] * (len(shape) - 4)
+            spec = P(*lead, bspec(shape[-4]),
+                     "model" if h % ms == 0 else None, None, None)
+        elif re.search(r"\['conv_(x|bc)(_tail)?'\]$", path):
+            ch = shape[-1]
+            lead = [None] * (len(shape) - 3)
+            spec = P(*lead, bspec(shape[-3]), None,
+                     "model" if ch % ms == 0 else None)
+        else:                                 # "len" scalar etc.
+            spec = P(*([None] * len(shape)))
+        out.append(spec)
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def batch_specs(cfg: ModelConfig, rules: ShardingRules, batch_shape) -> Any:
+    batch_axes = [a for a in ("pod", "data") if a in rules.mesh_axes]
+
+    def bspec(dim):
+        keep, prod = [], 1
+        for a in batch_axes:
+            n = rules.mesh_shape[a]
+            if dim % (prod * n) == 0:
+                keep.append(a)
+                prod *= n
+        return tuple(keep) or None if len(keep) != 1 else keep[0]
+
+    def one(leaf):
+        shape = leaf.shape
+        if not shape:
+            return P()
+        parts = [bspec(shape[0])] + [None] * (len(shape) - 1)
+        return P(*parts)
+
+    return jax.tree.map(one, batch_shape)
+
+
+def named(mesh, spec_tree):
+    return jax.tree.map(lambda s: NamedSharding(mesh, s), spec_tree,
+                        is_leaf=lambda x: isinstance(x, P))

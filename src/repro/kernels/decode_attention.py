@@ -1,0 +1,157 @@
+"""Flash-decode: single-token attention against a long KV cache.
+
+Decode is the shape HeteGen serves (batch small, cache long): one query row
+per (batch, head) attends over ``kv_len`` valid cache positions.  The grid
+walks kv blocks innermost with online-softmax accumulators in VMEM — the
+cache is read exactly once at HBM rate, which is the roofline for decode.
+
+``kv_len`` is a per-batch int32 vector in SMEM (scalar-prefetch operand):
+positions beyond it are masked, so one compiled kernel serves any prefix
+length — cheaper than recompiling per step and required for continuous
+batching where every slot has its own length.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _decode_kernel(lens_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_ref, l_ref, acc_ref, *,
+                   scale, n_kv, block_kv, hq, softcap):
+    _decode_body(lens_ref, q_ref, k_ref, v_ref, None, None, o_ref,
+                 m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                 block_kv=block_kv, hq=hq, softcap=softcap)
+
+
+def _decode_kernel_q8(lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                      m_ref, l_ref, acc_ref, *,
+                      scale, n_kv, block_kv, hq, softcap):
+    """int8 cache variant: K/V blocks are dequantized in VMEM (per-token
+    scales), so HBM only ever moves int8 — the fusion XLA:CPU cannot do
+    (EXPERIMENTS.md §Perf, mistral decode int8-KV iteration)."""
+    _decode_body(lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                 block_kv=block_kv, hq=hq, softcap=softcap)
+
+
+def _decode_body(lens_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                 m_ref, l_ref, acc_ref, *,
+                 scale, n_kv, block_kv, hq, softcap):
+    bh = pl.program_id(0)
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = lens_ref[bh // hq]
+    k_pos = kj * block_kv + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_kv), 1)
+
+    @pl.when(kj * block_kv < kv_len)          # skip fully-invalid blocks
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (1, d)
+        k = k_ref[0].astype(jnp.float32)                  # (bk, d)
+        if ks_ref is not None:
+            k = k * ks_ref[0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(k_pos < kv_len, s, NEG_INF)         # (1, bk)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0]
+        if vs_ref is not None:
+            v = v.astype(jnp.float32) * vs_ref[0].astype(jnp.float32)[:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     kv_len: jax.Array, *,
+                     k_scale: Optional[jax.Array] = None,
+                     v_scale: Optional[jax.Array] = None,
+                     softcap: Optional[float] = None,
+                     block_kv: int = 256,
+                     interpret: bool = False) -> jax.Array:
+    """q (B, Hq, D); k/v (B, Hkv, S, D); kv_len (B,) int32 -> (B, Hq, D).
+
+    With ``k_scale``/``v_scale`` (B, Hkv, S): k/v are int8 and dequantized
+    per kv block inside VMEM.
+    """
+    b, hq, d = q.shape
+    _, hkv, s, _ = k.shape
+    group = hq // hkv
+    bk = min(block_kv, s)
+    assert s % bk == 0
+    scale = 1.0 / math.sqrt(d)
+    q8 = k_scale is not None
+
+    qf = q.reshape(b * hq, 1, d)
+    kf = k.reshape(b * hkv, s, d)
+    vf = v.reshape(b * hkv, s, d)
+
+    # with num_scalar_prefetch=1 every index_map receives the scalar ref
+    # as a trailing argument
+    def kv_index(h, j, lens):
+        return ((h // hq) * hkv + (h % hq) // group, j, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, d), lambda h, j, lens: (h, 0, 0)),
+        pl.BlockSpec((1, bk, d), kv_index),
+        pl.BlockSpec((1, bk, d), kv_index),
+    ]
+    operands = [kv_len.astype(jnp.int32), qf, kf, vf]
+    if q8:
+        def sc_index(h, j, lens):
+            return ((h // hq) * hkv + (h % hq) // group, j)
+        in_specs += [pl.BlockSpec((1, bk), sc_index),
+                     pl.BlockSpec((1, bk), sc_index)]
+        operands += [k_scale.reshape(b * hkv, s),
+                     v_scale.reshape(b * hkv, s)]
+        kern = _decode_kernel_q8
+    else:
+        kern = _decode_kernel
+    kernel = functools.partial(kern, scale=scale, n_kv=s // bk,
+                               block_kv=bk, hq=hq, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(b * hq, s // bk),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, j, lens: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(b, hq, d)

@@ -1,0 +1,139 @@
+"""Blocked matmul kernel with fused bias/activation — the HeteGen hot spot.
+
+The device-side fraction of a heterogeneous linear is a streamed-weight
+matmul: weights arrive in 128-aligned column tiles (core/alpha.py quantizes
+alpha to tile boundaries for exactly this reason) and should be consumed at
+MXU rate with no re-layout.  The kernel tiles (M, N, K) into VMEM blocks,
+accumulates in fp32 scratch, and applies bias + activation on the final K
+step — fusing what would otherwise be three HBM round-trips (matmul, bias,
+activation).
+
+``gated_matmul`` fuses the gated-MLP pattern act(x@Wg) * (x@Wu) in one pass
+over x (one read of the activations instead of two).
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _apply_act(y, activation: Optional[str]):
+    if activation is None or activation == "none":
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "relu2":
+        r = jnp.maximum(y, 0.0)
+        return r * r
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "silu":
+        return y * jax.nn.sigmoid(y)
+    raise ValueError(f"unknown activation {activation!r}")
+
+
+def _matmul_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *,
+                   activation, n_k, has_bias):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(x_ref[...], w_ref[...],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        y = acc_ref[...]
+        if has_bias:
+            y = y + b_ref[...].astype(jnp.float32)
+        y = _apply_act(y, activation)
+        o_ref[...] = y.astype(o_ref.dtype)
+
+
+def matmul(x: jax.Array, w: jax.Array, bias: Optional[jax.Array] = None, *,
+           activation: Optional[str] = None,
+           block_m: int = 128, block_n: int = 128, block_k: int = 128,
+           interpret: bool = False) -> jax.Array:
+    """y = act(x @ w + bias); x (M, K), w (K, N) -> (M, N)."""
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, (x.shape, w.shape)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0, \
+        f"shape {(m, k, n)} not divisible by blocks {(bm, bk, bn)}"
+    n_k = k // bk
+    has_bias = bias is not None
+    if not has_bias:
+        bias = jnp.zeros((n,), x.dtype)
+
+    kernel = functools.partial(_matmul_kernel, activation=activation,
+                               n_k=n_k, has_bias=has_bias)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w, bias)
+
+
+def _gated_kernel(x_ref, wg_ref, wu_ref, o_ref, accg_ref, accu_ref, *,
+                  activation, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        accg_ref[...] = jnp.zeros_like(accg_ref)
+        accu_ref[...] = jnp.zeros_like(accu_ref)
+
+    accg_ref[...] += jnp.dot(x_ref[...], wg_ref[...],
+                             preferred_element_type=jnp.float32)
+    accu_ref[...] += jnp.dot(x_ref[...], wu_ref[...],
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        g = _apply_act(accg_ref[...], activation)
+        o_ref[...] = (g * accu_ref[...]).astype(o_ref.dtype)
+
+
+def gated_matmul(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, *,
+                 activation: str = "silu",
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                 interpret: bool = False) -> jax.Array:
+    """act(x @ w_gate) * (x @ w_up) — the gated-MLP first stage, fused."""
+    m, k = x.shape
+    _, n = w_gate.shape
+    assert w_gate.shape == w_up.shape == (k, n)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n_k = k // bk
+    kernel = functools.partial(_gated_kernel, activation=activation, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w_gate, w_up)

@@ -1,0 +1,75 @@
+"""Int8-weight matmul with per-column scales — quantized weight streaming.
+
+Beyond-paper optimization (EXPERIMENTS.md §Perf): HeteGen is link-bound, so
+streaming weights as int8 + fp32 per-column scales halves the PCIe bytes
+(2-byte bf16 -> 1-byte int8 + 4/N scale), shifting the alpha equilibrium
+toward the device: alpha* ~= T'cpu / (T'cpu + T'com/2).  The device then
+needs an int8 x activation kernel that dequantizes *inside* the matmul —
+this kernel — so no fp copy of the weight ever exists in HBM.
+
+Accumulates x_block @ q_block in fp32 and applies the per-column scale on
+the final K step.  (Per-column — not per-tile — scales keep the epilogue a
+single multiply.)
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Per-output-column symmetric int8 quantization."""
+    scale = jnp.max(jnp.abs(w.astype(jnp.float32)), axis=0) / 127.0 + 1e-12
+    q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127
+                 ).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def _q8_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k):
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # dequantize the weight tile in VMEM; MXU consumes fp32/bf16
+    acc_ref[...] += jnp.dot(x_ref[...].astype(jnp.float32),
+                            q_ref[...].astype(jnp.float32),
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _finish():
+        o_ref[...] = (acc_ref[...] * s_ref[...].astype(jnp.float32)
+                      ).astype(o_ref.dtype)
+
+
+def q8_matmul(x: jax.Array, q: jax.Array, scale: jax.Array, *,
+              block_m: int = 128, block_n: int = 128, block_k: int = 128,
+              interpret: bool = False) -> jax.Array:
+    """x (M, K) fp  @  dequant(q (K, N) int8, scale (N,)) -> (M, N) fp."""
+    m, k = x.shape
+    k2, n = q.shape
+    assert k == k2 and scale.shape == (n,)
+    bm, bn, bk = min(block_m, m), min(block_n, n), min(block_k, k)
+    assert m % bm == 0 and n % bn == 0 and k % bk == 0
+    n_k = k // bk
+    kernel = functools.partial(_q8_kernel, n_k=n_k)
+    return pl.pallas_call(
+        kernel,
+        grid=(m // bm, n // bn, n_k),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, s: (i, s)),
+            pl.BlockSpec((bk, bn), lambda i, j, s: (s, j)),
+            pl.BlockSpec((bn,), lambda i, j, s: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, q, scale)

@@ -1,0 +1,121 @@
+"""Pure-jnp oracles for every Pallas kernel (the correctness ground truth).
+
+Each function mirrors one kernel's contract exactly; kernel tests sweep
+shapes/dtypes and ``assert_allclose`` kernel(interpret=True) against these.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def _act(y, activation: Optional[str]):
+    if activation in (None, "none"):
+        return y
+    if activation == "relu":
+        return jnp.maximum(y, 0.0)
+    if activation == "relu2":
+        r = jnp.maximum(y, 0.0)
+        return r * r
+    if activation == "gelu":
+        return jax.nn.gelu(y)
+    if activation == "silu":
+        return y * jax.nn.sigmoid(y)
+    raise ValueError(activation)
+
+
+def matmul(x, w, bias=None, *, activation=None):
+    y = jnp.dot(x.astype(jnp.float32), w.astype(jnp.float32),
+                preferred_element_type=jnp.float32)
+    if bias is not None:
+        y = y + bias.astype(jnp.float32)
+    return _act(y, activation).astype(x.dtype)
+
+
+def gated_matmul(x, w_gate, w_up, *, activation="silu"):
+    g = jnp.dot(x.astype(jnp.float32), w_gate.astype(jnp.float32))
+    u = jnp.dot(x.astype(jnp.float32), w_up.astype(jnp.float32))
+    return (_act(g, activation) * u).astype(x.dtype)
+
+
+def q8_matmul(x, q, scale):
+    y = jnp.dot(x.astype(jnp.float32), q.astype(jnp.float32))
+    return (y * scale.astype(jnp.float32)[None, :]).astype(x.dtype)
+
+
+def flash_attention(q, k, v, *, causal=True, window=None, softcap=None):
+    """q (B,Hq,Sq,D); k/v (B,Hkv,Skv,D)."""
+    b, hq, sq, d = q.shape
+    hkv, skv = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, sq, d).astype(jnp.float32)
+    s = jnp.einsum("bkgsd,bktd->bkgst", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(d)
+    if softcap is not None:
+        s = softcap * jnp.tanh(s / softcap)
+    qpos = jnp.arange(sq)[:, None]
+    kpos = jnp.arange(skv)[None, :]
+    ok = jnp.ones((sq, skv), bool)
+    if causal:
+        ok &= kpos <= qpos
+    if window is not None:
+        ok &= kpos > qpos - window
+    s = jnp.where(ok[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, sq, d).astype(q.dtype)
+
+
+def decode_attention(q, k, v, kv_len, *, softcap=None):
+    """q (B,Hq,D); k/v (B,Hkv,S,D); kv_len (B,)."""
+    b, hq, d = q.shape
+    hkv, s = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, d).astype(jnp.float32)
+    sc = jnp.einsum("bkgd,bktd->bkgt", qf, k.astype(jnp.float32))
+    sc = sc / math.sqrt(d)
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    mask = jnp.arange(s)[None, :] < kv_len[:, None]
+    sc = jnp.where(mask[:, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgt,bktd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, d).astype(q.dtype)
+
+
+def rmsnorm(x, scale, *, eps=1e-6, plus_one=False):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    w = scale.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (xf * jax.lax.rsqrt(var + eps) * w).astype(x.dtype)
+
+
+def ssd_chunk(x, dt, a, b, c, *, chunk: int
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for the intra-chunk kernel (matches kernels/ssd_chunk.py)."""
+    bs, ln, h, p = x.shape
+    n = b.shape[-1]
+    nc = ln // chunk
+    xc = x.reshape(bs, nc, chunk, h, p).astype(jnp.float32)
+    dtc = dt.reshape(bs, nc, chunk, h).astype(jnp.float32)
+    bc = b.reshape(bs, nc, chunk, h, n).astype(jnp.float32)
+    cc = c.reshape(bs, nc, chunk, h, n).astype(jnp.float32)
+    la = dtc * a
+    cum = jnp.cumsum(la, axis=2)
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]
+    ii = jnp.arange(chunk)
+    causal = ii[:, None] >= ii[None, :]
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+    xdt = xc * dtc[..., None]
+    cb = jnp.einsum("bnkhs,bnlhs->bnklh", cc, bc)
+    y = jnp.einsum("bnklh,bnklh,bnlhp->bnkhp", cb, decay, xdt)
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)
+    sc = jnp.einsum("bnkh,bnkhs,bnkhp->bnhps", tail, bc, xdt)
+    return (y.reshape(bs, ln, h, p).astype(x.dtype), sc,
+            cum.reshape(bs, ln, h))

@@ -1,0 +1,111 @@
+"""Mamba2 SSD intra-chunk kernel (the compute-heavy third of SSD).
+
+The chunked SSD algorithm (models/ssm.py:ssd_chunked) splits into:
+
+  1. intra-chunk "attention-like" compute:  Y_intra = (C B^T ∘ decay) (dt X)
+  2. per-chunk state contribution:          S_c = (decay_tail ∘ dt B)^T X
+  3. the sequential inter-chunk carry (tiny; stays a lax.scan outside)
+
+(1) and (2) are matmul-shaped over (K x K) and (K x N x P) tiles — this
+kernel fuses them per (batch, head, chunk) grid cell, keeping the chunk's
+x / B / C tiles and the decay matrix in VMEM.  The Triton reference splits
+the same way (chunk_scan / chunk_state); on TPU one fused kernel per cell
+keeps the MXU fed without materializing the (K, K) decay tensor in HBM.
+
+Outputs: y_intra (B,L,H,P), state contribution (B,nc,H,P,N), and the
+inclusive log-decay cumsum (B,L,H) the outer carry needs.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, s_ref, cum_ref,
+                *, chunk):
+    # refs per (batch, head, chunk) cell:
+    #   x (K, P), dt (K, 1), a (1, 1), b (K, N), c (K, N)
+    x = x_ref[0].astype(jnp.float32)
+    dt = dt_ref[0].astype(jnp.float32)            # (K, 1)
+    a = a_ref[0].astype(jnp.float32)              # (1, 1)
+    bm = b_ref[0].astype(jnp.float32)
+    cm = c_ref[0].astype(jnp.float32)
+
+    la = dt * a                                   # (K, 1) log decay
+    cum = jnp.cumsum(la, axis=0)                  # inclusive
+    seg = cum - cum.T                             # (K, K) cum_i - cum_j
+    ii = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 0)
+    jj = jax.lax.broadcasted_iota(jnp.int32, (chunk, chunk), 1)
+    decay = jnp.where(ii >= jj, jnp.exp(seg), 0.0)
+
+    xdt = x * dt                                  # dt_j * x_j  (K, P)
+    cb = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (K, K)
+    y = jax.lax.dot_general(cb * decay, xdt, (((1,), (0,)), ((), ())),
+                            preferred_element_type=jnp.float32)   # (K, P)
+    y_ref[0] = y.astype(y_ref.dtype)
+
+    tail = jnp.exp(cum[-1:] - cum)                # (K, 1)
+    sc = jax.lax.dot_general(xdt, bm * tail, (((0,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # (P, N)
+    s_ref[0, 0] = sc.astype(s_ref.dtype)
+    cum_ref[0] = cum.astype(cum_ref.dtype)
+
+
+def ssd_chunk(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+              c: jax.Array, *, chunk: int,
+              interpret: bool = False
+              ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Intra-chunk SSD.
+
+    x (B,L,H,P); dt (B,L,H) post-softplus; a (H) negative; b/c (B,L,H,N)
+    (groups already broadcast).  L % chunk == 0.
+    Returns (y_intra (B,L,H,P), state_c (B,nc,H,P,N), cum (B,L,H)).
+    """
+    bs, ln, h, p = x.shape
+    n = b.shape[-1]
+    assert ln % chunk == 0
+    nc = ln // chunk
+
+    # layout: (B*H, nc, K, ...) so each grid cell reads contiguous tiles
+    xg = x.transpose(0, 2, 1, 3).reshape(bs * h, nc, chunk, p)
+    dtg = dt.transpose(0, 2, 1).reshape(bs * h, nc, chunk, 1)
+    bg = b.transpose(0, 2, 1, 3).reshape(bs * h, nc, chunk, n)
+    cg = c.transpose(0, 2, 1, 3).reshape(bs * h, nc, chunk, n)
+    ag = jnp.tile(a.reshape(1, h), (bs, 1)).reshape(bs * h, 1, 1)
+
+    kernel = functools.partial(_ssd_kernel, chunk=chunk)
+    y, sc, cum = pl.pallas_call(
+        kernel,
+        grid=(bs * h, nc),
+        in_specs=[
+            pl.BlockSpec((1, chunk, p), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, 1, 1), lambda g, i: (g, 0, 0)),
+            pl.BlockSpec((1, chunk, n), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, chunk, n), lambda g, i: (g, i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, chunk, p), lambda g, i: (g, i, 0)),
+            pl.BlockSpec((1, 1, p, n), lambda g, i: (g, i, 0, 0)),
+            pl.BlockSpec((1, chunk, 1), lambda g, i: (g, i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bs * h, nc * chunk, p), x.dtype),
+            jax.ShapeDtypeStruct((bs * h, nc, p, n), jnp.float32),
+            jax.ShapeDtypeStruct((bs * h, nc * chunk, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(xg.reshape(bs * h, nc * chunk, p), dtg.reshape(bs * h, nc * chunk, 1),
+      ag, bg.reshape(bs * h, nc * chunk, n), cg.reshape(bs * h, nc * chunk, n))
+
+    y = y.reshape(bs, h, ln, p).transpose(0, 2, 1, 3)
+    sc = sc.reshape(bs, h, nc, p, n).transpose(0, 2, 1, 3, 4)
+    cum = cum.reshape(bs, h, ln).transpose(0, 2, 1)
+    return y, sc, cum

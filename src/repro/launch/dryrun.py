@@ -1,0 +1,311 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+The two lines above MUST precede any other import (jax locks the device
+count on first init).  512 placeholder host devices let ``jax.make_mesh``
+build the production meshes:
+
+    single:  (16,16)    ("data","model")          — 256 chips
+    multi:   (2,16,16)  ("pod","data","model")    — 512 chips
+
+For every cell this lowers the real step function (train_step /
+prefill_step / serve_step) with the production shardings, compiles it,
+prints ``memory_analysis()`` (proves the per-device footprint fits a 16 GB
+v5e chip) and ``cost_analysis()``, runs the trip-count-aware HLO analyzer
+(:mod:`repro.analysis.hlo_cost`) and writes one JSON record per cell under
+``experiments/dryrun/`` — the roofline tables in EXPERIMENTS.md are
+generated from those records.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                # all cells
+    ... --arch mistral-nemo-12b --shape decode_32k --mesh multi
+    ... --no-sp            # disable sequence-parallel activations
+    ... --list             # print the cell matrix and exit
+"""
+
+import argparse
+import json
+import time
+import traceback
+from typing import Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.analysis.hlo_cost import HloCostAnalyzer
+from repro.configs import ASSIGNED_ARCHS, get_config
+from repro.configs.shapes import SHAPES, input_specs, shape_applicable
+from repro.distributed import specs as SP
+from repro.distributed.shardings import ShardingRules
+from repro.launch.mesh import make_production_mesh
+from repro.models import model as M
+from repro.serving.engine import make_prefill_step, make_serve_step
+from repro.train.loop import TrainConfig, loss_fn, make_train_step
+from repro.train.optimizer import OptimizerConfig
+
+V5E = {"flops": 197e12, "hbm_bw": 819e9, "hbm_bytes": 16e9, "ici_bw": 50e9}
+
+
+def _accum_for(shape_batch: int, batch_shards: int) -> int:
+    """Largest accumulation count keeping micro-batch >= batch shards."""
+    for a in (16, 8, 4, 2, 1):
+        if shape_batch % a == 0 and shape_batch // a >= batch_shards:
+            return a
+    return 1
+
+
+def build_cell(cfg, shape_name: str, mesh,
+               *, sequence_parallel: Optional[bool] = None):
+    """Returns (fn, inputs, in_shardings, out_shardings, donate, meta).
+
+    ``sequence_parallel`` defaults per arch: on for the >=100B (fsdp)
+    archs whose remat-saved activations need the model axis, off
+    otherwise (SP's block-boundary all-gathers cost more than the
+    activation memory they save on small models — §Perf hillclimb #2).
+    """
+    if sequence_parallel is None:
+        sequence_parallel = cfg.fsdp
+    rules = ShardingRules.for_mesh(mesh, sequence_parallel=sequence_parallel)
+    shape = SHAPES[shape_name]
+    ins = input_specs(cfg, shape_name)
+    pspec = SP.param_specs(cfg, rules, serve=(shape.kind != "train"))
+    named = lambda tree: SP.named(mesh, tree)
+
+    if shape.kind == "train":
+        batch_shards = 1
+        for a in ("pod", "data"):
+            batch_shards *= rules.mesh_shape.get(a, 1)
+        accum = _accum_for(shape.batch, batch_shards)
+        tcfg = TrainConfig(
+            accum_steps=accum,
+            # bf16 accumulation at accum>=8: halves the grad buffer; the
+            # few-step mean keeps the rounding error ~1e-3 relative
+            accum_dtype="bfloat16" if accum >= 8 else "float32",
+            optimizer=OptimizerConfig(
+                name=cfg.optimizer,
+                moment_dtype="bfloat16" if cfg.optimizer == "adamw"
+                else "float32"))
+        step_fn, opt_init = make_train_step(cfg, tcfg, rules)
+        params_shape = jax.eval_shape(
+            lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+        opt_shape = jax.eval_shape(opt_init, params_shape)
+        ospec = SP.opt_state_specs(cfg, rules, opt_shape, pspec)
+        state_spec = {"params": pspec, "opt": ospec, "step": P()}
+        state_shape = {"params": params_shape, "opt": opt_shape,
+                       "step": jax.ShapeDtypeStruct((), jnp.int32)}
+        bspec = SP.batch_specs(cfg, rules, ins["batch"])
+        metrics_shape = jax.eval_shape(step_fn, state_shape, ins["batch"])[1]
+        mspec = jax.tree.map(lambda _: P(), metrics_shape)
+        meta = dict(kind="train", rules=rules, accum=accum,
+                    param=(params_shape, pspec), opt=(opt_shape, ospec))
+        return (step_fn, (state_shape, ins["batch"]),
+                (named(state_spec), named(bspec)),
+                (named(state_spec), named(mspec)), (0,), meta)
+
+    if shape.kind == "prefill":
+        fn = make_prefill_step(cfg, rules)
+        cspec = SP.cache_specs(cfg, rules, ins["cache"])
+        bspec = SP.batch_specs(cfg, rules, ins["batch"])
+        tok_spec = SP.batch_specs(
+            cfg, rules, jax.ShapeDtypeStruct((shape.batch,), jnp.int32))
+        meta = dict(kind="prefill", rules=rules, accum=1,
+                    cache=(ins["cache"], cspec))
+        return (fn, (None, ins["batch"], ins["cache"]),
+                (named(pspec), named(bspec), named(cspec)),
+                (named(cspec), named(tok_spec)), (2,), meta)
+
+    # decode
+    fn = make_serve_step(cfg, rules)
+    cspec = SP.cache_specs(cfg, rules, ins["cache"])
+    tspec = SP.batch_specs(cfg, rules, ins["token"])
+    meta = dict(kind="decode", rules=rules, accum=1,
+                cache=(ins["cache"], cspec))
+    return (fn, (None, ins["token"], ins["cache"]),
+            (named(pspec), named(tspec), named(cspec)),
+            (named(cspec), named(tspec)), (2,), meta)
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
+             sequence_parallel: Optional[bool] = None,
+             kv_int8: bool = False,
+             out_dir: Optional[str] = None,
+             verbose: bool = True) -> Dict:
+    import dataclasses as _dc
+    cfg = get_config(arch)
+    if kv_int8:
+        cfg = _dc.replace(cfg, kv_dtype="int8")
+    rec: Dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "sequence_parallel": sequence_parallel,
+                 "kv_dtype": cfg.kv_dtype}
+    ok, why = shape_applicable(cfg, shape_name)
+    if not ok:
+        rec.update(status="skipped", reason=why)
+        return _finish(rec, out_dir, verbose)
+
+    try:
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        rec["mesh_shape"] = dict(zip(mesh.axis_names,
+                                     [int(x) for x in mesh.devices.shape]))
+        fn, inputs, in_sh, out_sh, donate, meta = build_cell(
+            cfg, shape_name, mesh, sequence_parallel=sequence_parallel)
+        rec["accum_steps"] = meta["accum"]
+
+        if inputs[0] is None:          # serve/prefill: params first
+            params_shape = jax.eval_shape(
+                lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+            args = (params_shape,) + tuple(inputs[1:])
+            rules = meta["rules"]
+            meta["param"] = (params_shape,
+                             SP.param_specs(cfg, rules, serve=True))
+        else:
+            args = tuple(inputs)
+
+        t0 = time.time()
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
+                         donate_argnums=donate)
+        lowered = jitted.lower(*args)
+        t1 = time.time()
+        compiled = lowered.compile()
+        t2 = time.time()
+        rec.update(lower_s=round(t1 - t0, 2), compile_s=round(t2 - t1, 2))
+
+        ma = compiled.memory_analysis()
+        mem = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "generated_code_bytes": int(ma.generated_code_size_in_bytes),
+        }
+        mem["total_bytes"] = (mem["argument_bytes"] + mem["output_bytes"]
+                              + mem["temp_bytes"] - mem["alias_bytes"])
+        mem["fits_16GB_raw_cpu"] = mem["total_bytes"] <= V5E["hbm_bytes"]
+        # analytic TPU-footprint estimate (analysis/memory_model.py):
+        # the raw CPU numbers include fp32 weight shadows and loop-widened
+        # buffers that the TPU lowering does not materialize
+        from repro.analysis import memory_model as MM
+        shp = SHAPES[shape_name]
+        est_kw = dict(kind=meta["kind"], batch=shp.batch, seq=shp.seq,
+                      rules=meta["rules"], accum=meta["accum"],
+                      accum_dtype_bytes=2 if meta["accum"] >= 8 else 4)
+        if "param" in meta:
+            est_kw.update(param_shapes=meta["param"][0],
+                          param_spec=meta["param"][1])
+        if "opt" in meta:
+            est_kw.update(opt_shapes=meta["opt"][0], opt_spec=meta["opt"][1])
+        if "cache" in meta:
+            est_kw.update(cache_shapes=meta["cache"][0],
+                          cache_spec=meta["cache"][1])
+        est = MM.estimate(cfg, **est_kw)
+        mem["analytic"] = {k: (float(v) if not isinstance(v, bool) else v)
+                           for k, v in est.items()}
+        mem["fits_16GB"] = bool(est["fits_16GB"])
+        rec["memory"] = mem
+        if verbose:
+            print(f"  memory_analysis: {ma}")
+            print(f"  analytic_tpu_est: "
+                  f"{ {k: round(v/2**30, 2) if isinstance(v, float) else v
+                       for k, v in est.items()} } GiB")
+
+        ca = compiled.cost_analysis() or {}
+        rec["xla_cost"] = {k: float(v) for k, v in ca.items()
+                           if isinstance(v, (int, float))
+                           and k in ("flops", "bytes accessed",
+                                     "transcendentals")}
+        if verbose:
+            print(f"  cost_analysis: {rec['xla_cost']}")
+
+        cap = 2 if cfg.dtype == "bfloat16" else None
+        an = HloCostAnalyzer(compiled.as_text(), max_bytes_per_elem=cap)
+        rep = an.entry_cost()
+        rec["hlo"] = {
+            "flops_per_device": rep.flops,
+            "bytes_per_device": rep.bytes,
+            "collective_bytes": dict(rep.collective_bytes),
+            "collective_wire_bytes_total": rep.total_collective_bytes,
+            "collective_count": rep.collective_count,
+            "dtype_cap_bytes": cap,
+        }
+        # the three roofline terms (seconds, per chip)
+        rec["roofline"] = {
+            "compute_s": rep.flops / V5E["flops"],
+            "memory_s": rep.bytes / V5E["hbm_bw"],
+            "collective_s": rep.total_collective_bytes / V5E["ici_bw"],
+        }
+        rec["roofline"]["dominant"] = max(
+            ("compute_s", "memory_s", "collective_s"),
+            key=lambda k: rec["roofline"][k])
+        rec["status"] = "ok"
+    except Exception as e:                                    # noqa: BLE001
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    return _finish(rec, out_dir, verbose)
+
+
+def _finish(rec: Dict, out_dir: Optional[str], verbose: bool) -> Dict:
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        fname = f"{rec['arch']}__{rec['shape']}__{rec['mesh']}.json"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            json.dump(rec, f, indent=1)
+    if verbose:
+        s = rec["status"].upper()
+        extra = ""
+        if rec["status"] == "ok":
+            gb = rec["memory"]["total_bytes"] / 2**30
+            extra = (f" mem/dev={gb:.2f}GiB"
+                     f" fits={rec['memory']['fits_16GB']}"
+                     f" colls={rec['hlo']['collective_count']}")
+        elif rec["status"] == "error":
+            extra = " " + rec["error"][:160]
+        elif rec["status"] == "skipped":
+            extra = " (" + rec["reason"][:60] + ")"
+        print(f"[{s}] {rec['arch']} x {rec['shape']} x {rec['mesh']}{extra}",
+              flush=True)
+    return rec
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", nargs="*", default=list(ASSIGNED_ARCHS))
+    ap.add_argument("--shape", nargs="*", default=list(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="both")
+    ap.add_argument("--no-sp", action="store_true",
+                    help="disable sequence-parallel activation sharding")
+    ap.add_argument("--int8-kv", action="store_true",
+                    help="quantized int8 KV cache (beyond-paper opt)")
+    ap.add_argument("--out", default="experiments/dryrun")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    meshes = {"single": ["single"], "multi": ["multi"],
+              "both": ["single", "multi"]}[args.mesh]
+    cells = [(a, s, m) for a in args.arch for s in args.shape
+             for m in meshes]
+    if args.list:
+        for c in cells:
+            print(*c)
+        return
+
+    n_ok = n_err = n_skip = 0
+    t0 = time.time()
+    for arch, shape, mesh_kind in cells:
+        rec = run_cell(arch, shape, mesh_kind,
+                       sequence_parallel=False if args.no_sp else None,
+                       kv_int8=args.int8_kv,
+                       out_dir=args.out, verbose=True)
+        n_ok += rec["status"] == "ok"
+        n_err += rec["status"] == "error"
+        n_skip += rec["status"] == "skipped"
+    print(f"\ndone in {time.time()-t0:.0f}s: {n_ok} ok, {n_skip} skipped "
+          f"(documented), {n_err} errors")
+    if n_err:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (not a module-level constant) so
+importing this module never touches jax device state — required because
+the dry-run forces 512 host devices via XLA_FLAGS before any jax import,
+while tests/benches must keep seeing 1 device.
+
+Topology:
+    single-pod:  (16, 16)    ("data", "model")   = 256 chips (one v5e pod)
+    multi-pod:   (2, 16, 16) ("pod", "data", "model") = 512 chips; the
+                 leading "pod" axis crosses the DCN and carries only data
+                 parallelism (gradient all-reduce / batch sharding), never
+                 tensor collectives.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+
+
+def make_mesh(shape: Tuple[int, ...], axes: Optional[Tuple[str, ...]] = None):
+    """Arbitrary mesh for tests (e.g. (2, 2) on 4 host devices)."""
+    if axes is None:
+        axes = ("pod", "data", "model")[-len(shape):]
+    return jax.make_mesh(
+        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(shape))

@@ -1,0 +1,100 @@
+"""Serving launcher — the paper's deployment shape.
+
+Modes:
+
+    resident   jitted generator, weights on device
+    offload    HeteGen: weights in host memory, alpha-split linears,
+               pinned-ring streaming (`--budget-frac` sets the device
+               memory available for residency promotion)
+    batch      continuous batching demo over N synthetic requests
+
+    PYTHONPATH=src python -m repro.launch.serve --arch opt-125m \\
+        --mode offload --budget-frac 0.25 --requests 4
+
+``--dryrun`` lowers/compiles the serve step for an assigned architecture
+on the production mesh (delegates to :mod:`repro.launch.dryrun`).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--mode", choices=("resident", "offload", "batch"),
+                    default="offload")
+    ap.add_argument("--budget-frac", type=float, default=0.0)
+    ap.add_argument("--requests", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--hw", default="a10", help="hardware model for the "
+                    "alpha law (a10 | v5e)")
+    ap.add_argument("--dryrun", action="store_true")
+    ap.add_argument("--shape", default="decode_32k")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", args.shape,
+               "--mesh", args.mesh]
+        raise SystemExit(subprocess.call(cmd))
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.configs import get_config, reduced
+    from repro.core.hw import HARDWARE
+    from repro.models import model as M
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompt = rng.integers(0, cfg.vocab_size,
+                          (args.requests, args.prompt_len)).astype(np.int32)
+    print(f"serving {cfg.name} ({cfg.param_count()/1e6:.1f}M) "
+          f"mode={args.mode}")
+
+    if args.mode == "resident":
+        from repro.serving.engine import Generator
+        r = Generator(cfg, params).generate({"tokens": jnp.asarray(prompt)},
+                                            args.max_new)
+        print(f"{args.requests} x {args.max_new} tokens, "
+              f"{r.tokens_per_s:.1f} tok/s decode")
+    elif args.mode == "offload":
+        from repro.serving.offload_runtime import (OffloadGenerator,
+                                                   enumerate_linears)
+        hw = HARDWARE[args.hw]
+        total = sum(s.nbytes for s in enumerate_linears(cfg))
+        off = OffloadGenerator(cfg, params, hw=hw,
+                               budget_bytes=args.budget_frac * total)
+        res = off.generate(prompt, args.max_new)
+        st = res["stream_stats"]
+        print(f"alpha={res['alpha']:.3f} resident="
+              f"{res['resident_bytes']/1e6:.0f}MB/"
+              f"{total/1e6:.0f}MB  {res['tokens_per_s']:.1f} tok/s")
+        print(f"stream busy (s): cpu={st.cpu:.3f} pin={st.pin:.3f} "
+              f"trans={st.trans:.3f} dev={st.dev:.3f}")
+        off.close()
+    else:
+        from repro.serving.batcher import ContinuousBatcher
+        b = ContinuousBatcher(cfg, params, max_slots=4,
+                              max_len=args.prompt_len + args.max_new + 8)
+        for i in range(args.requests):
+            b.submit(list(prompt[i]), args.max_new)
+        outs = b.run_until_done()
+        total_toks = sum(len(v) for v in outs.values())
+        print(f"continuous batching: {len(outs)} requests, "
+              f"{total_toks} tokens generated")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,73 @@
+"""Training launcher.
+
+Single-host (real execution, any reduced/tiny/OPT config):
+
+    PYTHONPATH=src python -m repro.launch.train --arch tiny --steps 50
+
+Production meshes exist only as the dry-run in this container; pass
+``--dryrun`` to lower/compile the train step for an assigned architecture
+on the production mesh instead of executing (delegates to
+:mod:`repro.launch.dryrun`).
+"""
+
+from __future__ import annotations
+
+import argparse
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="tiny")
+    ap.add_argument("--steps", type=int, default=50)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=25)
+    ap.add_argument("--reduced", action="store_true",
+                    help="use the smoke-scale variant of --arch")
+    ap.add_argument("--dryrun", action="store_true",
+                    help="lower/compile train_4k on the production mesh")
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    args = ap.parse_args()
+
+    if args.dryrun:
+        # must re-exec through dryrun so XLA_FLAGS precede the jax import
+        import subprocess
+        import sys
+        cmd = [sys.executable, "-m", "repro.launch.dryrun",
+               "--arch", args.arch, "--shape", "train_4k",
+               "--mesh", args.mesh]
+        raise SystemExit(subprocess.call(cmd))
+
+    import jax.numpy as jnp
+
+    from repro.configs import get_config, reduced
+    from repro.data.pipeline import make_training_data
+    from repro.train.loop import TrainConfig, Trainer
+    from repro.train.optimizer import OptimizerConfig
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = reduced(cfg)
+    tcfg = TrainConfig(accum_steps=args.accum,
+                       optimizer=OptimizerConfig(name=cfg.optimizer,
+                                                 lr=args.lr),
+                       warmup=min(20, args.steps // 5 + 1),
+                       total_steps=args.steps)
+    print(f"training {cfg.name}: {cfg.param_count()/1e6:.1f}M params, "
+          f"batch {args.batch} x seq {args.seq}, accum {args.accum}")
+    data = make_training_data(cfg, batch=args.batch, seq=args.seq)
+    batches = ({"tokens": jnp.asarray(b["tokens"]),
+                "labels": jnp.asarray(b["labels"])} for b in data)
+    tr = Trainer(cfg, tcfg, checkpoint_dir=args.ckpt_dir,
+                 checkpoint_every=args.ckpt_every)
+    last = tr.run(batches, args.steps)
+    first = tr.metrics_log[0]["loss"] if tr.metrics_log else float("nan")
+    print(f"done: loss {first:.3f} -> {last.get('loss', float('nan')):.3f} "
+          f"at step {tr.step}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,436 @@
+"""Layer math shared by the jitted production path and the offload runtime.
+
+Pure functions over explicit parameter dicts — no module framework.  Every
+attention variant required by the assigned architectures lives here:
+
+  * GQA with RoPE / learned positions, optional QK-norm
+  * sliding-window (local) + global alternating layers, logit softcapping
+    (gemma2)
+  * MLA — multi-head latent attention with low-rank q/kv and a compressed
+    KV cache (minicpm3)
+  * MoE top-1 with capacity-based GShard dispatch + optional shared expert
+    (llama4 scout/maverick)
+  * gated-SiLU / squared-ReLU / GELU / ReLU MLPs
+
+Activation tensors are annotated with logical axes through a
+:class:`~repro.distributed.shardings.ShardingRules` object (no-op outside a
+mesh), so the same code serves single-host offload serving and the 512-chip
+dry-run.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import NO_RULES, ShardingRules
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6,
+            plus_one: bool = False) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    w = scale.astype(jnp.float32)
+    if plus_one:
+        w = w + 1.0
+    return (y * w).astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * scale.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dt)
+
+
+def apply_norm(cfg, p: Dict, x: jax.Array) -> jax.Array:
+    if cfg.norm_kind == "layernorm":
+        return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+    return rmsnorm(x, p["scale"], cfg.norm_eps,
+                   plus_one=cfg.post_norm)   # gemma-style (1+w) rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Apply RoPE to ``x`` of shape (..., S, H, D) at ``positions`` (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions[..., None].astype(jnp.float32) * freq      # (..., S, half)
+    ang = ang[..., None, :]                                    # (..., S, 1, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: Optional[float]) -> jax.Array:
+    if cap is None:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Attention core
+# ---------------------------------------------------------------------------
+
+NEG_INF = -2.0e38
+
+
+def _mask_bias(q_pos: jax.Array, kv_pos: jax.Array, *, causal: bool,
+               window: Optional[int], kv_len=None) -> jax.Array:
+    """(..., Sq, Skv) additive bias from position/validity constraints."""
+    qp = q_pos[..., :, None].astype(jnp.int32)
+    kp = kv_pos[..., None, :].astype(jnp.int32)
+    ok = jnp.ones(jnp.broadcast_shapes(qp.shape, kp.shape), dtype=bool)
+    if causal:
+        ok &= kp <= qp
+    if window is not None:
+        ok &= kp > qp - window
+    if kv_len is not None:
+        ok &= kp < jnp.asarray(kv_len, jnp.int32)[..., None, None]
+    ok &= kp >= 0
+    return jnp.where(ok, 0.0, NEG_INF).astype(jnp.float32)
+
+
+def _attend_block(q: jax.Array, k: jax.Array, v: jax.Array,
+                  bias: jax.Array, cap: Optional[float],
+                  kv_format: str = "bthd") -> jax.Array:
+    """q (B,Sq,Hq,D); k/v (B,Skv,Hkv,D) ["bthd"] or (B,Hkv,Skv,D)
+    ["bhtd" — the KV-cache-native layout: the scores dot consumes it with
+    no transpose]; bias (B,Sq,Skv) -> (B,Sq,Hq,D)."""
+    b, sq, hq, d = q.shape
+    hkv = k.shape[2] if kv_format == "bthd" else k.shape[1]
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, d)
+    kspec = "btkd" if kv_format == "bthd" else "bktd"
+    scores = jnp.einsum(f"bskgd,{kspec}->bkgst", qg, k,
+                        preferred_element_type=jnp.float32)
+    scores = scores * (1.0 / math.sqrt(d))
+    scores = softcap(scores, cap)
+    scores = scores + bias[:, None, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum(f"bkgst,{kspec}->bskgd", probs.astype(v.dtype), v,
+                     preferred_element_type=jnp.float32)
+    return out.reshape(b, sq, hq, d).astype(q.dtype)
+
+
+def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+              q_positions: jax.Array, kv_positions: jax.Array,
+              causal: bool = True, window: Optional[int] = None,
+              attn_softcap: Optional[float] = None, kv_len=None,
+              chunk_q: int = 1024, kv_format: str = "bthd",
+              rules: ShardingRules = NO_RULES) -> jax.Array:
+    """Masked multi-head attention with GQA, windows and softcap.
+
+    Memory-bounded: when Sq*Skv is large the query axis is processed in
+    chunks via ``lax.scan`` ("lazy flash" — each chunk's full score row fits
+    comfortably in memory, so no online-softmax bookkeeping is needed; the
+    Pallas kernel in :mod:`repro.kernels.flash_attention` is the TPU
+    hot-path equivalent with true block tiling).
+    """
+    b, sq, hq, d = q.shape
+    skv = k.shape[1] if kv_format == "bthd" else k.shape[2]
+    if sq * skv <= 4096 * 2048 or sq == 1 or sq % chunk_q != 0:
+        bias = _mask_bias(jnp.broadcast_to(q_positions, (b, sq)),
+                          jnp.broadcast_to(kv_positions, (b, skv)),
+                          causal=causal, window=window, kv_len=kv_len)
+        return _attend_block(q, k, v, bias, attn_softcap, kv_format)
+
+    n_chunks = sq // chunk_q
+    qs = q.reshape(b, n_chunks, chunk_q, hq, d).transpose(1, 0, 2, 3, 4)
+    qp = jnp.broadcast_to(q_positions, (b, sq))
+    qp = qp.reshape(b, n_chunks, chunk_q).transpose(1, 0, 2)
+    kvp = jnp.broadcast_to(kv_positions, (b, skv))
+
+    def body(_, qc):
+        qi, qpi = qc
+        bias = _mask_bias(qpi, kvp, causal=causal, window=window,
+                          kv_len=kv_len)
+        return None, _attend_block(qi, k, v, bias, attn_softcap, kv_format)
+
+    _, out = jax.lax.scan(body, None, (qs, qp))
+    out = out.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, d)
+    return rules.act(out, "batch", "seq", "heads", None)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (qkv projections + rope + attend + out projection)
+# ---------------------------------------------------------------------------
+
+def gqa_qkv(cfg, p: Dict, x: jax.Array, positions: jax.Array,
+            rules: ShardingRules = NO_RULES
+            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Project to q/k/v (with optional bias, qk-norm, rope)."""
+    b, s, _ = x.shape
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = (x @ p["wq"]).reshape(b, s, hq, hd)
+    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+    if cfg.attn_bias:
+        q = q + p["bq"].reshape(hq, hd)
+        k = k + p["bk"].reshape(hkv, hd)
+        v = v + p["bv"].reshape(hkv, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if cfg.pos_emb == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    if s > 1:
+        # decode (s == 1) skips these: with a seq-sharded cache
+        # (kv_heads < TP) the useful layout follows the cache, not the
+        # head axis — measured neutral on nemotron decode but strictly
+        # fewer constraints for GSPMD to fight
+        q = rules.act(q, "batch", "seq", "heads", None)
+        k = rules.act(k, "batch", "seq", "kv_heads", None)
+        v = rules.act(v, "batch", "seq", "kv_heads", None)
+    return q, k, v
+
+
+def attn_out(cfg, p: Dict, o: jax.Array, rules: ShardingRules = NO_RULES
+             ) -> jax.Array:
+    b, s, hq, hd = o.shape
+    y = o.reshape(b, s, hq * hd) @ p["wo"]
+    if cfg.attn_bias:
+        y = y + p["bo"]
+    return rules.act(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MLA — multi-head latent attention (minicpm3 / deepseek style)
+# ---------------------------------------------------------------------------
+
+def mla_project_q(cfg, p: Dict, x: jax.Array, positions: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Return (q_nope (B,S,H,dn), q_rope (B,S,H,dr))."""
+    b, s, _ = x.shape
+    h, dn, dr = cfg.n_heads, cfg.qk_nope_dim, cfg.qk_rope_dim
+    ql = rmsnorm(x @ p["wq_a"], p["q_a_norm"], cfg.norm_eps)
+    q = (ql @ p["wq_b"]).reshape(b, s, h, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_latent_kv(cfg, p: Dict, x: jax.Array, positions: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Compressed per-token cache entries: (latent (B,S,R), k_rope (B,S,dr))."""
+    dr = cfg.qk_rope_dim
+    ckv = x @ p["wkv_a"]                                # (B,S,R+dr)
+    latent = rmsnorm(ckv[..., :cfg.kv_lora_rank], p["kv_a_norm"], cfg.norm_eps)
+    k_rope = ckv[..., cfg.kv_lora_rank:]
+    k_rope = rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    return latent, k_rope
+
+
+def mla_attend(cfg, p: Dict, q_nope: jax.Array, q_rope: jax.Array,
+               latent: jax.Array, k_rope: jax.Array, *,
+               q_positions, kv_positions, kv_len=None,
+               causal: bool = True, absorbed: bool = True,
+               rules: ShardingRules = NO_RULES) -> jax.Array:
+    """Attention over the compressed cache.
+
+    ``absorbed=True`` uses the weight-absorption identity
+    ``(q_nope @ Wk) . latent == (q_nope @ Wk_absorbed) . latent`` so scores
+    are computed directly in the R-dim latent space and values are expanded
+    only once per step — the memory-optimal decode path.  ``absorbed=False``
+    decompresses K/V per token (reference path).
+    """
+    b, sq, h, dn = q_nope.shape
+    skv = latent.shape[1]
+    r = cfg.kv_lora_rank
+    dv = cfg.v_head_dim
+    wk = p["wk_b"].reshape(r, h, dn)                    # latent -> k_nope
+    wv = p["wv_b"].reshape(r, h, dv)                    # latent -> v
+    scale = 1.0 / math.sqrt(dn + cfg.qk_rope_dim)
+
+    bias = _mask_bias(jnp.broadcast_to(q_positions, (b, sq)),
+                      jnp.broadcast_to(kv_positions, (b, skv)),
+                      causal=causal, window=None, kv_len=kv_len)
+
+    if absorbed:
+        q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, wk)        # absorb Wk
+        s_nope = jnp.einsum("bshr,btr->bhst", q_lat, latent,
+                            preferred_element_type=jnp.float32)
+    else:
+        k_nope = jnp.einsum("btr,rhd->bthd", latent, wk)
+        s_nope = jnp.einsum("bshd,bthd->bhst", q_nope, k_nope,
+                            preferred_element_type=jnp.float32)
+    s_rope = jnp.einsum("bshd,btd->bhst", q_rope, k_rope,
+                        preferred_element_type=jnp.float32)
+    scores = (s_nope + s_rope) * scale + bias[:, None, :, :]
+    probs = jax.nn.softmax(scores, axis=-1)
+    if absorbed:
+        o_lat = jnp.einsum("bhst,btr->bshr", probs.astype(latent.dtype),
+                           latent)
+        o = jnp.einsum("bshr,rhd->bshd", o_lat, wv)
+    else:
+        vfull = jnp.einsum("btr,rhd->bthd", latent, wv)
+        o = jnp.einsum("bhst,bthd->bshd", probs.astype(vfull.dtype), vfull)
+    y = o.reshape(b, sq, h * dv) @ p["wo"]
+    return rules.act(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MLPs
+# ---------------------------------------------------------------------------
+
+def mlp(cfg, p: Dict, x: jax.Array, rules: ShardingRules = NO_RULES
+        ) -> jax.Array:
+    kind = cfg.mlp_kind
+    if kind.startswith("gated"):
+        act = jax.nn.silu if kind == "gated_silu" else jax.nn.gelu
+        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+    else:
+        h = x @ p["w_in"]
+        if cfg.attn_bias and "b_in" in p:
+            h = h + p["b_in"]
+        if kind == "relu2":
+            h = jnp.square(jax.nn.relu(h))
+        elif kind == "gelu":
+            h = jax.nn.gelu(h)
+        else:
+            h = jax.nn.relu(h)
+    h = rules.act(h, "batch", "seq", "ff")
+    y = h @ p["w_down"]
+    if cfg.attn_bias and "b_down" in p:
+        y = y + p["b_down"]
+    return rules.act(y, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------------------
+# MoE — top-1 (Switch-style) with GShard capacity dispatch
+# ---------------------------------------------------------------------------
+
+def _moe_decode(cfg, p: Dict, x: jax.Array, rules: ShardingRules
+                ) -> jax.Array:
+    """Exact (dropless) top-1 routing for single-token decode.
+
+    Capacity-dispatch with capacity == batch (the worst case: every token
+    on one expert), so no token is ever dropped and the result is exactly
+    the routed computation.  Tokens move to the (model-sharded) experts
+    via small all-to-alls; expert weights never move.
+
+    [§Perf hillclimb #1] The previous implementation gathered per-token
+    expert weights (``we[idx]``); under expert-sharded weights GSPMD
+    lowered that to an all-reduce of a (B, d, f) gathered-weight tensor —
+    3.6 s of ICI time per decode step for scout (48 MoE layers x 3
+    matmuls x 2.7 GB).  Dispatching activations instead moves ~MBs:
+    measured collective term 3629 ms -> ~1 ms on the same cell (see
+    EXPERIMENTS.md §Perf).
+    """
+    b, _, d = x.shape
+    e = cfg.n_experts
+    xt = x[:, 0]
+    logits = (xt @ p["router"].astype(xt.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(gates, axis=-1)                     # (B,)
+    gate = jnp.max(gates, axis=-1).astype(xt.dtype)
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # (B, E)
+    pos = jnp.cumsum(onehot, axis=0) * onehot - 1.0
+    slot = jnp.max(pos, axis=-1).astype(jnp.int32)       # (B,)
+    slot_oh = jax.nn.one_hot(slot, b, dtype=jnp.float32)
+    dispatch = jnp.einsum("be,bc->bec", onehot, slot_oh).astype(xt.dtype)
+
+    xin = jnp.einsum("bec,bd->ecd", dispatch, xt)        # (E, C=B, d)
+    xin = rules.act(xin, "experts", None, "embed")
+    if cfg.mlp_kind.startswith("gated"):
+        act = jax.nn.silu if cfg.mlp_kind == "gated_silu" else jax.nn.gelu
+        h = act(jnp.einsum("ecd,edf->ecf", xin, p["we_gate"])) \
+            * jnp.einsum("ecd,edf->ecf", xin, p["we_up"])
+    else:
+        h = jax.nn.relu(jnp.einsum("ecd,edf->ecf", xin, p["we_in"]))
+    h = rules.act(h, "experts", None, None)
+    xout = jnp.einsum("ecf,efd->ecd", h, p["we_down"])
+    xout = rules.act(xout, "experts", None, "embed")
+    y = jnp.einsum("bec,ecd->bd", dispatch * gate[:, None, None], xout)
+    y = y[:, None]
+    if cfg.shared_expert:
+        y = y + mlp(cfg, {"w_gate": p["ws_gate"], "w_up": p["ws_up"],
+                          "w_down": p["ws_down"]}, x, rules)
+    return rules.act(y, "batch", "seq", "embed")
+
+
+def moe(cfg, p: Dict, x: jax.Array, rules: ShardingRules = NO_RULES
+        ) -> jax.Array:
+    """Top-1 routed experts with capacity; optional always-on shared expert.
+
+    Dispatch/combine are one-hot einsums (cost ~= tokens * group * cf * d
+    flops, a few %% of expert compute) — the standard TPU-friendly pattern;
+    the expert dimension is sharded over the 'model' mesh axis (EP), so
+    GSPMD materializes the token all-to-all.  Single-token decode takes the
+    exact gather path (:func:`_moe_decode`).
+    """
+    b, s, d = x.shape
+    if s == 1:
+        return _moe_decode(cfg, p, x, rules)
+    e, cf = cfg.n_experts, cfg.capacity_factor
+    gs = min(cfg.moe_group_size, b * s)
+    tokens = b * s
+    n_groups = max(tokens // gs, 1)
+    gs = tokens // n_groups
+    xg = x.reshape(n_groups, gs, d)
+    xg = rules.act(xg, "expert_group", None, "embed")
+
+    logits = (xg @ p["router"].astype(xg.dtype)).astype(jnp.float32)
+    gates = jax.nn.softmax(logits, axis=-1)              # (G, gs, E)
+    idx = jnp.argmax(gates, axis=-1)                     # top-1
+    gate = jnp.max(gates, axis=-1)
+    cap = max(1, int(math.ceil(gs * cf * cfg.top_k / e)))
+
+    onehot = jax.nn.one_hot(idx, e, dtype=jnp.float32)   # (G, gs, E)
+    pos = jnp.cumsum(onehot, axis=1) * onehot - 1.0      # position in expert
+    keep = (pos >= 0) & (pos < cap)                      # capacity drop
+    slot = jnp.max(pos, axis=-1)                         # (G, gs) chosen slot
+    slot_oh = jax.nn.one_hot(jnp.clip(slot, 0, cap - 1), cap,
+                             dtype=jnp.float32)          # (G, gs, cap)
+    dispatch = jnp.einsum("gse,gsc->gsec", onehot * keep, slot_oh)
+    combine = dispatch * gate[..., None, None]
+
+    xin = jnp.einsum("gsec,gsd->gecd", dispatch.astype(xg.dtype), xg)
+    xin = rules.act(xin, "expert_group", "experts", None, "embed")
+    if cfg.mlp_kind == "gated_silu":
+        h = jax.nn.silu(jnp.einsum("gecd,edf->gecf", xin, p["we_gate"])) \
+            * jnp.einsum("gecd,edf->gecf", xin, p["we_up"])
+    else:
+        h = jax.nn.relu(jnp.einsum("gecd,edf->gecf", xin, p["we_in"]))
+    h = rules.act(h, "expert_group", "experts", None, None)
+    xout = jnp.einsum("gecf,efd->gecd", h, p["we_down"])
+    xout = rules.act(xout, "expert_group", "experts", None, "embed")
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(xout.dtype), xout)
+    y = y.reshape(b, s, d)
+
+    if cfg.shared_expert:
+        y = y + mlp(cfg, {"w_gate": p["ws_gate"], "w_up": p["ws_up"],
+                          "w_down": p["ws_down"]}, x, rules)
+    return rules.act(y, "batch", "seq", "embed")
+
+
+def moe_aux_loss(cfg, p: Dict, x: jax.Array) -> jax.Array:
+    """Switch-style load-balancing loss (used by the training path)."""
+    b, s, d = x.shape
+    logits = (x.reshape(-1, d) @ p["router"].astype(x.dtype))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    idx = jnp.argmax(probs, axis=-1)
+    e = cfg.n_experts
+    frac_tokens = jnp.mean(jax.nn.one_hot(idx, e, dtype=jnp.float32), axis=0)
+    frac_probs = jnp.mean(probs, axis=0)
+    return e * jnp.sum(frac_tokens * frac_probs)

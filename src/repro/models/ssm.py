@@ -1,0 +1,213 @@
+"""Mamba2 — state-space duality (SSD) blocks (arXiv:2405.21060).
+
+Implements the selective state-space recurrence
+
+    h_t = exp(A * dt_t) h_{t-1} + dt_t * B_t x_t^T        (per head)
+    y_t = C_t . h_t + D x_t
+
+three ways, all numerically equivalent (tested against each other):
+
+  * ``ssd_recurrent``  — step-by-step scan (oracle; also the decode step)
+  * ``ssd_chunked``    — the SSD chunked form: intra-chunk attention-like
+    matmuls + inter-chunk state carry; this is the train/prefill path and
+    the shape the Pallas kernel (:mod:`repro.kernels.ssd_chunk`) tiles
+  * ``mamba_decode_step`` — O(1) single-token state update
+
+The surrounding block (in_proj -> conv1d -> SSD -> gated RMSNorm ->
+out_proj) follows the Mamba2 reference layout; zamba2 reuses it as its
+trunk layer.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import NO_RULES, ShardingRules
+from repro.models.layers import rmsnorm
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_recurrent(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                  c: jax.Array, d: jax.Array,
+                  h0: Optional[jax.Array] = None
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Reference scan.  x (B,L,H,P); dt (B,L,H); a (H) negative;
+    b/c (B,L,G,N) broadcast over heads; d (H).  Returns (y, h_final) with
+    h (B,H,P,N)."""
+    bs, ln, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), dtype=jnp.float32)
+
+    def step(hprev, inp):
+        xt, dtt, bt, ct = inp                       # (B,H,P) (B,H) (B,G,N)
+        decay = jnp.exp(dtt * a)[..., None, None]   # (B,H,1,1)
+        bt_h = jnp.repeat(bt, rep, axis=1)          # (B,H,N)
+        ct_h = jnp.repeat(ct, rep, axis=1)
+        upd = (dtt[..., None] * xt)[..., None] * bt_h[:, :, None, :]
+        hnew = hprev * decay + upd.astype(jnp.float32)
+        yt = jnp.einsum("bhpn,bhn->bhp", hnew, ct_h.astype(jnp.float32))
+        return hnew, yt
+
+    xs = (x.transpose(1, 0, 2, 3), dt.transpose(1, 0, 2),
+          b.transpose(1, 0, 2, 3), c.transpose(1, 0, 2, 3))
+    hN, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3) + x.astype(jnp.float32) * d[:, None]
+    return y.astype(x.dtype), hN
+
+
+def ssd_chunked(x: jax.Array, dt: jax.Array, a: jax.Array, b: jax.Array,
+                c: jax.Array, d: jax.Array, *, chunk: int = 128,
+                h0: Optional[jax.Array] = None
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Chunked SSD (the 'dual' quadratic-within-chunk form).
+
+    Exactly equal to :func:`ssd_recurrent` (up to fp assoc.); compute is
+    matmul-shaped so the MXU (or its Pallas kernel) runs it efficiently.
+    """
+    bs, ln, h, p = x.shape
+    g, n = b.shape[2], b.shape[3]
+    rep = h // g
+    assert ln % chunk == 0, f"seq {ln} not divisible by chunk {chunk}"
+    nc = ln // chunk
+    if h0 is None:
+        h0 = jnp.zeros((bs, h, p, n), dtype=jnp.float32)
+
+    # reshape into chunks: (B, nc, K, ...)
+    xc = x.reshape(bs, nc, chunk, h, p)
+    dtc = dt.reshape(bs, nc, chunk, h)
+    bc = jnp.repeat(b, rep, axis=2).reshape(bs, nc, chunk, h, n)
+    cc = jnp.repeat(c, rep, axis=2).reshape(bs, nc, chunk, h, n)
+
+    la = (dtc * a).astype(jnp.float32)              # log-decay per step
+    cum = jnp.cumsum(la, axis=2)                    # (B,nc,K,H) inclusive
+    # intra-chunk decay matrix: exp(cum_i - cum_j) for j <= i
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]   # (B,nc,K,K,H)
+    ii = jnp.arange(chunk)
+    causal = (ii[:, None] >= ii[None, :])
+    decay = jnp.where(causal[None, None, :, :, None], jnp.exp(seg), 0.0)
+
+    xdt = xc * dtc[..., None]                       # dt_j * x_j
+    cb = jnp.einsum("bnkhs,bnlhs->bnklh", cc.astype(jnp.float32),
+                    bc.astype(jnp.float32))         # C_i . B_j
+    y_intra = jnp.einsum("bnklh,bnklh,bnlhp->bnkhp", cb, decay,
+                         xdt.astype(jnp.float32))
+
+    # per-chunk state contribution: sum_j exp(cum_K - cum_j) dt_j B_j x_j
+    tail = jnp.exp(cum[:, :, -1:, :] - cum)         # (B,nc,K,H)
+    state_c = jnp.einsum("bnkh,bnkhs,bnkhp->bnhps", tail,
+                         bc.astype(jnp.float32), xdt.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])         # (B,nc,H)
+
+    def carry(hprev, inp):
+        sc, cd, ccf, cumf = inp
+        # y_inter_i = C_i . h_prev * exp(cum_i)
+        y_inter = jnp.einsum("bkhs,bhps,bkh->bkhp", ccf, hprev,
+                             jnp.exp(cumf))
+        hnew = hprev * cd[..., None, None] + sc
+        return hnew, y_inter
+
+    xs = (state_c.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2),
+          cc.astype(jnp.float32).transpose(1, 0, 2, 3, 4),
+          cum.transpose(1, 0, 2, 3))
+    hN, y_inter = jax.lax.scan(carry, h0, xs)
+    y = y_intra + y_inter.transpose(1, 0, 2, 3, 4)
+    y = y.reshape(bs, ln, h, p) + x.astype(jnp.float32) * d[:, None]
+    return y.astype(x.dtype), hN
+
+
+def ssd_decode_step(h: jax.Array, xt: jax.Array, dtt: jax.Array,
+                    a: jax.Array, bt: jax.Array, ct: jax.Array,
+                    d: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """One-token state update.  h (B,H,P,N); xt (B,H,P); dtt (B,H);
+    bt/ct (B,G,N)."""
+    hq = h.shape[1]
+    rep = hq // bt.shape[1]
+    bt_h = jnp.repeat(bt, rep, axis=1)
+    ct_h = jnp.repeat(ct, rep, axis=1)
+    decay = jnp.exp(dtt * a)[..., None, None]
+    upd = (dtt[..., None] * xt)[..., None] * bt_h[:, :, None, :]
+    hnew = h * decay + upd.astype(jnp.float32)
+    yt = jnp.einsum("bhpn,bhn->bhp", hnew, ct_h.astype(jnp.float32))
+    yt = yt + xt.astype(jnp.float32) * d[:, None]
+    return hnew, yt.astype(xt.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Mamba2 block (projections + conv + SSD + gated norm)
+# ---------------------------------------------------------------------------
+
+def _causal_conv(xbc: jax.Array, w: jax.Array, bias: jax.Array,
+                 state: Optional[jax.Array] = None
+                 ) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv1d.  xbc (B,L,C); w (K,C); returns (y, new_state)
+    where state carries the last K-1 inputs."""
+    k = w.shape[0]
+    if state is None:
+        state = jnp.zeros((xbc.shape[0], k - 1, xbc.shape[2]), xbc.dtype)
+    xpad = jnp.concatenate([state, xbc], axis=1)
+    new_state = xpad[:, -(k - 1):, :] if k > 1 else state
+    ys = sum(xpad[:, i:i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(ys + bias), new_state
+
+
+def mamba_block(cfg, p: Dict, x: jax.Array, *,
+                ssm_state: Optional[jax.Array] = None,
+                conv_state: Optional[jax.Array] = None,
+                chunked: bool = True,
+                rules: ShardingRules = NO_RULES):
+    """Full Mamba2 block over a sequence.  x (B,L,d_model).
+
+    Returns (y, new_ssm_state, new_conv_state).
+    """
+    bs, ln, _ = x.shape
+    h, pdim, n = cfg.ssm_heads, cfg.ssm_head_dim, cfg.ssm_state
+    g = cfg.ssm_groups
+
+    z = x @ p["w_z"]
+    xr = x @ p["w_x"]
+    bc = x @ p["w_bc"]
+    dt = x @ p["w_dt"]
+    z = rules.act(z, "batch", None, "ff")
+    xr = rules.act(xr, "batch", None, "ff")
+    # depthwise causal conv: splitting the fused [x;B;C] conv into x / BC
+    # parts is exact (depthwise = channelwise)
+    if conv_state is not None:
+        cs_x, cs_bc = conv_state
+    else:
+        cs_x = cs_bc = None
+    xr, new_conv_x = _causal_conv(xr, p["conv_x_w"], p["conv_x_b"], cs_x)
+    bc, new_conv_bc = _causal_conv(bc, p["conv_bc_w"], p["conv_bc_b"], cs_bc)
+    new_conv = (new_conv_x, new_conv_bc)
+    xs = xr.reshape(bs, ln, h, pdim)
+    xs = rules.act(xs, "batch", None, "ssm_heads", None)
+    b = bc[..., :g * n].reshape(bs, ln, g, n)
+    c = bc[..., g * n:].reshape(bs, ln, g, n)
+
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+
+    if ln == 1 and ssm_state is not None:
+        hnew, yt = ssd_decode_step(ssm_state, xs[:, 0], dt[:, 0], a,
+                                   b[:, 0], c[:, 0], p["D"])
+        y = yt[:, None]
+        new_state = hnew
+    elif chunked and ln % cfg.ssm_chunk == 0 and ln > cfg.ssm_chunk:
+        y, new_state = ssd_chunked(xs, dt, a, b, c, p["D"],
+                                   chunk=cfg.ssm_chunk, h0=ssm_state)
+    else:
+        y, new_state = ssd_recurrent(xs, dt, a, b, c, p["D"], h0=ssm_state)
+
+    y = y.reshape(bs, ln, cfg.d_inner)
+    y = rmsnorm(y * jax.nn.silu(z), p["gnorm"], cfg.norm_eps)
+    out = y @ p["out_proj"]
+    return rules.act(out, "batch", None, "embed"), new_state, new_conv

@@ -1,0 +1,145 @@
+"""Continuous batching: slot-based request scheduling over a shared cache.
+
+Requests join/leave a fixed pool of ``max_slots`` decode slots without
+stopping the batch:
+
+  * a new request is prefilled alone (batch-1) and its KV written into a
+    free slot of the global cache;
+  * every ``step()`` advances all active slots by one token (inactive
+    slots decode garbage that is masked out — the standard static-shape
+    TPU pattern);
+  * finished requests (max_new reached / eos) free their slot immediately.
+
+Per-slot sequence lengths are first-class: the model's decode path accepts
+a vector ``len`` and scatters each slot's new K/V at its own position.
+Supported for the dense/moe/vlm transformer families (per-slot state for
+SSM trunks would need per-slot state snapshots; see DESIGN.md §8).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: List[int]
+    max_new: int
+    eos: Optional[int] = None
+    generated: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    slot: Optional[int] = None
+
+
+class ContinuousBatcher:
+    def __init__(self, cfg: ModelConfig, params: Dict, *, max_slots: int = 4,
+                 max_len: int = 512):
+        if cfg.family in ("ssm", "hybrid", "encdec"):
+            raise NotImplementedError(
+                "continuous batching supports transformer KV caches")
+        self.cfg = cfg
+        self.params = params
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.cache = M.init_cache(cfg, max_slots, max_len)
+        # per-slot lengths (vector 'len' drives per-slot scatter updates)
+        self.cache["len"] = jnp.zeros((max_slots,), jnp.int32)
+        self.tokens = jnp.zeros((max_slots,), jnp.int32)
+        self.active = np.zeros((max_slots,), bool)
+        self.requests: Dict[int, Request] = {}
+        self._ids = itertools.count()
+        self.queue: List[Request] = []
+
+        def _decode(params, token, cache):
+            cache, logits = M.decode_step(cfg, params, token, cache)
+            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+        def _prefill_one(params, tokens, cache):
+            cache, logits = M.prefill(cfg, params, {"tokens": tokens}, cache)
+            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+        self._prefill_one = jax.jit(_prefill_one)
+
+    # ------------------------------------------------------------------
+    def submit(self, prompt: List[int], max_new: int,
+               eos: Optional[int] = None) -> int:
+        rid = next(self._ids)
+        req = Request(rid, list(prompt), max_new, eos)
+        self.requests[rid] = req
+        self.queue.append(req)
+        return rid
+
+    def _free_slots(self) -> List[int]:
+        return [i for i in range(self.max_slots) if not self.active[i]]
+
+    def _admit(self) -> None:
+        for slot in self._free_slots():
+            if not self.queue:
+                break
+            req = self.queue.pop(0)
+            req.slot = slot
+            one_cache = M.init_cache(self.cfg, 1, self.max_len)
+            toks = jnp.asarray([req.prompt], jnp.int32)
+            one_cache, first = self._prefill_one(self.params, toks, one_cache)
+            # merge slot: every kv leaf has batch at axis 1
+            def merge(glob, one):
+                if glob.ndim == 0 or glob.shape == ():
+                    return glob
+                return jax.lax.dynamic_update_slice_in_dim(
+                    glob, one.astype(glob.dtype), slot, axis=1)
+            for key in self.cache:
+                if key == "len":
+                    continue
+                self.cache[key] = merge(self.cache[key], one_cache[key])
+            self.cache["len"] = self.cache["len"].at[slot].set(
+                len(req.prompt))
+            self.tokens = self.tokens.at[slot].set(first[0])
+            req.generated.append(int(first[0]))
+            self.active[slot] = True
+            self._maybe_finish(req)
+
+    def _maybe_finish(self, req: Request) -> None:
+        if len(req.generated) >= req.max_new or \
+                (req.eos is not None and req.generated
+                 and req.generated[-1] == req.eos):
+            req.done = True
+            if req.slot is not None:
+                self.active[req.slot] = False
+                self.cache["len"] = self.cache["len"].at[req.slot].set(0)
+                req.slot = None
+
+    # ------------------------------------------------------------------
+    def step(self) -> int:
+        """Admit waiting requests, advance all active slots one token.
+
+        Returns the number of active slots after the step.
+        """
+        self._admit()
+        if not self.active.any():
+            return 0
+        self.cache, nxt = self._decode(self.params, self.tokens, self.cache)
+        self.tokens = nxt
+        for req in list(self.requests.values()):
+            if req.slot is not None and self.active[req.slot]:
+                req.generated.append(int(nxt[req.slot]))
+                self._maybe_finish(req)
+        return int(self.active.sum())
+
+    def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
+        for _ in range(max_steps):
+            if not self.queue and not self.active.any():
+                break
+            self.step()
+        return {rid: r.generated for rid, r in self.requests.items()}

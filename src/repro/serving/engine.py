@@ -1,0 +1,117 @@
+"""Jitted generation engine (the production serving path).
+
+``Generator`` compiles prefill/decode once per (batch, prompt_len) shape and
+runs the autoregressive loop with a donated cache.  This is the path the
+multi-pod dry-run lowers (``serve_step``); the paper's *offload* runtime —
+eager, layer-streaming, HeteGen-scheduled — lives in
+:mod:`repro.serving.offload_runtime` and shares the same layer math.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from functools import partial
+from typing import Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.shardings import NO_RULES, ShardingRules
+from repro.models import model as M
+from repro.models.config import ModelConfig
+from repro.serving.sampling import SamplerConfig, make_sampler
+
+
+@dataclasses.dataclass
+class GenerateResult:
+    tokens: list                        # (B, n_new) python ints
+    prefill_s: float
+    decode_s: float
+    tokens_per_s: float
+
+
+class Generator:
+    """Batched autoregressive generation with a jitted serve_step."""
+
+    def __init__(self, cfg: ModelConfig, params: Dict, *,
+                 rules: ShardingRules = NO_RULES,
+                 sampler: SamplerConfig = SamplerConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.rules = rules
+        self.sample = make_sampler(sampler)
+
+        def _prefill(params, batch, cache):
+            cache, logits = M.prefill(cfg, params, batch, cache, rules)
+            return cache, logits
+
+        def _decode(params, token, cache, key):
+            cache, logits = M.decode_step(cfg, params, token, cache, rules)
+            nxt = self.sample(logits, key)
+            return cache, nxt
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(2,))
+
+    # ------------------------------------------------------------------
+    def generate(self, batch: Dict, max_new_tokens: int,
+                 *, max_len: Optional[int] = None,
+                 seed: int = 0) -> GenerateResult:
+        cfg = self.cfg
+        if "tokens" in batch:
+            b, s = batch["tokens"].shape
+        else:
+            b, s = batch["embeds"].shape[:2]
+        total = max_len or (s + max_new_tokens)
+        cache = M.init_cache(cfg, b, total)
+
+        t0 = time.perf_counter()
+        cache, logits = self._prefill(self.params, batch, cache)
+        key = jax.random.PRNGKey(seed)
+        tok = self.sample(logits, key)
+        jax.block_until_ready(tok)
+        t1 = time.perf_counter()
+
+        out = [tok]
+        for i in range(max_new_tokens - 1):
+            key = jax.random.fold_in(key, i)
+            cache, tok = self._decode(self.params, tok, cache, key)
+            out.append(tok)
+        jax.block_until_ready(out[-1])
+        t2 = time.perf_counter()
+
+        toks = jnp.stack(out, axis=1)
+        dec = max(t2 - t1, 1e-9)
+        return GenerateResult(
+            tokens=jax.device_get(toks).tolist(),
+            prefill_s=t1 - t0,
+            decode_s=dec,
+            tokens_per_s=b * max(max_new_tokens - 1, 1) / dec,
+        )
+
+
+# ---------------------------------------------------------------------------
+# serve_step / train-free entry points used by the dry-run
+# ---------------------------------------------------------------------------
+
+def make_serve_step(cfg: ModelConfig, rules: ShardingRules = NO_RULES):
+    """One decode step: (params, token (B,), cache) -> (cache, next (B,)).
+
+    Greedy sampling inside the step (argmax over the sharded vocab) keeps
+    the autoregressive loop device-side.
+    """
+
+    def serve_step(params, token, cache):
+        cache, logits = M.decode_step(cfg, params, token, cache, rules)
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return serve_step
+
+
+def make_prefill_step(cfg: ModelConfig, rules: ShardingRules = NO_RULES):
+    def prefill_step(params, batch, cache):
+        cache, logits = M.prefill(cfg, params, batch, cache, rules)
+        return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+    return prefill_step

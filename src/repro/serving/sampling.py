@@ -1,0 +1,67 @@
+"""Token samplers: greedy / temperature / top-k / nucleus (top-p).
+
+All samplers are jit-safe pure functions (B, V) fp32 logits -> (B,) int32.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplerConfig:
+    kind: str = "greedy"        # greedy | temperature | topk | topp
+    temperature: float = 1.0
+    top_k: int = 40
+    top_p: float = 0.9
+
+
+def greedy(logits: jax.Array, key: Optional[jax.Array] = None) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def temperature_sample(logits: jax.Array, key: jax.Array,
+                       temperature: float = 1.0) -> jax.Array:
+    t = max(temperature, 1e-4)
+    return jax.random.categorical(key, logits / t).astype(jnp.int32)
+
+
+def topk_sample(logits: jax.Array, key: jax.Array, k: int = 40,
+                temperature: float = 1.0) -> jax.Array:
+    vals, idx = jax.lax.top_k(logits, k)
+    t = max(temperature, 1e-4)
+    choice = jax.random.categorical(key, vals / t)
+    return jnp.take_along_axis(idx, choice[:, None], axis=-1)[:, 0] \
+        .astype(jnp.int32)
+
+
+def topp_sample(logits: jax.Array, key: jax.Array, p: float = 0.9,
+                temperature: float = 1.0) -> jax.Array:
+    t = max(temperature, 1e-4)
+    probs = jax.nn.softmax(logits / t, axis=-1)
+    sorted_probs = jnp.sort(probs, axis=-1)[:, ::-1]
+    csum = jnp.cumsum(sorted_probs, axis=-1)
+    # smallest set with cumulative mass >= p: keep tokens whose prob >= cutoff
+    cutoff_idx = jnp.sum(csum < p, axis=-1)
+    cutoff = jnp.take_along_axis(sorted_probs, cutoff_idx[:, None], axis=-1)
+    masked = jnp.where(probs >= cutoff, jnp.log(probs + 1e-30), -1e30)
+    return jax.random.categorical(key, masked).astype(jnp.int32)
+
+
+def make_sampler(cfg: SamplerConfig):
+    if cfg.kind == "greedy":
+        return lambda logits, key: greedy(logits)
+    if cfg.kind == "temperature":
+        return lambda logits, key: temperature_sample(
+            logits, key, cfg.temperature)
+    if cfg.kind == "topk":
+        return lambda logits, key: topk_sample(logits, key, cfg.top_k,
+                                               cfg.temperature)
+    if cfg.kind == "topp":
+        return lambda logits, key: topp_sample(logits, key, cfg.top_p,
+                                               cfg.temperature)
+    raise ValueError(f"unknown sampler {cfg.kind!r}")

@@ -1,0 +1,193 @@
+"""Optimizers: AdamW and Adafactor, with sharding-aware state layout.
+
+Implemented directly (no optax in the container).  Both return
+``(init_fn, update_fn)``:
+
+    state = init_fn(params)
+    new_params, new_state = update_fn(grads, state, params, lr)
+
+State dtypes are configurable — the big-arch configs keep moments in
+bfloat16 (halves optimizer HBM, the standard large-scale trade) while small
+models default to fp32.  Adafactor stores factored second moments (row+col
+statistics) for >=2-D parameters: O(n+m) instead of O(nm) state — the
+default for the 100B+ assigned architectures.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclasses.dataclass(frozen=True)
+class OptimizerConfig:
+    name: str = "adamw"             # adamw | adafactor | sgd
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.999
+    eps: float = 1e-8
+    weight_decay: float = 0.01
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"   # bfloat16 halves optimizer memory
+    # adafactor
+    decay_rate: float = 0.8
+    min_dim_factored: int = 128
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(sum(leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale
+                                   ).astype(g.dtype), grads), norm
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+
+def make_adamw(cfg: OptimizerConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, mdt)
+        return {"m": jax.tree.map(zeros, params),
+                "v": jax.tree.map(zeros, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        count = state["count"] + 1
+        b1c = 1.0 - cfg.b1 ** count.astype(jnp.float32)
+        b2c = 1.0 - cfg.b2 ** count.astype(jnp.float32)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m2 = cfg.b1 * m.astype(jnp.float32) + (1 - cfg.b1) * g32
+            v2 = cfg.b2 * v.astype(jnp.float32) + (1 - cfg.b2) * g32 * g32
+            mhat = m2 / b1c
+            vhat = v2 / b2c
+            step = mhat / (jnp.sqrt(vhat) + cfg.eps)
+            if cfg.weight_decay and p.ndim >= 2:     # no decay on norms/bias
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step
+            return p2.astype(p.dtype), m2.astype(mdt), v2.astype(mdt)
+
+        out = jax.tree.map(upd, params, grads, state["m"], state["v"])
+        new_params = jax.tree.map(lambda t: t[0], out,
+                                  is_leaf=lambda t: isinstance(t, tuple))
+        new_m = jax.tree.map(lambda t: t[1], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        new_v = jax.tree.map(lambda t: t[2], out,
+                             is_leaf=lambda t: isinstance(t, tuple))
+        return new_params, {"m": new_m, "v": new_v, "count": count}
+
+    return init, update
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (factored second moments, first moment omitted)
+# ---------------------------------------------------------------------------
+
+def _factored(shape, min_dim: int) -> bool:
+    return len(shape) >= 2 and shape[-1] >= min_dim and shape[-2] >= min_dim
+
+
+def make_adafactor(cfg: OptimizerConfig):
+    mdt = jnp.dtype(cfg.moment_dtype)
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape, cfg.min_dim_factored):
+                return {"vr": jnp.zeros(p.shape[:-1], mdt),
+                        "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], mdt)}
+            return {"v": jnp.zeros(p.shape, mdt)}
+        return {"s": jax.tree.map(st, params,
+                                  is_leaf=lambda x: hasattr(x, "shape")),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        count = state["count"] + 1
+        beta = 1.0 - count.astype(jnp.float32) ** (-cfg.decay_rate)
+
+        def upd(p, g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = g32 * g32 + 1e-30
+            if "vr" in s:
+                vr = beta * s["vr"].astype(jnp.float32) \
+                    + (1 - beta) * jnp.mean(g2, axis=-1)
+                vc = beta * s["vc"].astype(jnp.float32) \
+                    + (1 - beta) * jnp.mean(g2, axis=-2)
+                rfac = jax.lax.rsqrt(
+                    vr / jnp.mean(vr, axis=-1, keepdims=True) + 1e-30)
+                cfac = jax.lax.rsqrt(vc + 1e-30)
+                step = g32 * rfac[..., None] * cfac[..., None, :]
+                s2 = {"vr": vr.astype(mdt), "vc": vc.astype(mdt)}
+            else:
+                v = beta * s["v"].astype(jnp.float32) + (1 - beta) * g2
+                step = g32 * jax.lax.rsqrt(v + 1e-30)
+                s2 = {"v": v.astype(mdt)}
+            # relative step size (Adafactor update clipping)
+            rms = jnp.sqrt(jnp.mean(step * step) + 1e-30)
+            step = step / jnp.maximum(1.0, rms)
+            if cfg.weight_decay and p.ndim >= 2:
+                step = step + cfg.weight_decay * p.astype(jnp.float32)
+            p2 = p.astype(jnp.float32) - lr * step
+            return p2.astype(p.dtype), s2
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = tdef.flatten_up_to(grads)
+        flat_s = tdef.flatten_up_to(state["s"])
+        outs = [upd(p, g, s) for p, g, s in zip(flat_p, flat_g, flat_s)]
+        new_params = jax.tree.unflatten(tdef, [o[0] for o in outs])
+        new_s = jax.tree.unflatten(tdef, [o[1] for o in outs])
+        return new_params, {"s": new_s, "count": count}
+
+    return init, update
+
+
+def make_sgd(cfg: OptimizerConfig):
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, lr):
+        if cfg.grad_clip:
+            grads, _ = clip_by_global_norm(grads, cfg.grad_clip)
+        new = jax.tree.map(
+            lambda p, g: (p.astype(jnp.float32)
+                          - lr * g.astype(jnp.float32)).astype(p.dtype),
+            params, grads)
+        return new, {"count": state["count"] + 1}
+
+    return init, update
+
+
+def make_optimizer(cfg: OptimizerConfig):
+    if cfg.name == "adamw":
+        return make_adamw(cfg)
+    if cfg.name == "adafactor":
+        return make_adafactor(cfg)
+    if cfg.name == "sgd":
+        return make_sgd(cfg)
+    raise ValueError(f"unknown optimizer {cfg.name!r}")
+
+
+def lr_schedule(step, *, base: float, warmup: int = 100,
+                total: int = 10_000, kind: str = "cosine") -> jax.Array:
+    s = step.astype(jnp.float32) if hasattr(step, "astype") else float(step)
+    warm = jnp.minimum(1.0, (s + 1) / max(warmup, 1))
+    if kind == "cosine":
+        prog = jnp.clip((s - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        return base * warm * 0.5 * (1.0 + jnp.cos(jnp.pi * prog))
+    return base * warm

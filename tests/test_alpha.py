@@ -1,0 +1,79 @@
+"""Property tests (hypothesis) for HeteGen's distribution law (Eq. 4-9)."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import alpha as A
+
+speeds = st.floats(min_value=1e6, max_value=1e15, allow_nan=False,
+                   allow_infinity=False)
+
+
+@given(v_cpu=speeds, v_gpu=speeds, v_com=speeds)
+def test_alpha_in_unit_interval(v_cpu, v_gpu, v_com):
+    a = A.alpha_analytic(v_cpu, v_gpu, v_com)
+    assert 0.0 <= a <= 1.0
+
+
+@given(v_cpu=speeds, v_gpu=speeds, v_com=speeds)
+def test_alpha_balances_eq4(v_cpu, v_gpu, v_com):
+    """Plugging alpha* back into Eq. 4 balances host and device sides."""
+    a = A.alpha_analytic(v_cpu, v_gpu, v_com)
+    r = A.balance_residual(a, v_cpu, v_gpu, v_com)
+    scale = 1.0 / v_cpu + 1.0 / v_gpu + 1.0 / v_com
+    assert abs(r) <= 1e-9 * scale * 10
+
+
+@given(v_cpu=speeds, v_gpu=speeds, v_com=speeds, v_com2=speeds)
+def test_alpha_monotone_in_link_speed(v_cpu, v_gpu, v_com, v_com2):
+    """Faster link -> more work on the device."""
+    lo, hi = sorted((v_com, v_com2))
+    assert A.alpha_analytic(v_cpu, v_gpu, lo) <= \
+        A.alpha_analytic(v_cpu, v_gpu, hi) + 1e-12
+
+
+@given(v_cpu=speeds, v_gpu=speeds, v_com=speeds)
+def test_alpha_approx_upper_bounds_exact(v_cpu, v_gpu, v_com):
+    """Eq. 6 ignores device compute time, so it never assigns less to the
+    device than the exact law."""
+    assert A.alpha_approx(v_cpu, v_com) >= \
+        A.alpha_analytic(v_cpu, v_gpu, v_com) - 1e-12
+
+
+@given(t_cpu=st.floats(1e-6, 1e3), t_pin=st.floats(1e-6, 1e3),
+       t_trans=st.floats(1e-6, 1e3))
+def test_hybrid_uses_max_of_pin_trans(t_cpu, t_pin, t_trans):
+    a = A.alpha_hybrid(t_cpu, t_pin, t_trans)
+    assert a == A.alpha_from_times(t_cpu, max(t_pin, t_trans))
+    # hybrid never slower than pin+trans serialized (Fig. 5b -> 5c)
+    a_serial = A.alpha_from_times(t_cpu, t_pin + t_trans)
+    assert a >= a_serial - 1e-12
+
+
+@given(a=st.floats(0, 1), n=st.integers(1, 1 << 16))
+def test_quantize_alpha_tile_aligned(a, n):
+    q = A.quantize_alpha(a, n, tile=128)
+    cols = round(q * n)
+    assert 0 <= cols <= n
+    assert cols % 128 == 0 or cols == n
+    # quantization error bounded by one tile
+    assert abs(q - a) * n <= 128 + 1e-6
+
+
+@given(v_cpu=speeds, v_gpu=speeds, v_com=speeds,
+       n=st.sampled_from([1024, 4096, 28672]))
+def test_decide_consistency(v_cpu, v_gpu, v_com, n):
+    d = A.decide(n, n * 4096 * 2, v_cpu=v_cpu, v_gpu=v_gpu, v_com=v_com)
+    assert d.device_cols + d.host_cols == n
+    assert 0 <= d.alpha <= 1
+
+
+def test_paper_rig_alpha_regime():
+    """On the paper's A10 rig the law sends most decode weight to the CPU
+    (alpha well under 0.5) — the qualitative claim behind Fig. 1/3."""
+    from repro.core.hw import PAPER_A10
+    a = A.alpha_analytic(PAPER_A10.v_cpu(1.0), PAPER_A10.v_gpu(1.0),
+                         PAPER_A10.v_com())
+    assert 0.05 < a < 0.35

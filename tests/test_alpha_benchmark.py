@@ -1,0 +1,41 @@
+"""The alpha benchmark recovers a planted equilibrium (Eq. 10-12)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.alpha_benchmark import probe_schedule, refine_alpha
+
+
+@given(true_alpha=st.floats(0.1, 0.9), noise=st.floats(0, 0.005),
+       quad=st.floats(0, 0.3))
+@settings(max_examples=30, deadline=None)
+def test_recovers_planted_equilibrium(true_alpha, noise, quad):
+    """T_cpu(a) decreasing, T_com(a) increasing (with curvature + noise),
+    crossing exactly at true_alpha: the fit must find it."""
+    rng = np.random.default_rng(42)
+
+    def t_cpu(a):
+        base = (1 - a) + quad * (1 - a) ** 2
+        return base + rng.normal(0, noise)
+
+    def t_com(a):
+        cross = (1 - true_alpha) + quad * (1 - true_alpha) ** 2
+        return cross * a / true_alpha + rng.normal(0, noise)
+
+    # start from a biased prior (the paper refines a misestimated alpha0)
+    prior = min(max(true_alpha * 1.15, 0.02), 0.98)
+    fit = refine_alpha(t_cpu, t_com, prior, gamma=0.2, lam=0.02)
+    assert abs(fit.alpha - true_alpha) < 0.05 + 10 * noise
+
+
+def test_probe_schedule_bounds():
+    probes = probe_schedule(0.05, gamma=0.1, lam=0.02)
+    assert all(0.0 <= p <= 1.0 for p in probes)
+    assert len(probes) >= 3
+
+
+def test_fit_result_fields():
+    fit = refine_alpha(lambda a: 1 - a, lambda a: a, 0.4, gamma=0.1,
+                       lam=0.05)
+    assert abs(fit.alpha - 0.5) < 0.02
+    assert fit.predicted_time > 0
+    assert len(fit.probes) == len(fit.t_cpu) == len(fit.t_com)

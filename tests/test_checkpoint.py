@@ -1,0 +1,73 @@
+"""Sharded async checkpointing: roundtrip, atomicity, GC, elastic restore."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+
+
+def _state(key=0):
+    k = jax.random.PRNGKey(key)
+    return {"params": {"w": jax.random.normal(k, (16, 8)),
+                       "b": jnp.zeros((8,))},
+            "step": jnp.asarray(7, jnp.int32)}
+
+
+def test_roundtrip(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    st = _state()
+    mgr.save(7, st)
+    back = mgr.restore(7, jax.tree.map(jnp.zeros_like, st))
+    for a, b in zip(jax.tree.leaves(st), jax.tree.leaves(back)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_async_save_and_latest(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=True)
+    for s in (1, 2, 3):
+        mgr.save(s, _state(s))
+    mgr.wait()
+    assert mgr.list_steps() == [1, 2, 3]
+    back = mgr.restore_latest(jax.tree.map(jnp.zeros_like, _state()))
+    np.testing.assert_array_equal(back["step"], _state(3)["step"])
+
+
+def test_gc_keeps_last_k(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), keep=2, async_save=False)
+    for s in range(5):
+        mgr.save(s, _state(s))
+    assert mgr.list_steps() == [3, 4]
+
+
+def test_no_partial_checkpoint_visible(tmp_path):
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    mgr.save(1, _state())
+    # a stale tmp dir must not be listed
+    os.makedirs(os.path.join(str(tmp_path), "step_000000099.tmp"))
+    assert mgr.list_steps() == [1]
+
+
+def test_elastic_restore_from_shard_slices(tmp_path):
+    """Manifest index ranges reassemble a DIFFERENT slicing on restore."""
+    import json
+    import shutil
+    mgr = CheckpointManager(str(tmp_path), async_save=False)
+    w = jnp.arange(64, dtype=jnp.float32).reshape(8, 8)
+    mgr.save(1, {"w": w})
+    # split the saved single shard into two half-shards, as if written by
+    # two hosts of a previous topology
+    d = os.path.join(str(tmp_path), "step_000000001")
+    man = json.load(open(os.path.join(d, "manifest.json")))
+    data = np.load(os.path.join(d, man["leaves"][0]["shards"][0]["file"]))
+    np.save(os.path.join(d, "leaf_00000_shard_000.npy"), data[:4])
+    np.save(os.path.join(d, "leaf_00000_shard_001.npy"), data[4:])
+    man["leaves"][0]["shards"] = [
+        {"file": "leaf_00000_shard_000.npy", "index": [[0, 4], [0, 8]]},
+        {"file": "leaf_00000_shard_001.npy", "index": [[4, 8], [0, 8]]},
+    ]
+    json.dump(man, open(os.path.join(d, "manifest.json"), "w"))
+    back = mgr.restore(1, {"w": jnp.zeros((8, 8), jnp.float32)})
+    np.testing.assert_array_equal(back["w"], w)

@@ -1,0 +1,46 @@
+"""Data pipeline: determinism, packing, prefetch, learnability."""
+import numpy as np
+
+from repro.data.pipeline import (ByteTokenizer, PackedLMDataset, Prefetcher,
+                                 synthetic_corpus)
+
+
+def test_tokenizer_roundtrip():
+    tok = ByteTokenizer()
+    s = "HeteGen: héllo ✓"
+    assert tok.decode(tok.encode(s)) == s
+
+
+def test_corpus_deterministic():
+    a = synthetic_corpus(8, vocab=100, seed=3)
+    b = synthetic_corpus(8, vocab=100, seed=3)
+    assert all((x == y).all() for x, y in zip(a, b))
+    assert all((0 <= d).all() and (d < 100).all() for d in a)
+
+
+def test_packing_labels_shifted():
+    docs = synthetic_corpus(16, vocab=50, seed=0)
+    ds = PackedLMDataset(docs, batch=4, seq=32)
+    b = next(iter(ds))
+    assert b["tokens"].shape == (4, 32)
+    assert b["labels"].shape == (4, 32)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_prefetcher_yields_everything():
+    items = [{"i": np.asarray(i)} for i in range(10)]
+    out = list(Prefetcher(iter(items), depth=3))
+    assert [int(x["i"]) for x in out] == list(range(10))
+
+
+def test_motif_structure_is_learnable():
+    """Within-motif bigrams repeat: conditional entropy well below uniform."""
+    docs = synthetic_corpus(64, vocab=200, seed=1, motif_len=8, n_motifs=8)
+    stream = np.concatenate(docs)
+    pairs = {}
+    for a, b in zip(stream[:-1], stream[1:]):
+        pairs.setdefault(int(a), []).append(int(b))
+    # most tokens have a dominant successor
+    dom = [max(np.bincount(v).max() / len(v) for _ in [0])
+           for v in pairs.values() if len(v) > 10]
+    assert np.mean(dom) > 0.5

@@ -1,0 +1,121 @@
+"""Distribution: dry-run on a tiny mesh in a subprocess (the 512-device
+override must not leak into this test process), spec derivation rules."""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+def test_specs_param_rules():
+    import jax
+    from repro.configs import get_config, reduced
+    from repro.distributed.shardings import ShardingRules
+    from repro.distributed import specs as SP
+    from repro.models import model as M
+
+    cfg = get_config("mistral-nemo-12b")
+    rules = ShardingRules(
+        table=ShardingRules().table,
+        mesh_axes=("data", "model"),
+        mesh_shape={"data": 16, "model": 16})
+    pshape = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    pspec = SP.param_specs(cfg, rules, pshape)
+    flat = {jax.tree_util.keystr(kp): v for kp, v in
+            jax.tree_util.tree_flatten_with_path(pspec)[0]}
+    wq = [v for k, v in flat.items() if k.endswith("['wq']")][0]
+    assert wq[-1] == "model"                       # column-parallel
+    wo = [v for k, v in flat.items() if k.endswith("['wo']")][0]
+    assert wo[-2] == "model"                       # row-parallel
+    emb = flat["['embed']"]
+    assert emb[0] == "model"                       # vocab-sharded
+
+
+def test_fsdp_2d_sharding():
+    import jax
+    from repro.configs import get_config
+    from repro.distributed.shardings import ShardingRules
+    from repro.distributed import specs as SP
+    from repro.models import model as M
+
+    cfg = get_config("nemotron-4-340b")
+    assert cfg.fsdp
+    rules = ShardingRules(
+        table=ShardingRules().table, mesh_axes=("data", "model"),
+        mesh_shape={"data": 16, "model": 16})
+    pshape = jax.eval_shape(lambda k: M.init_params(cfg, k),
+                            jax.random.PRNGKey(0))
+    pspec = SP.param_specs(cfg, rules, pshape)
+    flat = {jax.tree_util.keystr(kp): v for kp, v in
+            jax.tree_util.tree_flatten_with_path(pspec)[0]}
+    w_in = [v for k, v in flat.items() if k.endswith("['w_in']")][0]
+    assert w_in[-2] == "data" and w_in[-1] == "model"   # 2D sharded
+
+
+def test_rules_divisibility_guard():
+    from repro.distributed.shardings import ShardingRules
+    rules = ShardingRules(
+        table=ShardingRules().table, mesh_axes=("data", "model"),
+        mesh_shape={"data": 16, "model": 16})
+    # 8 kv heads cannot shard 16 ways -> replicated
+    spec = rules.spec_for_shape((2, 128, 8, 64),
+                                "batch", None, "kv_heads", None)
+    assert spec[2] is None
+    # batch 2 can't take data 16 either
+    assert spec[0] is None
+
+
+def test_rules_conflict_resolution():
+    from repro.distributed.shardings import ShardingRules
+    rules = ShardingRules(
+        table={**ShardingRules().table, "seq": ("model",)},
+        mesh_axes=("data", "model"),
+        mesh_shape={"data": 16, "model": 16})
+    spec = rules.spec_for_shape((32, 4096, 64, 128),
+                                "batch", "seq", "heads", None)
+    assert spec[2] == "model" and spec[1] is None  # heads win over seq
+
+
+@pytest.mark.slow
+def test_tiny_mesh_dryrun_subprocess(tmp_path):
+    """Full dryrun machinery on a 2x2 mesh with a reduced config."""
+    code = f"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import jax, jax.numpy as jnp, json
+from repro.configs import get_config, reduced, register
+from repro.launch.mesh import make_mesh
+from repro.launch import dryrun as DR
+cfg = reduced(get_config("mistral-nemo-12b"))
+register(cfg)
+mesh = make_mesh((2, 2), ("data", "model"))
+fn, inputs, in_sh, out_sh, donate, meta = DR.build_cell(cfg, "decode_32k",
+                                                        mesh)
+from repro.models import model as M
+pshape = jax.eval_shape(lambda k: M.init_params(cfg, k), jax.random.PRNGKey(0))
+import repro.configs.shapes as SH
+ins = SH.input_specs(cfg, "decode_32k", batch_override=4)
+from repro.distributed import specs as SP
+from repro.distributed.shardings import ShardingRules
+rules = ShardingRules.for_mesh(mesh)
+cspec = SP.named(mesh, SP.cache_specs(cfg, rules, ins["cache"]))
+tspec = SP.named(mesh, SP.batch_specs(cfg, rules, ins["token"]))
+pspec = SP.named(mesh, SP.param_specs(cfg, rules, pshape))
+from repro.serving.engine import make_serve_step
+step = make_serve_step(cfg, rules)
+c = jax.jit(step, in_shardings=(pspec, tspec, cspec),
+            out_shardings=(cspec, tspec)).lower(
+    pshape, ins["token"], ins["cache"]).compile()
+print("MEM", c.memory_analysis().temp_size_in_bytes)
+from repro.analysis.hlo_cost import HloCostAnalyzer
+rep = HloCostAnalyzer(c.as_text(), max_bytes_per_elem=2).entry_cost()
+assert rep.flops > 0
+print("TINY_DRYRUN_OK")
+"""
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=560,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert "TINY_DRYRUN_OK" in r.stdout, r.stdout[-500:] + r.stderr[-2000:]

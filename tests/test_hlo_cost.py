@@ -1,0 +1,84 @@
+"""The trip-count-aware HLO analyzer against known programs."""
+import subprocess
+import sys
+import textwrap
+
+
+def test_analyzer_on_known_program():
+    """Subprocess (needs multi-device XLA flags before jax import):
+    scanned matmul with known flops / collective bytes."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import jax, jax.numpy as jnp
+        from jax.sharding import PartitionSpec as P, NamedSharding
+        from repro.analysis.hlo_cost import HloCostAnalyzer
+        mesh = jax.make_mesh((2, 4), ("data", "model"),
+                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        L = 7
+        def step(w, x):
+            def body(c, _):
+                return jnp.tanh(c @ w), ()
+            c, _ = jax.lax.scan(body, x, None, length=L)
+            return c.sum()
+        ws = NamedSharding(mesh, P(None, "model"))
+        xs = NamedSharding(mesh, P("data", None))
+        w = jax.ShapeDtypeStruct((256, 256), jnp.float32)
+        x = jax.ShapeDtypeStruct((64, 256), jnp.float32)
+        c = jax.jit(step, in_shardings=(ws, xs),
+                    out_shardings=NamedSharding(mesh, P())).lower(w, x
+                    ).compile()
+        rep = HloCostAnalyzer(c.as_text()).entry_cost()
+        expect_flops = L * 2 * 32 * 256 * 64          # per device
+        assert abs(rep.flops - expect_flops) / expect_flops < 0.01, rep.flops
+        expect_ag = L * 32 * 256 * 4 * 3 / 4          # ring all-gather wire
+        ag = rep.collective_bytes.get("all-gather", 0)
+        assert abs(ag - expect_ag) / expect_ag < 0.01, ag
+        print("ANALYZER_OK")
+    """)
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, timeout=300,
+                       env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                            "HOME": "/root"})
+    assert "ANALYZER_OK" in r.stdout, r.stdout + r.stderr
+
+
+def test_parse_tuple_types():
+    from repro.analysis.hlo_cost import parse_hlo
+    txt = """
+ENTRY %main.1 (p0: f32[4,4]) -> f32[4,4] {
+  %p0 = f32[4,4]{1,0} parameter(0)
+  %w.1 = (s32[], f32[4,4]{1,0}, /*index=2*/f32[8]{0}) while(%t), condition=%c, body=%b
+  ROOT %r = f32[4,4]{1,0} add(%p0, %p0)
+}
+"""
+    comps = parse_hlo(txt)
+    ops = [i.op for i in comps["main.1"].instructions]
+    assert "while" in ops and "add" in ops
+
+
+def test_ring_formulas():
+    from repro.analysis.hlo_cost import HloCostAnalyzer
+    txt = """
+ENTRY %main.1 (p0: f32[1024]) -> f32[1024] {
+  %p0 = f32[1024]{0} parameter(0)
+  ROOT %ar = f32[1024]{0} all-reduce(%p0), replica_groups=[1,8]<=[8], to_apply=%add
+}
+"""
+    rep = HloCostAnalyzer(txt).entry_cost()
+    expect = 2 * 1024 * 4 * 7 / 8
+    assert abs(rep.collective_bytes["all-reduce"] - expect) < 1
+
+
+def test_trip_count_extraction():
+    from repro.analysis.hlo_cost import Computation, Instruction, _trip_count, parse_hlo
+    txt = """
+%cond.1 (arg: (s32[], f32[2])) -> pred[] {
+  %arg = (s32[], f32[2]) parameter(0)
+  %i = s32[] get-tuple-element(%arg), index=0
+  %n = s32[] constant(40)
+  ROOT %lt = pred[] compare(%i, %n), direction=LT
+}
+"""
+    comps = parse_hlo(txt)
+    assert _trip_count(comps["cond.1"]) == 40

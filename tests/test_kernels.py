@@ -1,0 +1,130 @@
+"""Per-kernel validation: interpret=True vs the pure-jnp oracles in
+kernels/ref.py, swept over shapes and dtypes."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels import ops, ref
+
+ops.set_mode("interpret")
+
+
+def _rand(rng, shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape), dtype)
+
+
+@pytest.mark.parametrize("m,k,n", [(128, 128, 128), (256, 512, 384),
+                                   (128, 256, 512)])
+@pytest.mark.parametrize("act", [None, "relu", "relu2", "gelu", "silu"])
+def test_matmul_shapes_acts(rng, m, k, n, act):
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    b = _rand(rng, (n,))
+    got = ops.matmul(x, w, b, activation=act)
+    want = ref.matmul(x, w, b, activation=act)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_matmul_dtypes(rng, dtype):
+    x = _rand(rng, (128, 128)).astype(dtype)
+    w = _rand(rng, (128, 128)).astype(dtype)
+    got = ops.matmul(x, w)
+    want = ref.matmul(x, w)
+    tol = 1e-4 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(got, np.float32),
+                               np.asarray(want, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_gated_matmul(rng):
+    x, wg, wu = _rand(rng, (128, 256)), _rand(rng, (256, 256)), \
+        _rand(rng, (256, 256))
+    got = ops.gated_matmul(x, wg, wu)
+    # silu amplifies blocked-K accumulation differences at large |gate|
+    np.testing.assert_allclose(got, ref.gated_matmul(x, wg, wu),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_q8_matmul(rng):
+    x, w = _rand(rng, (128, 256)), _rand(rng, (256, 384))
+    q, s = ops.quantize_weights(w)
+    got = ops.q8_matmul(x, q, s)
+    want = ref.q8_matmul(x, q, s)
+    np.testing.assert_allclose(got, want, rtol=1e-3, atol=1e-3)
+    # and dequantized result approximates the fp matmul within quant error
+    full = np.asarray(x) @ np.asarray(w)
+    assert np.abs(np.asarray(got) - full).max() / np.abs(full).max() < 0.05
+
+
+@pytest.mark.parametrize("causal,window,softcap", [
+    (True, None, None), (False, None, None),
+    (True, 64, None), (True, None, 20.0)])
+def test_flash_attention(rng, causal, window, softcap):
+    b, hq, hkv, s, d = 2, 4, 2, 256, 64
+    q = _rand(rng, (b, hq, s, d))
+    k = _rand(rng, (b, hkv, s, d))
+    v = _rand(rng, (b, hkv, s, d))
+    got = ops.flash_attention(q, k, v, causal=causal, window=window,
+                              softcap=softcap, block_q=64, block_kv=64)
+    want = ref.flash_attention(q, k, v, causal=causal, window=window,
+                               softcap=softcap)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 4), (4, 2), (8, 1)])
+def test_flash_attention_gqa_ratios(rng, hq, hkv):
+    b, s, d = 1, 128, 32
+    q = _rand(rng, (b, hq, s, d))
+    k = _rand(rng, (b, hkv, s, d))
+    v = _rand(rng, (b, hkv, s, d))
+    got = ops.flash_attention(q, k, v, block_q=64, block_kv=64)
+    want = ref.flash_attention(q, k, v)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention(rng):
+    b, hq, hkv, s, d = 3, 4, 2, 256, 64
+    q = _rand(rng, (b, hq, d))
+    k = _rand(rng, (b, hkv, s, d))
+    v = _rand(rng, (b, hkv, s, d))
+    kv_len = jnp.asarray([17, 100, 256], jnp.int32)
+    got = ops.decode_attention(q, k, v, kv_len, block_kv=64)
+    want = ref.decode_attention(q, k, v, kv_len)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_decode_attention_matches_flash_last_row(rng):
+    """decode(q_last) == flash(full)[last] when kv_len == s."""
+    b, hq, hkv, s, d = 1, 4, 2, 128, 32
+    q = _rand(rng, (b, hq, s, d))
+    k = _rand(rng, (b, hkv, s, d))
+    v = _rand(rng, (b, hkv, s, d))
+    full = ref.flash_attention(q, k, v, causal=True)
+    got = ops.decode_attention(q[:, :, -1], k, v,
+                               jnp.asarray([s], jnp.int32), block_kv=64)
+    np.testing.assert_allclose(got, full[:, :, -1], rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("shape", [(4, 128), (2, 33, 128), (3, 5, 7, 256)])
+@pytest.mark.parametrize("plus_one", [False, True])
+def test_rmsnorm(rng, shape, plus_one):
+    x = _rand(rng, shape)
+    s = _rand(rng, (shape[-1],))
+    got = ops.rmsnorm(x, s, plus_one=plus_one)
+    want = ref.rmsnorm(x, s, plus_one=plus_one)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_ssd_chunk_vs_oracle_and_recurrent(rng):
+    from repro.models.ssm import ssd_recurrent
+    b, l, h, p, n, ch = 2, 64, 3, 16, 8, 16
+    x = _rand(rng, (b, l, h, p))
+    dt = jnp.abs(_rand(rng, (b, l, h))) * 0.5
+    a = -jnp.abs(_rand(rng, (h,))) * 0.5
+    bm = _rand(rng, (b, l, h, n))
+    cm = _rand(rng, (b, l, h, n))
+    y_k, sc_k, cum_k = ops.ssd_chunk(x, dt, a, bm, cm, chunk=ch)
+    y_r, sc_r, cum_r = ref.ssd_chunk(x, dt, a, bm, cm, chunk=ch)
+    np.testing.assert_allclose(y_k, y_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(sc_k, sc_r, rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(cum_k, cum_r, rtol=2e-5, atol=2e-5)

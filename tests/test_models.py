@@ -1,0 +1,111 @@
+"""Per-arch smoke tests on reduced configs: one forward/train step on CPU,
+shape + finiteness checks, and prefill+decode teacher-forcing exactness."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ASSIGNED_ARCHS, get_config, reduced
+from repro.models import model as M
+
+
+def _batch_for(cfg, rng, B=2, S=24):
+    batch = {}
+    if cfg.embeds_input:
+        batch["embeds"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg.d_model)), jnp.float32)
+    else:
+        batch["tokens"] = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32)
+    if cfg.family == "encdec":
+        batch["enc_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg.encoder_seq, cfg.d_model)),
+            jnp.float32)
+        batch.setdefault("tokens", jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (B, S)), jnp.int32))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_forward(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    batch = _batch_for(cfg, rng)
+    logits = M.forward_train(cfg, params, batch)
+    B = 2
+    assert logits.shape == (B, 24, cfg.vocab_size)
+    assert bool(jnp.isfinite(logits).all())
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_smoke_train_step(arch, rng):
+    from repro.train.loop import TrainConfig, make_train_step, init_state
+    from repro.train.optimizer import OptimizerConfig
+    cfg = reduced(get_config(arch))
+    tcfg = TrainConfig(accum_steps=1, optimizer=OptimizerConfig(lr=1e-3))
+    state = init_state(cfg, tcfg, jax.random.PRNGKey(0))
+    step, _ = make_train_step(cfg, tcfg)
+    batch = _batch_for(cfg, rng, B=2, S=16)
+    batch["labels"] = jnp.zeros((2, 16), jnp.int32) if "tokens" not in batch \
+        else batch["tokens"]
+    state2, metrics = jax.jit(step)(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert int(state2["step"]) == 1
+
+
+@pytest.mark.parametrize("arch", ASSIGNED_ARCHS)
+def test_decode_matches_teacher_forcing(arch, rng):
+    cfg = reduced(get_config(arch))
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    B, S, S0 = 2, 24, 16
+    batch = _batch_for(cfg, rng, B, S)
+    full = M.forward_train(cfg, params, batch)
+    cache = M.init_cache(cfg, B, S)
+    pb = dict(batch)
+    for key in ("tokens", "embeds"):
+        if key in pb:
+            pb[key] = pb[key][:, :S0]
+    cache, logits = M.prefill(cfg, params, pb, cache)
+    scale = float(jnp.abs(full).max()) + 1e-6
+    assert float(jnp.abs(logits - full[:, S0 - 1]).max()) / scale < 3e-5
+    if cfg.embeds_input:
+        return
+    toks = batch["tokens"]
+    for t in range(S0, S):
+        cache, logits = M.decode_step(cfg, params, toks[:, t], cache)
+        err = float(jnp.abs(logits - full[:, t]).max()) / scale
+        assert err < 3e-5, (arch, t, err)
+
+
+def test_param_counts_match_published():
+    expect = {
+        "llama4-maverick-400b-a17b": (400e9, 0.10),
+        "llama4-scout-17b-16e": (109e9, 0.05),
+        "nemotron-4-340b": (340e9, 0.02),
+        "gemma2-2b": (2.6e9, 0.05),
+        "mistral-nemo-12b": (12.2e9, 0.02),
+        "minicpm3-4b": (4.0e9, 0.05),
+        "llava-next-mistral-7b": (7.2e9, 0.02),
+        "whisper-small": (0.24e9, 0.15),
+        "zamba2-1.2b": (1.2e9, 0.05),
+        "mamba2-2.7b": (2.7e9, 0.03),
+    }
+    for arch, (n, tol) in expect.items():
+        got = get_config(arch).param_count()
+        assert abs(got - n) / n < tol, (arch, got, n)
+
+
+def test_moe_active_params():
+    cfg = get_config("llama4-scout-17b-16e")
+    active = cfg.active_param_count()
+    assert 15e9 < active < 19e9            # "17B active"
+    mav = get_config("llama4-maverick-400b-a17b")
+    assert mav.active_param_count() < 0.06 * mav.param_count()
+
+
+def test_long_context_eligibility():
+    assert get_config("mamba2-2.7b").sub_quadratic
+    assert get_config("zamba2-1.2b").sub_quadratic
+    for a in ASSIGNED_ARCHS:
+        if a not in ("mamba2-2.7b", "zamba2-1.2b"):
+            assert not get_config(a).sub_quadratic, a

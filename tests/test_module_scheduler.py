@@ -1,0 +1,54 @@
+"""Gain-ranked residency promotion (Eq. 13)."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.module_scheduler import ModuleInfo, dynamic_range, schedule
+
+mods = st.lists(
+    st.tuples(st.floats(1e3, 1e9), st.floats(1e-6, 1.0),
+              st.integers(1, 8)),
+    min_size=1, max_size=40)
+
+
+@given(mods=mods, budget=st.floats(0, 2e9))
+def test_budget_never_exceeded(mods, budget):
+    infos = [ModuleInfo(f"m{i}", b, t, c) for i, (b, t, c) in enumerate(mods)]
+    plan = schedule(infos, budget)
+    assert plan.used_bytes <= budget + 1e-6
+    assert set(plan.resident) | set(plan.offloaded) == \
+        {m.name for m in infos}
+    assert not (set(plan.resident) & set(plan.offloaded))
+
+
+@given(mods=mods)
+def test_greedy_prefers_higher_gain(mods):
+    infos = [ModuleInfo(f"m{i}", b, t, c) for i, (b, t, c) in enumerate(mods)]
+    # budget fits exactly the single highest-gain module
+    best = max(infos, key=lambda m: m.gain)
+    plan = schedule(infos, best.mem_bytes)
+    assert best.name in plan.resident
+
+
+@given(mods=mods, budget=st.floats(1e3, 2e9))
+def test_time_saved_matches_residents(mods, budget):
+    infos = [ModuleInfo(f"m{i}", b, t, c) for i, (b, t, c) in enumerate(mods)]
+    plan = schedule(infos, budget)
+    by_name = {m.name: m for m in infos}
+    expect = sum(by_name[n].t_cpu * by_name[n].calls for n in plan.resident)
+    assert abs(plan.time_saved - expect) < 1e-6 * max(expect, 1)
+
+
+def test_reuse_scales_gain():
+    """A module called 7x/step (zamba2's shared block) outranks an
+    identical single-call module."""
+    a = ModuleInfo("shared", 1e6, 0.01, calls=7)
+    b = ModuleInfo("plain", 1e6, 0.01, calls=1)
+    assert a.gain > b.gain
+    plan = schedule([a, b], 1e6)
+    assert plan.resident == ["shared"]
+
+
+def test_dynamic_range():
+    infos = [ModuleInfo(f"m{i}", 1e6, 0.01) for i in range(10)]
+    r = dynamic_range(infos, overhead_bytes=5e5)
+    assert 0 < r["min_fraction"] < r["max_fraction"] <= 1.0

@@ -1,0 +1,76 @@
+"""The paper's runtime: offloaded generation == resident generation, and
+scheduling behaves per the hardware model."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.engine import Generator
+from repro.serving.offload_runtime import OffloadGenerator, enumerate_linears
+
+
+@pytest.fixture(scope="module")
+def opt_setup():
+    cfg = reduced(get_config("opt-6.7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+@pytest.mark.parametrize("budget", [0, 200_000, None])
+def test_offload_matches_resident(opt_setup, rng, budget):
+    cfg, params = opt_setup
+    prompt = rng.integers(0, cfg.vocab_size, (2, 8)).astype(np.int32)
+    ref = Generator(cfg, params).generate(
+        {"tokens": jnp.asarray(prompt)}, 6)
+    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=budget)
+    res = off.generate(prompt, 6)
+    assert res["tokens"].tolist() == ref.tokens
+    off.close()
+
+
+def test_alpha_override_still_exact(opt_setup, rng):
+    cfg, params = opt_setup
+    prompt = rng.integers(0, cfg.vocab_size, (1, 6)).astype(np.int32)
+    ref = Generator(cfg, params).generate(
+        {"tokens": jnp.asarray(prompt)}, 4)
+    for alpha in (0.0, 0.3, 1.0):
+        off = OffloadGenerator(cfg, params, hw=PAPER_A10,
+                               budget_bytes=0, alpha_override=alpha)
+        res = off.generate(prompt, 4)
+        assert res["tokens"].tolist() == ref.tokens, alpha
+        off.close()
+
+
+def test_scheduler_promotes_under_budget(opt_setup):
+    cfg, params = opt_setup
+    linears = enumerate_linears(cfg)
+    total = sum(s.nbytes for s in linears)
+    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=total * 2)
+    # ample budget: everything resident
+    assert all(p.mode == "resident" for p in off.policy.plan)
+    off.close()
+    off0 = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0)
+    assert all(p.mode == "hetegen" for p in off0.policy.plan)
+    assert 0.0 < off0.policy.alpha < 1.0
+    off0.close()
+
+
+def test_gqa_model_supported(rng):
+    cfg = reduced(get_config("mistral-nemo-12b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(2))
+    prompt = rng.integers(0, cfg.vocab_size, (1, 8)).astype(np.int32)
+    ref = Generator(cfg, params).generate({"tokens": jnp.asarray(prompt)}, 4)
+    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0)
+    res = off.generate(prompt, 4)
+    assert res["tokens"].tolist() == ref.tokens
+    off.close()
+
+
+def test_unsupported_family_raises():
+    cfg = reduced(get_config("mamba2-2.7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        OffloadGenerator(cfg, params)

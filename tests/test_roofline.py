@@ -1,0 +1,56 @@
+"""Roofline machinery: record enrichment, floors, memory model sanity."""
+import json
+
+import pytest
+
+from repro.analysis.roofline import enrich, ideal_seconds, model_flops
+
+
+def _fake_record(arch="mistral-nemo-12b", shape="decode_32k"):
+    return {
+        "arch": arch, "shape": shape, "mesh": "single", "status": "ok",
+        "mesh_shape": {"data": 16, "model": 16},
+        "hlo": {"flops_per_device": 2e10, "bytes_per_device": 7e9,
+                "collective_bytes": {"all-reduce": 2e7},
+                "collective_wire_bytes_total": 2e7, "collective_count": 5},
+        "memory": {}, "xla_cost": {},
+    }
+
+
+def test_enrich_terms_and_dominant():
+    e = enrich(_fake_record())
+    assert set(e["terms"]) == {"compute_s", "memory_s", "collective_s"}
+    assert e["dominant"] == "memory_s"
+    assert 0 < e["roofline_fraction"] <= 1.5
+
+
+def test_model_flops_shapes():
+    f_train = model_flops("mistral-nemo-12b", "train_4k")
+    f_prefill = model_flops("mistral-nemo-12b", "prefill_32k")
+    f_decode = model_flops("mistral-nemo-12b", "decode_32k")
+    assert f_train == pytest.approx(6 * 12.25e9 * 256 * 4096, rel=0.05)
+    assert f_prefill == pytest.approx(2 * 12.25e9 * 32 * 32768, rel=0.05)
+    assert f_decode == pytest.approx(2 * 12.25e9 * 128, rel=0.05)
+
+
+def test_moe_uses_active_params():
+    dense = model_flops("mistral-nemo-12b", "decode_32k") / 12.25e9
+    moe = model_flops("llama4-scout-17b-16e", "decode_32k") / 17.2e9
+    assert moe == pytest.approx(dense, rel=0.1)
+
+
+def test_ideal_floor_decode_memory_bound():
+    i = ideal_seconds("mistral-nemo-12b", "decode_32k", 256)
+    assert i["memory"] > i["compute"]          # decode is HBM-bound
+    # params 24.5GB + cache ~2.7GB/chip-equivalent: floor in ~ms range
+    assert 1e-3 < i["floor"] < 20e-3
+
+
+def test_int8_kv_halves_cache_floor():
+    import dataclasses
+    from repro.configs import get_config
+    from repro.models.config import kv_cache_bytes
+    cfg = get_config("mistral-nemo-12b")
+    cfg8 = dataclasses.replace(cfg, kv_dtype="int8")
+    assert kv_cache_bytes(cfg8, 128, 32768) == \
+        kv_cache_bytes(cfg, 128, 32768) // 2

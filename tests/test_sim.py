@@ -1,0 +1,97 @@
+"""Discrete-event simulator invariants + paper-qualitative behavior."""
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.hw import PAPER_A10
+from repro.core.sim import SimModule, run_strategy, simulate_step, Placement
+
+
+def _opt_modules(layers=8, d=4096, f=16384):
+    mods = []
+    for l in range(layers):
+        mods.append(SimModule(f"l{l}.qkv", "linear", d * 3 * d * 2, 3 * d,
+                              "attn", 2 * d * 3 * d))
+        mods.append(SimModule(f"l{l}.attn", "attn_core", 0, 0, "attn",
+                              4 * d * 512, cache_bytes=2 * d * 512 * 2))
+        mods.append(SimModule(f"l{l}.o", "linear", d * d * 2, d, "attn",
+                              2 * d * d))
+        mods.append(SimModule(f"l{l}.up", "linear", d * f * 2, f, "mlp",
+                              2 * d * f))
+        mods.append(SimModule(f"l{l}.down", "linear", f * d * 2, d, "mlp",
+                              2 * d * f))
+    return mods
+
+
+STRATS = ["resident", "naive_offload", "sync_offload", "hetegen_basic",
+          "hetegen_pinned", "hetegen"]
+
+
+@pytest.mark.parametrize("strategy", STRATS)
+def test_utilization_bounded(strategy):
+    r = run_strategy(_opt_modules(), strategy, PAPER_A10)
+    for s, u in r.utilization.items():
+        assert 0.0 <= u <= 1.0 + 1e-9, (s, u)
+    assert r.step_time > 0
+
+
+def test_strategy_ordering_matches_paper():
+    """resident < hetegen < fig5b < fig5a-style < sync < naive (Fig. 5/8)."""
+    t = {s: run_strategy(_opt_modules(), s, PAPER_A10).step_time
+         for s in STRATS}
+    assert t["resident"] < t["hetegen"] < t["hetegen_pinned"]
+    assert t["hetegen"] < t["hetegen_basic"]
+    assert t["hetegen"] < t["sync_offload"] < t["naive_offload"]
+
+
+def test_hetegen_streams_busy():
+    """Table 2: CPU and I/O near-fully utilized, pin below I/O, device ~idle."""
+    r = run_strategy(_opt_modules(48, 7168, 28672), "hetegen", PAPER_A10)
+    u = r.utilization
+    assert u["cpu"] > 0.9
+    assert u["trans"] > 0.9
+    assert 0.4 < u["pin"] < u["trans"] + 1e-9
+    assert u["dev"] < 0.2
+
+
+def test_module_scheduler_monotone_in_budget():
+    """More accelerator memory never slows HeteGen down (Fig. 8 x-axis)."""
+    mods = _opt_modules()
+    total = sum(m.nbytes for m in mods)
+    times = []
+    for frac in (0.0, 0.25, 0.5, 0.75, 1.0):
+        r = run_strategy(mods, "hetegen", PAPER_A10,
+                         gpu_mem_budget=frac * total * 1.1)
+        times.append(r.step_time)
+    assert all(a >= b - 1e-9 for a, b in zip(times, times[1:]))
+
+
+@given(alpha=st.floats(0.02, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_simulated_optimum_near_formula_alpha(alpha):
+    """The analytic alpha* minimizes simulated latency among probes
+    (within quantization granularity) — the sim validates Eq. 9."""
+    from repro.core import alpha as A
+    mods = _opt_modules(4)
+    hw = PAPER_A10
+    a_star = A.alpha_analytic(hw.v_cpu(1), hw.v_gpu(1), hw.v_com())
+
+    def time_at(a):
+        placements = {m.name: Placement("hetegen", a) if m.kind == "linear"
+                      else Placement("resident") for m in mods}
+        return simulate_step(mods, placements, hw).step_time
+
+    assert time_at(a_star) <= time_at(alpha) * 1.02 + 1e-9
+
+
+def test_ablation_ordering():
+    """Table 3: full HeteGen >= each ablation."""
+    mods = _opt_modules(16)
+    full = run_strategy(mods, "hetegen", PAPER_A10).step_time
+    no_hybrid = run_strategy(mods, "hetegen_pinned", PAPER_A10).step_time
+    no_async = run_strategy(mods, "hetegen", PAPER_A10,
+                            async_manager=False).step_time
+    no_bench = run_strategy(mods, "hetegen", PAPER_A10,
+                            use_alpha_benchmark=False).step_time
+    assert full <= no_hybrid + 1e-9
+    assert full <= no_async + 1e-9
+    assert full <= no_bench + 1e-9
