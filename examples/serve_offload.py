@@ -1,5 +1,6 @@
 """End-to-end serving driver (the paper's deployment): batched requests
-through the continuous batcher + a HeteGen-offloaded engine comparison.
+through the continuous batcher — over resident weights AND over
+HeteGen-offloaded weights — plus batch-aware offloaded generation.
 
     PYTHONPATH=src python examples/serve_offload.py [--requests 8]
 """
@@ -7,35 +8,24 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.hw import PAPER_A10
 from repro.models import model as M
+from repro.serving.backends import HeteGenBackend
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.offload_runtime import OffloadGenerator
 
 
-def main():
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--requests", type=int, default=8)
-    ap.add_argument("--arch", default="opt-125m")
-    args = ap.parse_args()
-
-    cfg = get_config(args.arch)
-    params = M.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
-
-    print(f"== continuous batching: {args.requests} staggered requests ==")
-    b = ContinuousBatcher(cfg, params, max_slots=4, max_len=128)
-    rids = []
+def drive(b: ContinuousBatcher, cfg, rng, n_requests: int):
+    """Submit staggered requests and run the batcher dry."""
     t0 = time.perf_counter()
     steps = 0
-    for i in range(args.requests):
+    for _ in range(n_requests):
         n = int(rng.integers(4, 16))
-        rids.append(b.submit(list(rng.integers(0, cfg.vocab_size, n)),
-                             max_new=int(rng.integers(8, 24))))
+        b.submit(list(rng.integers(0, cfg.vocab_size, n)),
+                 max_new=int(rng.integers(8, 24)))
         b.step(); steps += 1          # requests join mid-flight
     while b.queue or b.active.any():
         b.step(); steps += 1
@@ -46,15 +36,46 @@ def main():
           f"{steps} engine steps in {dt:.1f}s "
           f"({toks/dt:.1f} tok/s aggregate)")
 
-    print("\n== HeteGen offloaded serving (weights in host memory) ==")
-    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0)
-    prompt = rng.integers(0, cfg.vocab_size, (4, 12)).astype(np.int32)
-    res = off.generate(prompt, 16)
-    print(f"alpha={res['alpha']:.3f} resident={res['resident_bytes']/1e6:.1f}MB "
-          f"pinned-ring={res['pinned_overhead_bytes']/1e6:.1f}MB")
-    print(f"decode throughput: {res['tokens_per_s']:.1f} tok/s "
-          f"(CPU-only container; see benchmarks/fig8 for the A10 model)")
-    off.close()
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--arch", default="opt-125m")
+    ap.add_argument("--slots", type=int, default=4)
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+
+    print(f"== continuous batching (resident): {args.requests} staggered "
+          "requests ==")
+    b = ContinuousBatcher(cfg, params, max_slots=args.slots, max_len=128)
+    drive(b, cfg, rng, args.requests)
+
+    print("\n== continuous batching over HeteGen-offloaded weights ==")
+    backend = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                             batch=args.slots)
+    print(f"plan tuned for batch={backend.policy.batch}: "
+          f"alpha={backend.policy.alpha:.3f}")
+    rng = np.random.default_rng(0)      # same request stream
+    ob = ContinuousBatcher(cfg, backend=backend, max_slots=args.slots,
+                           max_len=128)
+    drive(ob, cfg, rng, args.requests)
+    backend.close()
+
+    print("\n== HeteGen batched generation (weights in host memory) ==")
+    for batch in (1, 4):
+        off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                               batch=batch)
+        prompt = rng.integers(0, cfg.vocab_size, (batch, 12)).astype(np.int32)
+        res = off.generate(prompt, 16)
+        print(f"batch={batch}: alpha={res['alpha']:.3f} "
+              f"resident={res['resident_bytes']/1e6:.1f}MB "
+              f"pinned-ring={res['pinned_overhead_bytes']/1e6:.1f}MB "
+              f"{res['tokens_per_s']:.1f} tok/s "
+              "(CPU-only container; see benchmarks/fig8 for the A10 model)")
+        off.close()
 
 
 if __name__ == "__main__":

@@ -43,6 +43,20 @@ def alpha_analytic(v_cpu: float, v_gpu: float, v_com: float) -> float:
     return 1.0 / (v_cpu / v_com + v_cpu / v_gpu + 1.0)
 
 
+def alpha_for_batch(hw, batch: int) -> float:
+    """Batch-aware analytic ratio (paper §4.1): decode at batch ``b`` runs
+    ~``b`` FLOPs per parameter byte, so compute-bound resources derate and
+    the optimal split shifts with the serving batch size.
+
+    ``hw`` is any speed provider with ``v_cpu(intensity)`` /
+    ``v_gpu(intensity)`` / ``v_com()`` (duck-typed
+    :class:`repro.core.hw.HardwareSpec`).
+    """
+    intensity = float(max(batch, 1))
+    return alpha_analytic(hw.v_cpu(intensity), hw.v_gpu(intensity),
+                          hw.v_com())
+
+
 def alpha_approx(v_cpu: float, v_com: float) -> float:
     """Approximate ratio ignoring device compute time, paper Eq. 6."""
     if v_cpu <= 0:

@@ -207,7 +207,7 @@ class HeteGenEngine:
     def reset_stats(self) -> None:
         self.stats = StreamStats()
         if self.manager is not None:
-            self.manager.pin_seconds = 0.0
+            self.manager.reset_pin_seconds()
         self._t_start = time.perf_counter()
 
     def device_resident_bytes(self) -> int:

@@ -90,7 +90,10 @@ class AsyncParamManager:
                                           thread_name_prefix="pin")
         self.events: List[tuple] = []     # (op, module, t) for tests/metrics
         self._events_lock = threading.Lock()
-        self.pin_seconds = 0.0
+        # accumulated by the pin thread, read/reset by the engine thread —
+        # guarded the same way HeteGenEngine.stats is
+        self._pin_lock = threading.Lock()
+        self._pin_seconds = 0.0
 
     # ------------------------------------------------------------------
     def _log(self, op: str, name: str) -> None:
@@ -103,9 +106,20 @@ class AsyncParamManager:
         flat = src.reshape(-1).view(np.uint8)
         dst = slot.buffer[: flat.nbytes]
         np.copyto(dst, flat)
-        self.pin_seconds += time.perf_counter() - t0
+        dt = time.perf_counter() - t0
+        with self._pin_lock:
+            self._pin_seconds += dt
         self._log("pinned", name)
         return dst.view(src.dtype).reshape(src.shape)
+
+    @property
+    def pin_seconds(self) -> float:
+        with self._pin_lock:
+            return self._pin_seconds
+
+    def reset_pin_seconds(self) -> None:
+        with self._pin_lock:
+            self._pin_seconds = 0.0
 
     # ------------------------------------------------------------------
     def prefetch(self, name: Optional[str]) -> bool:

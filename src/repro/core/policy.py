@@ -44,6 +44,7 @@ class PolicyResult:
     schedule: Optional[SchedulePlan]   # residency plan (None if no budget)
     predicted_step_time: float         # sum of per-module critical paths
     resident_bytes: int = 0            # accelerator bytes held by residents
+    batch: int = 1                     # decode batch the plan was tuned for
 
 
 def build_policy(
@@ -67,7 +68,8 @@ def build_policy(
     v_com = hw.v_com()
     v_pin = hw.v_pin()
 
-    a0 = alpha_lib.alpha_analytic(v_cpu, v_gpu, min(v_com, max(v_com, v_pin)))
+    # == alpha_lib.alpha_for_batch(hw, batch), on the speeds computed above
+    a0 = alpha_lib.alpha_analytic(v_cpu, v_gpu, v_com)
     a = a0
     if use_alpha_benchmark:
         from repro.core.alpha_benchmark import refine_alpha
@@ -113,4 +115,5 @@ def build_policy(
             t_pred += s.calls * max(t_cpu, t_com)
     return PolicyResult(plan=plan, alpha=a, schedule=sched,
                         predicted_step_time=t_pred,
-                        resident_bytes=resident_bytes)
+                        resident_bytes=resident_bytes,
+                        batch=intensity)

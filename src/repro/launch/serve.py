@@ -2,11 +2,14 @@
 
 Modes:
 
-    resident   jitted generator, weights on device
-    offload    HeteGen: weights in host memory, alpha-split linears,
-               pinned-ring streaming (`--budget-frac` sets the device
-               memory available for residency promotion)
-    batch      continuous batching demo over N synthetic requests
+    resident       jitted generator, weights on device
+    offload        HeteGen: weights in host memory, alpha-split linears,
+                   pinned-ring streaming (`--budget-frac` sets the device
+                   memory available for residency promotion); the placement
+                   plan is tuned for the request batch size
+    batch          continuous batching demo over N synthetic requests
+    batch-offload  continuous batching over HeteGen-offloaded weights
+                   (slot-based scheduling, host-resident parameters)
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m \\
         --mode offload --budget-frac 0.25 --requests 4
@@ -23,7 +26,8 @@ import argparse
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="opt-125m")
-    ap.add_argument("--mode", choices=("resident", "offload", "batch"),
+    ap.add_argument("--mode", choices=("resident", "offload", "batch",
+                                       "batch-offload"),
                     default="offload")
     ap.add_argument("--budget-frac", type=float, default=0.0)
     ap.add_argument("--requests", type=int, default=4)
@@ -86,7 +90,19 @@ def main() -> None:
         off.close()
     else:
         from repro.serving.batcher import ContinuousBatcher
-        b = ContinuousBatcher(cfg, params, max_slots=4,
+        backend = None
+        max_slots = 4
+        if args.mode == "batch-offload":
+            from repro.serving.backends import HeteGenBackend
+            from repro.serving.offload_runtime import enumerate_linears
+            total = sum(s.nbytes for s in enumerate_linears(cfg))
+            backend = HeteGenBackend(
+                cfg, params, hw=HARDWARE[args.hw], batch=max_slots,
+                budget_bytes=args.budget_frac * total)
+            print(f"offload backend: alpha={backend.policy.alpha:.3f} "
+                  f"plan tuned for batch={backend.policy.batch}")
+        b = ContinuousBatcher(cfg, params, backend=backend,
+                              max_slots=max_slots,
                               max_len=args.prompt_len + args.max_new + 8)
         for i in range(args.requests):
             b.submit(list(prompt[i]), args.max_new)
@@ -94,6 +110,8 @@ def main() -> None:
         total_toks = sum(len(v) for v in outs.values())
         print(f"continuous batching: {len(outs)} requests, "
               f"{total_toks} tokens generated")
+        if backend is not None:
+            backend.close()
 
 
 if __name__ == "__main__":

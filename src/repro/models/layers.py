@@ -175,18 +175,28 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
 # ---------------------------------------------------------------------------
 
 def gqa_qkv(cfg, p: Dict, x: jax.Array, positions: jax.Array,
-            rules: ShardingRules = NO_RULES
+            rules: ShardingRules = NO_RULES, linear=None
             ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Project to q/k/v (with optional bias, qk-norm, rope)."""
+    """Project to q/k/v (with optional bias, qk-norm, rope).
+
+    ``linear`` is the pluggable matmul backend: ``linear(x, "wq")`` must
+    return ``x @ W_q`` *with bias already applied* (resident device matmul,
+    HeteGen alpha-split, ...).  ``None`` uses the weights in ``p`` directly.
+    """
     b, s, _ = x.shape
     hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    q = (x @ p["wq"]).reshape(b, s, hq, hd)
-    k = (x @ p["wk"]).reshape(b, s, hkv, hd)
-    v = (x @ p["wv"]).reshape(b, s, hkv, hd)
-    if cfg.attn_bias:
-        q = q + p["bq"].reshape(hq, hd)
-        k = k + p["bk"].reshape(hkv, hd)
-        v = v + p["bv"].reshape(hkv, hd)
+    if linear is not None:
+        q = linear(x, "wq").reshape(b, s, hq, hd)
+        k = linear(x, "wk").reshape(b, s, hkv, hd)
+        v = linear(x, "wv").reshape(b, s, hkv, hd)
+    else:
+        q = (x @ p["wq"]).reshape(b, s, hq, hd)
+        k = (x @ p["wk"]).reshape(b, s, hkv, hd)
+        v = (x @ p["wv"]).reshape(b, s, hkv, hd)
+        if cfg.attn_bias:
+            q = q + p["bq"].reshape(hq, hd)
+            k = k + p["bk"].reshape(hkv, hd)
+            v = v + p["bv"].reshape(hkv, hd)
     if cfg.qk_norm:
         q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
         k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
@@ -204,12 +214,15 @@ def gqa_qkv(cfg, p: Dict, x: jax.Array, positions: jax.Array,
     return q, k, v
 
 
-def attn_out(cfg, p: Dict, o: jax.Array, rules: ShardingRules = NO_RULES
-             ) -> jax.Array:
+def attn_out(cfg, p: Dict, o: jax.Array, rules: ShardingRules = NO_RULES,
+             linear=None) -> jax.Array:
     b, s, hq, hd = o.shape
-    y = o.reshape(b, s, hq * hd) @ p["wo"]
-    if cfg.attn_bias:
-        y = y + p["bo"]
+    if linear is not None:
+        y = linear(o.reshape(b, s, hq * hd), "wo")
+    else:
+        y = o.reshape(b, s, hq * hd) @ p["wo"]
+        if cfg.attn_bias:
+            y = y + p["bo"]
     return rules.act(y, "batch", "seq", "embed")
 
 
@@ -292,16 +305,21 @@ def mla_attend(cfg, p: Dict, q_nope: jax.Array, q_rope: jax.Array,
 # MLPs
 # ---------------------------------------------------------------------------
 
-def mlp(cfg, p: Dict, x: jax.Array, rules: ShardingRules = NO_RULES
-        ) -> jax.Array:
+def mlp(cfg, p: Dict, x: jax.Array, rules: ShardingRules = NO_RULES,
+        linear=None) -> jax.Array:
     kind = cfg.mlp_kind
+    if linear is None:
+        def linear(h, nm):
+            y = h @ p[nm]
+            bias = {"w_in": "b_in", "w_down": "b_down"}.get(nm)
+            if cfg.attn_bias and bias is not None and bias in p:
+                y = y + p[bias]
+            return y
     if kind.startswith("gated"):
         act = jax.nn.silu if kind == "gated_silu" else jax.nn.gelu
-        h = act(x @ p["w_gate"]) * (x @ p["w_up"])
+        h = act(linear(x, "w_gate")) * linear(x, "w_up")
     else:
-        h = x @ p["w_in"]
-        if cfg.attn_bias and "b_in" in p:
-            h = h + p["b_in"]
+        h = linear(x, "w_in")
         if kind == "relu2":
             h = jnp.square(jax.nn.relu(h))
         elif kind == "gelu":
@@ -309,9 +327,7 @@ def mlp(cfg, p: Dict, x: jax.Array, rules: ShardingRules = NO_RULES
         else:
             h = jax.nn.relu(h)
     h = rules.act(h, "batch", "seq", "ff")
-    y = h @ p["w_down"]
-    if cfg.attn_bias and "b_down" in p:
-        y = y + p["b_down"]
+    y = linear(h, "w_down")
     return rules.act(y, "batch", "seq", "embed")
 
 

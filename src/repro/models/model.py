@@ -336,14 +336,27 @@ def init_cache(cfg: ModelConfig, batch: int, max_len: int,
 def _apply_attn_layer(cfg, p, x, positions, *, kind: str,
                       kv_cache: Optional[Tuple] = None, cur_len=None,
                       rules: ShardingRules = NO_RULES,
-                      cross_kv: Optional[Tuple] = None):
+                      cross_kv: Optional[Tuple] = None,
+                      linear=None, kv_format: str = "bhtd",
+                      norm_fn=None, attend_fn=None):
     """Pre-norm attention + residual.  Returns (x, new_kv_cache).
 
     ``kv_cache`` is (k, v) buffers (B,T,...) to update at ``cur_len``;
     None during training (attend within the sequence only).
+
+    ``linear`` is the pluggable matmul backend (see
+    :mod:`repro.serving.backends`): every weight matmul of the layer is
+    routed through it, so the same layer math serves both the resident
+    jitted path (``None`` — weights read from ``p``) and the HeteGen
+    offload engine.  ``kv_format`` is the cache layout: "bhtd" for the
+    scan-stacked resident cache, "bthd" for the per-layer backend cache.
+    ``norm_fn``/``attend_fn`` optionally replace the inline norm /
+    attention with pre-jitted equivalents (the eager offload path keeps
+    its small device pieces fused; see :func:`make_backend_ops`).
     """
     window = cfg.window if kind == "local" else None
-    h = L.apply_norm(cfg, p["ln1"], x)
+    norm = norm_fn or (lambda pp, h: L.apply_norm(cfg, pp, h))
+    h = norm(p["ln1"], x)
 
     if cfg.attn_kind == "mla":
         q_nope, q_rope = L.mla_project_q(cfg, p["attn"], h, positions)
@@ -367,7 +380,8 @@ def _apply_attn_layer(cfg, p, x, positions, *, kind: str,
                                causal=True, rules=rules)
             new_cache = (lat_buf, kr_buf)
     else:
-        q, k, v = L.gqa_qkv(cfg, p["attn"], h, positions, rules)
+        q, k, v = L.gqa_qkv(cfg, p["attn"], h, positions, rules,
+                            linear=linear)
         if cross_kv is not None:
             k, v = cross_kv
             kvpos = jnp.arange(k.shape[1])
@@ -382,21 +396,26 @@ def _apply_attn_layer(cfg, p, x, positions, *, kind: str,
                               rules=rules)
             new_cache = None
         else:
-            k_buf, v_buf = kv_cache            # (B, Hkv, T, D)
-            k_buf = _update_kv(k_buf, k, cur_len, layout="bhtd")
-            v_buf = _update_kv(v_buf, v, cur_len, layout="bhtd")
-            t = k_buf.shape[2]
-            kvpos = jnp.arange(t)
-            out = L.attention(q, k_buf, v_buf, q_positions=positions,
-                              kv_positions=kvpos[None],
-                              kv_len=cur_len + k.shape[1], causal=True,
-                              window=window, attn_softcap=cfg.attn_softcap,
-                              kv_format="bhtd", rules=rules)
+            k_buf, v_buf = kv_cache     # (B, Hkv, T, D) or (B, T, Hkv, D)
+            k_buf = _update_kv(k_buf, k, cur_len, layout=kv_format)
+            v_buf = _update_kv(v_buf, v, cur_len, layout=kv_format)
+            if attend_fn is not None:
+                out = attend_fn(q, k_buf, v_buf, positions,
+                                cur_len + k.shape[1], window)
+            else:
+                t = k_buf.shape[2] if kv_format == "bhtd" else k_buf.shape[1]
+                kvpos = jnp.arange(t)
+                out = L.attention(q, k_buf, v_buf, q_positions=positions,
+                                  kv_positions=kvpos[None],
+                                  kv_len=cur_len + k.shape[1], causal=True,
+                                  window=window,
+                                  attn_softcap=cfg.attn_softcap,
+                                  kv_format=kv_format, rules=rules)
             new_cache = (k_buf, v_buf)
-        out = L.attn_out(cfg, p["attn"], out, rules)
+        out = L.attn_out(cfg, p["attn"], out, rules, linear=linear)
 
     if cfg.post_norm:
-        out = L.apply_norm(cfg, p["ln1_post"], out)
+        out = norm(p["ln1_post"], out)
     return x + out, new_cache
 
 
@@ -461,16 +480,17 @@ def _apply_attn_layer_stacked(cfg, p, x, positions, *, kind: str, stacks,
 
 
 def _apply_ffn(cfg, p, x, kind: str, rules: ShardingRules,
-               aux: Optional[jax.Array] = None):
-    h = L.apply_norm(cfg, p["ln2"], x)
+               aux: Optional[jax.Array] = None, linear=None, norm_fn=None):
+    norm = norm_fn or (lambda pp, h: L.apply_norm(cfg, pp, h))
+    h = norm(p["ln2"], x)
     if kind == "moe":
         y = L.moe(cfg, p["moe"], h, rules)
         if aux is not None:
             aux = aux + L.moe_aux_loss(cfg, p["moe"], h)
     else:
-        y = L.mlp(cfg, p["mlp"], h, rules)
+        y = L.mlp(cfg, p["mlp"], h, rules, linear=linear)
     if cfg.post_norm:
-        y = L.apply_norm(cfg, p["ln2_post"], y)
+        y = norm(p["ln2_post"], y)
     return (x + y) if aux is None else (x + y, aux)
 
 
@@ -1024,3 +1044,168 @@ def decode_step(cfg: ModelConfig, params: Dict, token: jax.Array,
     batch = {"tokens": token[:, None]}
     new_cache, logits = prefill(cfg, params, batch, cache, rules)
     return new_cache, logits
+
+
+# ---------------------------------------------------------------------------
+# Backend-parameterized execution — one layer-math core, pluggable linears
+# ---------------------------------------------------------------------------
+#
+# The functions below drive the SAME per-layer math as the jitted scan trunk
+# (_apply_attn_layer / _apply_ffn / layers.gqa_qkv / layers.mlp), but with
+# every weight matmul routed through an injected ``linear(x, name)``
+# callable.  A resident backend implements ``linear`` as a device matmul
+# over its own weight inventory; the HeteGen backend implements it as the
+# engine's alpha-split host/device execution (repro.serving.backends).
+
+def decoder_layer(cfg, p, x, positions, *, kv_cache, cur_len, linear,
+                  kind: str = "dense", rules: ShardingRules = NO_RULES,
+                  ops: Optional[Dict] = None):
+    """One full decoder layer (attention + FFN), backend-parameterized.
+
+    ``kv_cache`` is this layer's (k, v) buffers in (B, T, Hkv, hd) layout;
+    ``cur_len`` is a scalar, or a (B,) per-slot length vector for
+    continuous batching.  ``ops`` optionally carries pre-jitted "norm" /
+    "attend" device pieces (:func:`make_backend_ops`) for eager drivers.
+    Returns (x, (k_buf, v_buf)).
+    """
+    ops = ops or {}
+    x, new_kv = _apply_attn_layer(cfg, p, x, positions, kind=kind,
+                                  kv_cache=kv_cache, cur_len=cur_len,
+                                  rules=rules, linear=linear,
+                                  kv_format="bthd",
+                                  norm_fn=ops.get("norm"),
+                                  attend_fn=ops.get("attend"))
+    x = _apply_ffn(cfg, p, x, kind, rules, linear=linear,
+                   norm_fn=ops.get("norm"))
+    return x, new_kv
+
+
+def make_backend_ops(cfg: ModelConfig) -> Dict:
+    """Jitted device pieces for the eager offload driver: norms, the
+    attention core (per-layer window is a static arg), and the lm head —
+    the small on-device math between engine linears stays fused, as in the
+    pre-seam offload runtime."""
+    from functools import partial
+
+    def _attend(q, k_buf, v_buf, q_positions, kv_len, window):
+        kvpos = jnp.arange(k_buf.shape[1])
+        return L.attention(q, k_buf, v_buf, q_positions=q_positions,
+                           kv_positions=kvpos[None], kv_len=kv_len,
+                           causal=True, window=window,
+                           attn_softcap=cfg.attn_softcap, kv_format="bthd")
+
+    return {"norm": jax.jit(partial(L.apply_norm, cfg)),
+            "attend": jax.jit(_attend, static_argnums=(5,)),
+            "logits": jax.jit(lambda shared, x: lm_logits(cfg, shared, x))}
+
+
+def extract_backend_params(cfg: ModelConfig, params: Dict):
+    """Split a stacked param pytree into (shared, weights, biases).
+
+    ``weights``/``biases`` map flat linear names ("blk{l}.wq", ...) to
+    per-layer arrays — the inventory a LinearBackend executes; ``shared``
+    keeps everything the layer math reads directly (embeddings, norms,
+    qk-norm scales, lm head) plus per-layer small-param dicts under
+    "layers".
+    """
+    if cfg.family not in ("dense", "vlm") or cfg.attn_kind != "gqa":
+        raise NotImplementedError(
+            "backend execution supports dense GQA decoders "
+            f"(got family={cfg.family}, attn={cfg.attn_kind})")
+    period = _pattern_period(cfg)
+    weights: Dict = {}
+    biases: Dict = {}
+    shared: Dict = {"embed": params["embed"],
+                    "final_norm": params["final_norm"]}
+    for kname in ("lm_head", "pos"):
+        if kname in params:
+            shared[kname] = params[kname]
+    supers = [jax.tree.map(lambda a, _g=g: a[_g], params["blocks"])
+              for g in range(cfg.n_layers // period)]
+    layers = []
+    for l in range(cfg.n_layers):
+        g, j = divmod(l, period)
+        blk = supers[g][f"pos{j}"]
+        a, m = blk["attn"], blk.get("mlp", {})
+        for nm in ("wq", "wk", "wv", "wo"):
+            weights[f"blk{l}.{nm}"] = a[nm]
+        if cfg.attn_bias:
+            for nm, bk in (("wq", "bq"), ("wk", "bk"), ("wv", "bv"),
+                           ("wo", "bo")):
+                biases[f"blk{l}.{nm}"] = a[bk]
+        for nm in ("w_gate", "w_up", "w_down", "w_in"):
+            if nm in m:
+                weights[f"blk{l}.{nm}"] = m[nm]
+        if cfg.attn_bias and "b_in" in m:
+            biases[f"blk{l}.w_in"] = m["b_in"]
+            biases[f"blk{l}.w_down"] = m["b_down"]
+        small = {"ln1": blk["ln1"], "ln2": blk["ln2"],
+                 "attn": {}, "mlp": {}}
+        if cfg.post_norm:
+            small["ln1_post"] = blk["ln1_post"]
+            small["ln2_post"] = blk["ln2_post"]
+        if cfg.qk_norm:
+            small["attn"] = {"q_norm": a["q_norm"], "k_norm": a["k_norm"]}
+        layers.append(small)
+    shared["layers"] = layers
+    return shared, weights, biases
+
+
+def init_backend_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
+    """Per-layer KV cache for backend execution: "k{l}"/"v{l}" buffers in
+    (B, T, Hkv, hd) layout plus "len" (scalar; continuous batching replaces
+    it with a (B,) per-slot vector).  Batch lives on axis 0 of every
+    buffer."""
+    dt = _dtype(cfg)
+    cache: Dict = {"len": jnp.zeros((), jnp.int32)}
+    for l in range(cfg.n_layers):
+        cache[f"k{l}"] = jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                                   dt)
+        cache[f"v{l}"] = jnp.zeros((batch, max_len, cfg.n_kv_heads, cfg.hd),
+                                   dt)
+    return cache
+
+
+def backend_prefill(cfg: ModelConfig, shared: Dict, batch: Dict, cache: Dict,
+                    *, linear, ops: Optional[Dict] = None
+                    ) -> Tuple[Dict, jax.Array]:
+    """Prompt/step processing through the shared layer math with all
+    linears routed through ``linear(x, "blk{l}.{name}")``.  Mirrors
+    :func:`prefill` for the dense GQA families.  ``ops`` carries the
+    pre-jitted device pieces for eager drivers (:func:`make_backend_ops`)."""
+    ops = ops or {}
+    if cfg.embeds_input and "embeds" in batch:
+        x = batch["embeds"].astype(_dtype(cfg))
+        b, s = x.shape[:2]
+    else:
+        tokens = batch["tokens"]
+        b, s = tokens.shape
+        x = embed_tokens(cfg, shared, tokens)
+    cur_len = cache["len"]
+    positions = _positions_from(cur_len, b, s)
+    x = _add_learned_pos(cfg, shared, x, positions)
+    kinds = cfg.layer_kinds()
+    new_cache = dict(cache)
+    for l in range(cfg.n_layers):
+        lin = (lambda h, nm, _l=l: linear(h, f"blk{_l}.{nm}"))
+        x, kv = decoder_layer(cfg, shared["layers"][l], x, positions,
+                              kv_cache=(cache[f"k{l}"], cache[f"v{l}"]),
+                              cur_len=cur_len, linear=lin, kind=kinds[l],
+                              ops=ops)
+        new_cache[f"k{l}"], new_cache[f"v{l}"] = kv
+    new_cache["len"] = cur_len + s
+    norm = ops.get("norm") or (lambda pp, h: L.apply_norm(cfg, pp, h))
+    x = norm(shared["final_norm"], x[:, -1:])
+    if "logits" in ops:
+        logits = ops["logits"](shared, x)
+    else:
+        logits = lm_logits(cfg, shared, x)
+    return new_cache, logits[:, 0]
+
+
+def backend_decode(cfg: ModelConfig, shared: Dict, token: jax.Array,
+                   cache: Dict, *, linear, ops: Optional[Dict] = None
+                   ) -> Tuple[Dict, jax.Array]:
+    """One decode step through the backend seam: token (B,) -> logits."""
+    return backend_prefill(cfg, shared, {"tokens": token[:, None]}, cache,
+                           linear=linear, ops=ops)

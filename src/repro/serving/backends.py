@@ -1,0 +1,269 @@
+"""Pluggable linear backends — one layer-math core, many executions.
+
+The decoder math for the dense GQA families is written once
+(:func:`repro.models.model.decoder_layer` /
+:func:`repro.models.model.backend_prefill`) with every weight matmul routed
+through an injected ``linear(x, name)`` callable.  This module provides the
+two concrete executions of that seam:
+
+    ResidentBackend   weights live in accelerator memory; the whole forward
+                      is jitted (prefill/decode compiled once per shape,
+                      decode cache donated) — the production resident path.
+    HeteGenBackend    weights live in host memory; linears execute through
+                      :class:`repro.core.engine.HeteGenEngine` under a
+                      batch-aware placement plan (resident / alpha-split /
+                      streamed), eagerly layer by layer, exactly how
+                      offloading runtimes run.
+
+Both expose the same driver surface — ``init_cache`` / ``prefill`` /
+``decode`` / ``linear`` — so :class:`repro.serving.engine.Generator` and
+:class:`repro.serving.batcher.ContinuousBatcher` schedule over either one
+interchangeably, and their outputs match to fp tolerance
+(tests/test_backends.py).
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional, Protocol, Tuple, runtime_checkable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.engine import HeteGenEngine, ModulePlan
+from repro.core.hw import HardwareSpec, TPU_V5E
+from repro.core.policy import LinearSpec, PolicyResult, build_policy
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@runtime_checkable
+class LinearBackend(Protocol):
+    """The backend seam: everything the shared layer math needs.
+
+    ``linear(x, name)`` computes ``x @ W[name]`` with bias applied, for the
+    flat linear names produced by :func:`enumerate_linears`
+    ("blk{l}.wq", "blk{l}.w_down", ...).  ``cache_batch_axis`` is the axis
+    carrying the batch in every cache buffer (the continuous batcher's
+    slot-merge axis).
+    """
+
+    cache_batch_axis: int
+
+    def linear(self, x: jax.Array, name: str) -> jax.Array: ...
+
+    def init_cache(self, batch: int, max_len: int) -> Dict: ...
+
+    def prefill(self, batch: Dict, cache: Dict
+                ) -> Tuple[Dict, jax.Array]: ...
+
+    def decode(self, token: jax.Array, cache: Dict
+               ) -> Tuple[Dict, jax.Array]: ...
+
+    def close(self) -> None: ...
+
+
+def enumerate_linears(cfg: ModelConfig) -> List[LinearSpec]:
+    """The model's offloadable linears with size groups (paper §4.3)."""
+    by = cfg.dtype_bytes()
+    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    d, f = cfg.d_model, cfg.d_ff
+    out = []
+    for l in range(cfg.n_layers):
+        out += [
+            LinearSpec(f"blk{l}.wq", d, hq * hd, "attn", by),
+            LinearSpec(f"blk{l}.wk", d, hkv * hd, "attn_kv", by),
+            LinearSpec(f"blk{l}.wv", d, hkv * hd, "attn_kv", by),
+            LinearSpec(f"blk{l}.wo", hq * hd, d, "attn", by),
+        ]
+        if cfg.mlp_kind.startswith("gated"):
+            out += [LinearSpec(f"blk{l}.w_gate", d, f, "mlp", by),
+                    LinearSpec(f"blk{l}.w_up", d, f, "mlp", by),
+                    LinearSpec(f"blk{l}.w_down", f, d, "mlp_down", by)]
+        else:
+            out += [LinearSpec(f"blk{l}.w_in", d, f, "mlp", by),
+                    LinearSpec(f"blk{l}.w_down", f, d, "mlp_down", by)]
+    return out
+
+
+def _np(x) -> np.ndarray:
+    return np.asarray(jax.device_get(x))
+
+
+class ResidentBackend:
+    """Device-resident weights; the shared forward jitted end to end.
+
+    Construction materializes an unstacked copy of every linear (jax
+    indexing copies, it does not view), so a caller that also keeps the
+    stacked ``params`` tree alive holds ~2x the weight bytes on the
+    device — drop the stacked tree after construction when serving large
+    models through this backend.
+    """
+
+    cache_batch_axis = 0
+
+    def __init__(self, cfg: ModelConfig, params: Dict):
+        self.cfg = cfg
+        shared, weights, biases = M.extract_backend_params(cfg, params)
+        self.shared = shared
+        self.weights = {k: jnp.asarray(v) for k, v in weights.items()}
+        self.biases = {k: jnp.asarray(v) for k, v in biases.items()}
+
+        def _linear_from(weights, biases):
+            def lin(x, name):
+                y = x @ weights[name]
+                b = biases.get(name)
+                return y if b is None else y + b
+            return lin
+
+        self._lin = _linear_from(self.weights, self.biases)
+
+        def _prefill(shared, weights, biases, batch, cache):
+            return M.backend_prefill(cfg, shared, batch, cache,
+                                     linear=_linear_from(weights, biases))
+
+        def _decode(shared, weights, biases, token, cache):
+            return M.backend_decode(cfg, shared, token, cache,
+                                    linear=_linear_from(weights, biases))
+
+        self._prefill = jax.jit(_prefill)
+        self._decode = jax.jit(_decode, donate_argnums=(4,))
+
+    # -- LinearBackend surface -----------------------------------------
+    def linear(self, x: jax.Array, name: str) -> jax.Array:
+        return self._lin(x, name)
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return M.init_backend_cache(self.cfg, batch, max_len)
+
+    def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
+        return self._prefill(self.shared, self.weights, self.biases,
+                             batch, cache)
+
+    def decode(self, token: jax.Array, cache: Dict
+               ) -> Tuple[Dict, jax.Array]:
+        return self._decode(self.shared, self.weights, self.biases,
+                            token, cache)
+
+    def close(self) -> None:
+        pass
+
+
+class ScanResidentBackend:
+    """The scan-stacked resident path behind the backend driver surface.
+
+    Wraps ``M.prefill`` / ``M.decode_step`` over the stacked params — the
+    compiled trunk the :class:`repro.serving.engine.Generator` runs by
+    default.  Unlike :class:`ResidentBackend` it supports every transformer
+    family (MLA, MoE, int8 KV, encdec), but its per-linear execution is not
+    pluggable; the batch axis of its cache leaves is 1 (stack-major).
+    """
+
+    cache_batch_axis = 1
+
+    def __init__(self, cfg: ModelConfig, params: Dict):
+        self.cfg = cfg
+        self.params = params
+
+        def _prefill(params, batch, cache):
+            return M.prefill(cfg, params, batch, cache)
+
+        def _decode(params, token, cache):
+            return M.decode_step(cfg, params, token, cache)
+
+        self._prefill_fn = jax.jit(_prefill)
+        self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return M.init_cache(self.cfg, batch, max_len)
+
+    def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
+        return self._prefill_fn(self.params, batch, cache)
+
+    def decode(self, token: jax.Array, cache: Dict
+               ) -> Tuple[Dict, jax.Array]:
+        return self._decode_fn(self.params, token, cache)
+
+    def close(self) -> None:
+        pass
+
+
+class HeteGenBackend:
+    """HeteGen-scheduled offloaded execution of the shared layer math.
+
+    Weights live in host memory; every ``linear`` runs through the threaded
+    :class:`HeteGenEngine` under a placement plan built for the *real*
+    decode batch size — §4.1's cost model shifts the optimal alpha with
+    compute intensity, so ``retune(batch)`` rebuilds the plan (and the
+    engine's weight partition) whenever the serving batch changes.
+    """
+
+    cache_batch_axis = 0
+
+    def __init__(self, cfg: ModelConfig, params: Dict, *,
+                 hw: HardwareSpec = TPU_V5E,
+                 budget_bytes: Optional[float] = None,
+                 batch: int = 1,
+                 use_alpha_benchmark: bool = True,
+                 use_module_scheduler: bool = True,
+                 alpha_override: Optional[float] = None):
+        self.cfg = cfg
+        shared, weights, biases = M.extract_backend_params(cfg, params)
+        self.shared = shared
+        self._host_weights = {k: _np(v) for k, v in weights.items()}
+        self._host_biases = {k: _np(v) for k, v in biases.items()}
+        self._ops = M.make_backend_ops(cfg)   # jitted norms/attention/head
+        self.linears = enumerate_linears(cfg)
+        self.hw = hw
+        self.budget_bytes = budget_bytes
+        self.use_alpha_benchmark = use_alpha_benchmark
+        self.use_module_scheduler = use_module_scheduler
+        self.alpha_override = alpha_override
+        self.batch: Optional[int] = None
+        self.engine: Optional[HeteGenEngine] = None
+        self.policy: Optional[PolicyResult] = None
+        self.retune(batch)
+
+    # -- batch-aware planning ------------------------------------------
+    def retune(self, batch: int) -> PolicyResult:
+        """(Re)build the placement plan and engine for ``batch``."""
+        batch = max(int(batch), 1)
+        if self.engine is not None and batch == self.batch:
+            return self.policy
+        if self.engine is not None:
+            self.engine.close()
+        self.policy = build_policy(
+            self.linears, self.hw, budget_bytes=self.budget_bytes,
+            batch=batch, use_alpha_benchmark=self.use_alpha_benchmark,
+            use_module_scheduler=self.use_module_scheduler)
+        if self.alpha_override is not None:
+            self.policy.plan = [
+                ModulePlan(p.name, p.group, p.mode,
+                           self.alpha_override if p.mode == "hetegen"
+                           else p.alpha)
+                for p in self.policy.plan]
+        self.engine = HeteGenEngine(self._host_weights, self.policy.plan,
+                                    biases=self._host_biases)
+        self.engine.warm_prefetch()
+        self.batch = batch
+        return self.policy
+
+    # -- LinearBackend surface -----------------------------------------
+    def linear(self, x: jax.Array, name: str) -> jax.Array:
+        return self.engine.linear(x, name)
+
+    def init_cache(self, batch: int, max_len: int) -> Dict:
+        return M.init_backend_cache(self.cfg, batch, max_len)
+
+    def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
+        return M.backend_prefill(self.cfg, self.shared, batch, cache,
+                                 linear=self.linear, ops=self._ops)
+
+    def decode(self, token: jax.Array, cache: Dict
+               ) -> Tuple[Dict, jax.Array]:
+        return M.backend_decode(self.cfg, self.shared, token, cache,
+                                linear=self.linear, ops=self._ops)
+
+    def close(self) -> None:
+        if self.engine is not None:
+            self.engine.close()

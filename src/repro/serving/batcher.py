@@ -12,8 +12,15 @@ stopping the batch:
 
 Per-slot sequence lengths are first-class: the model's decode path accepts
 a vector ``len`` and scatters each slot's new K/V at its own position.
-Supported for the dense/moe/vlm transformer families (per-slot state for
-SSM trunks would need per-slot state snapshots; see DESIGN.md §8).
+
+The batcher schedules over any :mod:`repro.serving.backends` driver: the
+default is the jitted scan-stacked resident path (today's behavior), but
+``backend=HeteGenBackend(...)`` runs the SAME slot admit/release logic
+over HeteGen-offloaded weights — continuous batching over host-resident
+parameters, with the placement plan tuned for the decode batch
+(= ``max_slots``).  Supported for the dense/moe/vlm transformer families
+(per-slot state for SSM trunks would need per-slot state snapshots; see
+DESIGN.md §8).
 """
 
 from __future__ import annotations
@@ -26,8 +33,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serving.backends import ScanResidentBackend
+from repro.serving.sampling import SamplerConfig, make_sampler
 
 
 @dataclasses.dataclass
@@ -42,16 +50,26 @@ class Request:
 
 
 class ContinuousBatcher:
-    def __init__(self, cfg: ModelConfig, params: Dict, *, max_slots: int = 4,
-                 max_len: int = 512):
+    def __init__(self, cfg: ModelConfig, params: Optional[Dict] = None, *,
+                 max_slots: int = 4, max_len: int = 512,
+                 backend=None, sampler: SamplerConfig = SamplerConfig(),
+                 seed: int = 0):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
+        if backend is None and params is None:
+            raise ValueError("ContinuousBatcher needs params or a backend")
         self.cfg = cfg
-        self.params = params
+        self.backend = backend or ScanResidentBackend(cfg, params)
+        if hasattr(self.backend, "retune"):
+            # the decode batch is the slot count — enforce the documented
+            # contract instead of trusting the caller's constructed plan
+            self.backend.retune(max_slots)
         self.max_slots = max_slots
         self.max_len = max_len
-        self.cache = M.init_cache(cfg, max_slots, max_len)
+        self.sample = make_sampler(sampler)
+        self._key = jax.random.PRNGKey(seed)
+        self.cache = self.backend.init_cache(max_slots, max_len)
         # per-slot lengths (vector 'len' drives per-slot scatter updates)
         self.cache["len"] = jnp.zeros((max_slots,), jnp.int32)
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
@@ -59,18 +77,6 @@ class ContinuousBatcher:
         self.requests: Dict[int, Request] = {}
         self._ids = itertools.count()
         self.queue: List[Request] = []
-
-        def _decode(params, token, cache):
-            cache, logits = M.decode_step(cfg, params, token, cache)
-            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
-        self._decode = jax.jit(_decode, donate_argnums=(2,))
-
-        def _prefill_one(params, tokens, cache):
-            cache, logits = M.prefill(cfg, params, {"tokens": tokens}, cache)
-            return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
-
-        self._prefill_one = jax.jit(_prefill_one)
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int,
@@ -84,21 +90,28 @@ class ContinuousBatcher:
     def _free_slots(self) -> List[int]:
         return [i for i in range(self.max_slots) if not self.active[i]]
 
+    def _next_key(self) -> jax.Array:
+        self._key, sub = jax.random.split(self._key)
+        return sub
+
     def _admit(self) -> None:
+        axis = self.backend.cache_batch_axis
         for slot in self._free_slots():
             if not self.queue:
                 break
             req = self.queue.pop(0)
             req.slot = slot
-            one_cache = M.init_cache(self.cfg, 1, self.max_len)
+            one_cache = self.backend.init_cache(1, self.max_len)
             toks = jnp.asarray([req.prompt], jnp.int32)
-            one_cache, first = self._prefill_one(self.params, toks, one_cache)
-            # merge slot: every kv leaf has batch at axis 1
+            one_cache, logits = self.backend.prefill({"tokens": toks},
+                                                     one_cache)
+            first = self.sample(logits, self._next_key())
+            # merge slot: every cache leaf carries batch at `axis`
             def merge(glob, one):
                 if glob.ndim == 0 or glob.shape == ():
                     return glob
                 return jax.lax.dynamic_update_slice_in_dim(
-                    glob, one.astype(glob.dtype), slot, axis=1)
+                    glob, one.astype(glob.dtype), slot, axis=axis)
             for key in self.cache:
                 if key == "len":
                     continue
@@ -129,7 +142,8 @@ class ContinuousBatcher:
         self._admit()
         if not self.active.any():
             return 0
-        self.cache, nxt = self._decode(self.params, self.tokens, self.cache)
+        self.cache, logits = self.backend.decode(self.tokens, self.cache)
+        nxt = self.sample(logits, self._next_key())
         self.tokens = nxt
         for req in list(self.requests.values()):
             if req.slot is not None and self.active[req.slot]:

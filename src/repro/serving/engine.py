@@ -32,27 +32,49 @@ class GenerateResult:
 
 
 class Generator:
-    """Batched autoregressive generation with a jitted serve_step."""
+    """Batched autoregressive generation with a jitted serve_step.
 
-    def __init__(self, cfg: ModelConfig, params: Dict, *,
+    By default runs the scan-stacked resident path (``M.prefill`` /
+    ``M.decode_step`` over the stacked params).  Passing ``backend`` (a
+    :class:`repro.serving.backends.LinearBackend` driver — ResidentBackend,
+    HeteGenBackend, ...) instead routes every step through the shared
+    backend-parameterized layer math.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Optional[Dict] = None, *,
                  rules: ShardingRules = NO_RULES,
-                 sampler: SamplerConfig = SamplerConfig()):
+                 sampler: SamplerConfig = SamplerConfig(),
+                 backend=None):
         self.cfg = cfg
         self.params = params
         self.rules = rules
+        self.backend = backend
         self.sample = make_sampler(sampler)
+        if backend is None and params is None:
+            raise ValueError("Generator needs params or a backend")
+        if backend is not None and rules is not NO_RULES:
+            raise ValueError(
+                "sharding rules are owned by the backend; construct the "
+                "backend with its own sharding instead of passing rules")
 
-        def _prefill(params, batch, cache):
-            cache, logits = M.prefill(cfg, params, batch, cache, rules)
-            return cache, logits
+        # The params-based path is kept separate from the backend driver on
+        # purpose: sampling stays inside the jitted decode step, so the
+        # autoregressive loop moves (B,) token ids instead of a (B, vocab)
+        # logits transfer per step.  Backend drivers sample outside (their
+        # logits are already on the host side of the seam).
+        if backend is None:
+            def _prefill(params, batch, cache):
+                cache, logits = M.prefill(cfg, params, batch, cache, rules)
+                return cache, logits
 
-        def _decode(params, token, cache, key):
-            cache, logits = M.decode_step(cfg, params, token, cache, rules)
-            nxt = self.sample(logits, key)
-            return cache, nxt
+            def _decode(params, token, cache, key):
+                cache, logits = M.decode_step(cfg, params, token, cache,
+                                              rules)
+                nxt = self.sample(logits, key)
+                return cache, nxt
 
-        self._prefill = jax.jit(_prefill)
-        self._decode = jax.jit(_decode, donate_argnums=(2,))
+            self._prefill = jax.jit(_prefill)
+            self._decode = jax.jit(_decode, donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     def generate(self, batch: Dict, max_new_tokens: int,
@@ -64,10 +86,17 @@ class Generator:
         else:
             b, s = batch["embeds"].shape[:2]
         total = max_len or (s + max_new_tokens)
-        cache = M.init_cache(cfg, b, total)
+        be = self.backend
+        if be is not None and hasattr(be, "retune"):
+            be.retune(b)       # plan follows the real decode batch
+        cache = M.init_cache(cfg, b, total) if be is None \
+            else be.init_cache(b, total)
 
         t0 = time.perf_counter()
-        cache, logits = self._prefill(self.params, batch, cache)
+        if be is None:
+            cache, logits = self._prefill(self.params, batch, cache)
+        else:
+            cache, logits = be.prefill(batch, cache)
         key = jax.random.PRNGKey(seed)
         tok = self.sample(logits, key)
         jax.block_until_ready(tok)
@@ -76,7 +105,11 @@ class Generator:
         out = [tok]
         for i in range(max_new_tokens - 1):
             key = jax.random.fold_in(key, i)
-            cache, tok = self._decode(self.params, tok, cache, key)
+            if be is None:
+                cache, tok = self._decode(self.params, tok, cache, key)
+            else:
+                cache, logits = be.decode(tok, cache)
+                tok = self.sample(logits, key)
             out.append(tok)
         jax.block_until_ready(out[-1])
         t2 = time.perf_counter()

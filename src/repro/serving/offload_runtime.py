@@ -6,7 +6,16 @@ scheduler's placement plan (resident / hetegen-split / streamed) through
 :class:`repro.core.engine.HeteGenEngine`; everything else (norms, rope,
 attention core, softmax, sampling) runs on the device.  The forward is
 eager per layer — exactly how offloading runtimes execute, since weights
-arrive layer by layer — with the small device pieces jitted.
+arrive layer by layer.
+
+The decoder math itself is NOT defined here: the offload path executes the
+same shared layer functions as the resident path
+(:func:`repro.models.model.decoder_layer` via
+:class:`repro.serving.backends.HeteGenBackend`), differing only in the
+injected linear backend.  The placement plan is tuned for the *real*
+decode batch size — §4.1's cost model shifts the optimal alpha with
+compute intensity — and sampling is pluggable via
+:class:`repro.serving.sampling.SamplerConfig`.
 
 Supports the dense GQA decoder families (the paper's OPT models and
 mistral-style configs).  Correctness: outputs match the fully-resident
@@ -15,198 +24,78 @@ jitted path to fp tolerance (tests/test_offload_runtime.py).
 
 from __future__ import annotations
 
-import dataclasses
 import time
-from functools import partial
-from typing import Dict, List, Optional
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import HeteGenEngine
 from repro.core.hw import HardwareSpec, TPU_V5E
-from repro.core.policy import LinearSpec, PolicyResult, build_policy
-from repro.models import layers as L
-from repro.models import model as M
+from repro.serving.backends import HeteGenBackend, enumerate_linears  # noqa: F401  (re-export)
 from repro.models.config import ModelConfig
-
-
-def enumerate_linears(cfg: ModelConfig) -> List[LinearSpec]:
-    """The model's offloadable linears with size groups (paper §4.3)."""
-    by = cfg.dtype_bytes()
-    hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
-    d, f = cfg.d_model, cfg.d_ff
-    out = []
-    for l in range(cfg.n_layers):
-        out += [
-            LinearSpec(f"blk{l}.wq", d, hq * hd, "attn", by),
-            LinearSpec(f"blk{l}.wk", d, hkv * hd, "attn_kv", by),
-            LinearSpec(f"blk{l}.wv", d, hkv * hd, "attn_kv", by),
-            LinearSpec(f"blk{l}.wo", hq * hd, d, "attn", by),
-        ]
-        if cfg.mlp_kind.startswith("gated"):
-            out += [LinearSpec(f"blk{l}.w_gate", d, f, "mlp", by),
-                    LinearSpec(f"blk{l}.w_up", d, f, "mlp", by),
-                    LinearSpec(f"blk{l}.w_down", f, d, "mlp_down", by)]
-        else:
-            out += [LinearSpec(f"blk{l}.w_in", d, f, "mlp", by),
-                    LinearSpec(f"blk{l}.w_down", f, d, "mlp_down", by)]
-    return out
-
-
-def _np(x) -> np.ndarray:
-    return np.asarray(jax.device_get(x))
+from repro.serving.sampling import SamplerConfig, make_sampler
 
 
 class OffloadGenerator:
-    """HeteGen-scheduled offloaded generation for dense GQA decoders."""
+    """HeteGen-scheduled offloaded generation for dense GQA decoders.
+
+    ``batch`` sizes the initial placement plan; by default the plan is
+    re-tuned automatically when :meth:`generate` is called with a different
+    batch size (``auto_retune=False`` pins the constructed plan).
+    """
 
     def __init__(self, cfg: ModelConfig, params: Dict, *,
                  hw: HardwareSpec = TPU_V5E,
                  budget_bytes: Optional[float] = None,
                  use_alpha_benchmark: bool = True,
                  use_module_scheduler: bool = True,
-                 alpha_override: Optional[float] = None):
-        if cfg.family not in ("dense", "vlm") or cfg.attn_kind != "gqa":
-            raise NotImplementedError(
-                "offload runtime supports dense GQA decoders "
-                f"(got family={cfg.family}, attn={cfg.attn_kind})")
+                 alpha_override: Optional[float] = None,
+                 batch: int = 1,
+                 sampler: SamplerConfig = SamplerConfig(),
+                 auto_retune: bool = True):
         self.cfg = cfg
-        self.linears = enumerate_linears(cfg)
-        self.policy: PolicyResult = build_policy(
-            self.linears, hw, budget_bytes=budget_bytes, batch=1,
+        self.backend = HeteGenBackend(
+            cfg, params, hw=hw, budget_bytes=budget_bytes, batch=batch,
             use_alpha_benchmark=use_alpha_benchmark,
-            use_module_scheduler=use_module_scheduler)
-        if alpha_override is not None:
-            from repro.core.engine import ModulePlan
-            self.policy.plan = [
-                ModulePlan(p.name, p.group, p.mode,
-                           alpha_override if p.mode == "hetegen" else p.alpha)
-                for p in self.policy.plan]
+            use_module_scheduler=use_module_scheduler,
+            alpha_override=alpha_override)
+        self.sample = make_sampler(sampler)
+        self.auto_retune = auto_retune
 
-        # unstack per-layer host weights
-        weights: Dict[str, np.ndarray] = {}
-        biases: Dict[str, np.ndarray] = {}
-        blocks = params["blocks"]
-        for l in range(cfg.n_layers):
-            blk = jax.tree.map(lambda x: x[l], blocks)["pos0"]
-            a, m = blk["attn"], blk.get("mlp", {})
-            for nm, w in (("wq", a["wq"]), ("wk", a["wk"]), ("wv", a["wv"]),
-                          ("wo", a["wo"])):
-                weights[f"blk{l}.{nm}"] = _np(w)
-            if cfg.attn_bias:
-                for nm, b in (("wq", a["bq"]), ("wk", a["bk"]),
-                              ("wv", a["bv"]), ("wo", a["bo"])):
-                    biases[f"blk{l}.{nm}"] = _np(b)
-            for nm in ("w_gate", "w_up", "w_down", "w_in"):
-                if nm in m:
-                    weights[f"blk{l}.{nm}"] = _np(m[nm])
-            if cfg.attn_bias and "b_in" in m:
-                biases[f"blk{l}.w_in"] = _np(m["b_in"])
-                biases[f"blk{l}.w_down"] = _np(m["b_down"])
-            self._norms_cache = None
-        self.engine = HeteGenEngine(weights, self.policy.plan, biases=biases)
-        self.engine.warm_prefetch()
+    @property
+    def policy(self):
+        return self.backend.policy
 
-        # device-resident small params
-        self.blocks = blocks
-        self.params = params
-        self._norm = jax.jit(partial(L.apply_norm, cfg))
-        self._attend = jax.jit(partial(self._attend_impl))
-        self._act = jax.jit(self._act_impl)
-        self._logits = jax.jit(lambda p, x: M.lm_logits(cfg, p, x))
-
-    # ------------------------------------------------------------------
-    def _attend_impl(self, q, k_buf, v_buf, q_positions, kv_len):
-        kvpos = jnp.arange(k_buf.shape[1])
-        return L.attention(q, k_buf, v_buf, q_positions=q_positions,
-                           kv_positions=kvpos[None], kv_len=kv_len,
-                           causal=True, window=self.cfg.window,
-                           attn_softcap=self.cfg.attn_softcap)
-
-    def _act_impl(self, h):
-        k = self.cfg.mlp_kind
-        if k == "relu":
-            return jax.nn.relu(h)
-        if k == "relu2":
-            return jnp.square(jax.nn.relu(h))
-        if k == "gelu":
-            return jax.nn.gelu(h)
-        return h
-
-    def _layer(self, l: int, x: jax.Array, positions, cache, cur_len):
-        cfg = self.cfg
-        b, s, d = x.shape
-        blk = jax.tree.map(lambda a: a[l], self.blocks)["pos0"]
-        eng = self.engine
-
-        h = self._norm(blk["ln1"], x)
-        h2 = h.reshape(b * s, d)
-        q = eng.linear(h2, f"blk{l}.wq").reshape(b, s, cfg.n_heads, cfg.hd)
-        k = eng.linear(h2, f"blk{l}.wk").reshape(b, s, cfg.n_kv_heads, cfg.hd)
-        v = eng.linear(h2, f"blk{l}.wv").reshape(b, s, cfg.n_kv_heads, cfg.hd)
-        if cfg.pos_emb == "rope":
-            q = L.rope(q, positions, cfg.rope_theta)
-            k = L.rope(k, positions, cfg.rope_theta)
-        k_buf, v_buf = cache[l]
-        k_buf = jax.lax.dynamic_update_slice_in_dim(
-            k_buf, k.astype(k_buf.dtype), cur_len, axis=1)
-        v_buf = jax.lax.dynamic_update_slice_in_dim(
-            v_buf, v.astype(v_buf.dtype), cur_len, axis=1)
-        cache[l] = (k_buf, v_buf)
-        o = self._attend(q, k_buf, v_buf, positions, cur_len + s)
-        o = eng.linear(o.reshape(b * s, -1), f"blk{l}.wo").reshape(b, s, d)
-        x = x + o
-
-        h = self._norm(blk["ln2"], x).reshape(b * s, d)
-        if cfg.mlp_kind.startswith("gated"):
-            act = jax.nn.silu if cfg.mlp_kind == "gated_silu" else jax.nn.gelu
-            g = eng.linear(h, f"blk{l}.w_gate")
-            u = eng.linear(h, f"blk{l}.w_up")
-            y = eng.linear(act(g) * u, f"blk{l}.w_down")
-        else:
-            hmid = self._act(eng.linear(h, f"blk{l}.w_in"))
-            y = eng.linear(hmid, f"blk{l}.w_down")
-        return x + y.reshape(b, s, d), cache
-
-    def _forward(self, batch_tokens, cache, cur_len):
-        cfg = self.cfg
-        b, s = batch_tokens.shape
-        positions = cur_len + jnp.arange(s, dtype=jnp.int32)[None, :] \
-            + jnp.zeros((b, 1), jnp.int32)
-        x = M.embed_tokens(cfg, self.params, batch_tokens)
-        x = M._add_learned_pos(cfg, self.params, x, positions)
-        for l in range(cfg.n_layers):
-            x, cache = self._layer(l, x, positions, cache, cur_len)
-        x = self._norm(self.params["final_norm"], x[:, -1:])
-        logits = self._logits(self.params, x)
-        return logits[:, 0], cache
+    @property
+    def engine(self):
+        return self.backend.engine
 
     # ------------------------------------------------------------------
     def generate(self, tokens: np.ndarray, max_new_tokens: int,
-                 *, max_len: Optional[int] = None) -> Dict:
-        cfg = self.cfg
+                 *, max_len: Optional[int] = None, seed: int = 0) -> Dict:
         b, s = tokens.shape
+        if self.auto_retune:
+            self.backend.retune(b)
         total = max_len or (s + max_new_tokens)
-        cache = [
-            (jnp.zeros((b, total, cfg.n_kv_heads, cfg.hd), jnp.dtype(cfg.dtype)),
-             jnp.zeros((b, total, cfg.n_kv_heads, cfg.hd), jnp.dtype(cfg.dtype)))
-            for _ in range(cfg.n_layers)]
-        self.engine.reset_stats()
+        cache = self.backend.init_cache(b, total)
+        engine = self.backend.engine
+        engine.reset_stats()
         t0 = time.perf_counter()
-        logits, cache = self._forward(jnp.asarray(tokens), cache, 0)
-        tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        cache, logits = self.backend.prefill(
+            {"tokens": jnp.asarray(tokens)}, cache)
+        key = jax.random.PRNGKey(seed)
+        tok = self.sample(logits, key)
+        jax.block_until_ready(tok)
         t1 = time.perf_counter()
         out = [tok]
-        cur = s
-        for _ in range(max_new_tokens - 1):
-            logits, cache = self._forward(out[-1][:, None], cache, cur)
-            out.append(jnp.argmax(logits, axis=-1).astype(jnp.int32))
-            cur += 1
+        for i in range(max_new_tokens - 1):
+            key = jax.random.fold_in(key, i)
+            cache, logits = self.backend.decode(out[-1], cache)
+            out.append(self.sample(logits, key))
         jax.block_until_ready(out[-1])
         t2 = time.perf_counter()
-        stats = self.engine.finish_stats()
+        stats = engine.finish_stats()
         return {
             "tokens": np.stack([np.asarray(t) for t in out], axis=1),
             "prefill_s": t1 - t0,
@@ -214,9 +103,10 @@ class OffloadGenerator:
             "tokens_per_s": b * max(max_new_tokens - 1, 1) / max(t2 - t1, 1e-9),
             "stream_stats": stats,
             "alpha": self.policy.alpha,
-            "resident_bytes": self.engine.device_resident_bytes(),
-            "pinned_overhead_bytes": self.engine.pinned_overhead_bytes(),
+            "batch": self.backend.batch,
+            "resident_bytes": engine.device_resident_bytes(),
+            "pinned_overhead_bytes": engine.pinned_overhead_bytes(),
         }
 
     def close(self):
-        self.engine.close()
+        self.backend.close()

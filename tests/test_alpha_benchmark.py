@@ -1,5 +1,9 @@
 """The alpha benchmark recovers a planted equilibrium (Eq. 10-12)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.alpha_benchmark import probe_schedule, refine_alpha

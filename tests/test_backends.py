@@ -1,0 +1,136 @@
+"""The backend seam: one layer-math core, pluggable linear backends.
+
+ResidentBackend (jitted device matmuls) and HeteGenBackend (offloaded,
+alpha-split) execute the SAME shared layer functions; these tests pin the
+contract: identical generations across backends, batched offload decode,
+continuous batching over offloaded weights, and batch-aware policies.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.backends import (HeteGenBackend, ResidentBackend,
+                                    ScanResidentBackend)
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.engine import Generator
+from repro.serving.offload_runtime import OffloadGenerator
+
+
+@pytest.fixture(scope="module")
+def opt_setup():
+    cfg = reduced(get_config("opt-6.7b"), layers=3)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def test_resident_backend_matches_scan_path(opt_setup, rng):
+    """The backend-parameterized forward == the scan-stacked trunk."""
+    cfg, params = opt_setup
+    prompt = rng.integers(0, cfg.vocab_size, (2, 9)).astype(np.int32)
+    batch = {"tokens": jnp.asarray(prompt)}
+    ref = Generator(cfg, params).generate(batch, 6)
+    res = Generator(cfg, backend=ResidentBackend(cfg, params)).generate(
+        batch, 6)
+    assert res.tokens == ref.tokens
+
+
+@pytest.mark.parametrize("batch", [1, 4])
+def test_batched_offload_matches_resident(opt_setup, rng, batch):
+    """Batched offload decode (the HeteGen backend at batch > 1) is
+    token-exact vs the resident jitted path, with the placement plan built
+    for the real batch size."""
+    cfg, params = opt_setup
+    prompt = rng.integers(0, cfg.vocab_size, (batch, 7)).astype(np.int32)
+    ref = Generator(cfg, params).generate({"tokens": jnp.asarray(prompt)}, 5)
+    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                           batch=batch)
+    res = off.generate(prompt, 5)
+    assert res["tokens"].tolist() == ref.tokens
+    assert off.policy.batch == batch
+    assert res["batch"] == batch
+    off.close()
+
+
+def test_offload_auto_retunes_to_real_batch(opt_setup, rng):
+    """generate() with a batch different from the constructed plan retunes
+    build_policy to the observed batch size."""
+    cfg, params = opt_setup
+    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0)
+    assert off.policy.batch == 1
+    prompt = rng.integers(0, cfg.vocab_size, (4, 6)).astype(np.int32)
+    res = off.generate(prompt, 3)
+    assert off.policy.batch == 4
+    ref = Generator(cfg, params).generate({"tokens": jnp.asarray(prompt)}, 3)
+    assert res["tokens"].tolist() == ref.tokens
+    off.close()
+
+
+def test_alpha_shifts_with_batch(opt_setup):
+    """Paper §4.1: larger decode batches raise arithmetic intensity, derate
+    the host GEMM, and push more of the split onto the accelerator."""
+    from repro.core.alpha import alpha_for_batch
+
+    cfg, params = opt_setup
+    be = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                        use_alpha_benchmark=False)
+    a1 = be.retune(1).alpha
+    a64 = be.retune(64).alpha
+    assert a64 > a1
+    # the policy prior IS the batch-aware law
+    assert a1 == pytest.approx(alpha_for_batch(PAPER_A10, 1))
+    assert a64 == pytest.approx(alpha_for_batch(PAPER_A10, 64))
+    be.close()
+
+
+def test_batcher_over_hetegen_backend(opt_setup, rng):
+    """Slot-based continuous batching over offloaded weights: identical
+    generations to the resident backend for a mixed-length request set."""
+    cfg, params = opt_setup
+    slots = 3
+    prompts = [list(rng.integers(0, cfg.vocab_size, n))
+               for n in (5, 9, 3, 7)]
+    max_news = [6, 4, 5, 3]
+
+    ref_b = ContinuousBatcher(cfg, params, max_slots=slots, max_len=64)
+    ref_ids = [ref_b.submit(p, m) for p, m in zip(prompts, max_news)]
+    ref_out = ref_b.run_until_done()
+
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                        batch=slots)
+    off_b = ContinuousBatcher(cfg, backend=hb, max_slots=slots, max_len=64)
+    off_ids = [off_b.submit(p, m) for p, m in zip(prompts, max_news)]
+    off_out = off_b.run_until_done()
+
+    assert hb.policy.batch == slots
+    for r, o in zip(ref_ids, off_ids):
+        assert ref_out[r] == off_out[o], (r, o)
+    hb.close()
+
+
+def test_batcher_over_resident_backend_staggered(opt_setup, rng):
+    """The jitted ResidentBackend drives the batcher too, including
+    mid-flight joins (per-slot len vector through the shared layer math)."""
+    cfg, params = opt_setup
+    prompts = rng.integers(0, cfg.vocab_size, (2, 6))
+    g = Generator(cfg, params)
+    ref0 = g.generate({"tokens": jnp.asarray(prompts[:1], jnp.int32)}, 6)
+    ref1 = g.generate({"tokens": jnp.asarray(prompts[1:], jnp.int32)}, 4)
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          max_slots=2, max_len=64)
+    r0 = b.submit(list(prompts[0]), 6)
+    b.step(); b.step()
+    r1 = b.submit(list(prompts[1]), 4)
+    outs = b.run_until_done()
+    assert outs[r0] == ref0.tokens[0]
+    assert outs[r1] == ref1.tokens[0]
+
+
+def test_backend_rejects_unsupported_family():
+    cfg = reduced(get_config("mamba2-2.7b"))
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    with pytest.raises(NotImplementedError):
+        ResidentBackend(cfg, params)

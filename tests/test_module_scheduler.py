@@ -1,5 +1,9 @@
 """Gain-ranked residency promotion (Eq. 13)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.module_scheduler import ModuleInfo, dynamic_range, schedule

@@ -1,5 +1,7 @@
 """Discrete-event simulator invariants + paper-qualitative behavior."""
 import pytest
+pytest.importorskip("hypothesis")
+
 from hypothesis import given, settings, strategies as st
 
 from repro.core.hw import PAPER_A10
