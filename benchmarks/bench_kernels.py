@@ -44,4 +44,25 @@ def run():
     bm = jnp.asarray(rng.standard_normal((2, 256, 4, 8)), jnp.float32)
     timeit("ssd_chunk_256", lambda *t: ref.ssd_chunk(*t, chunk=64)[0],
            xs, dt, a, bm, bm)
+
+    # paged vs dense decode attention at the same total KV: the XLA-level
+    # cost of reading the cache through a block table (the gather the
+    # Pallas kernel's index maps avoid on TPU) vs a contiguous cache
+    b, hq, hkv, s, d, ps = 4, 32, 8, 1024, 128, 64
+    nb = s // ps
+    q = jnp.asarray(rng.standard_normal((b, hq, d)), jnp.float32)
+    kd = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    vd = jnp.asarray(rng.standard_normal((b, hkv, s, d)), jnp.float32)
+    lens = jnp.full((b,), s, jnp.int32)
+    flops = 4 * b * hq * s * d
+    timeit("decode_dense_1024", lambda *t: ref.decode_attention(*t),
+           q, kd, vd, lens, flops=flops)
+    n_pages = 1 + b * nb
+    bt = jnp.asarray(
+        rng.permutation(np.arange(1, n_pages)).reshape(b, nb), jnp.int32)
+    kp = jnp.asarray(rng.standard_normal((n_pages, hkv, ps, d)), jnp.float32)
+    vp = jnp.asarray(rng.standard_normal((n_pages, hkv, ps, d)), jnp.float32)
+    timeit("decode_paged_1024",
+           lambda *t: ref.paged_decode_attention(*t),
+           q, kp, vp, bt, lens, flops=flops)
     return rows

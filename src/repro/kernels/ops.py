@@ -19,6 +19,7 @@ import jax
 from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hete_matmul as _mm
+from repro.kernels import paged_attention as _paged
 from repro.kernels import q8_matmul as _q8
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rn
@@ -86,6 +87,19 @@ def decode_attention(q, k, v, kv_len, *, softcap=None, **kw):
         return _ref.decode_attention(q, k, v, kv_len, softcap=softcap)
     return _dec.decode_attention(q, k, v, kv_len, softcap=softcap,
                                  interpret=(m == "interpret"), **kw)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
+                           k_scale=None, v_scale=None, softcap=None, **kw):
+    m = _mode()
+    if m == "ref":
+        return _ref.paged_decode_attention(
+            q, k_pages, v_pages, block_tables, kv_len,
+            k_scale=k_scale, v_scale=v_scale, softcap=softcap)
+    return _paged.paged_decode_attention(
+        q, k_pages, v_pages, block_tables, kv_len,
+        k_scale=k_scale, v_scale=v_scale, softcap=softcap,
+        interpret=(m == "interpret"), **kw)
 
 
 def rmsnorm(x, scale, *, eps=1e-6, plus_one=False, **kw):

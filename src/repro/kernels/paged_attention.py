@@ -1,0 +1,166 @@
+"""Paged flash-decode: single-token attention through a block table.
+
+The paged KV cache (:mod:`repro.serving.kv_cache`) stores tokens in
+fixed-size pages drawn from a global pool, with a per-sequence block table
+mapping logical kv blocks to physical page ids.  This kernel is
+:mod:`repro.kernels.decode_attention` re-read through that indirection:
+the grid still walks kv blocks innermost with online-softmax accumulators
+in VMEM, but the K/V BlockSpec index maps dereference the block table
+(a scalar-prefetch operand, available before the body runs) so each step
+DMAs the *physical* page for the logical block — the cache is never
+materialized contiguously.
+
+Page pools are laid out (n_pages, Hkv, page_size, hd): one (page_size, hd)
+tile per (page, head) grid step, sublane = token-in-page, lane = head dim.
+``kv_len`` is per-batch int32 in SMEM exactly as in the dense kernel, so
+one compiled kernel serves every mix of slot lengths in a continuous
+batch.  The q8 variant mirrors ``decode_attention``'s: int8 pages plus
+per-(page, head, token) scale pages, dequantized in VMEM so HBM only ever
+moves int8.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _paged_kernel(lens_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_ref, l_ref, acc_ref, *,
+                  scale, n_kv, page_size, hq, softcap):
+    _paged_body(lens_ref, bt_ref, q_ref, k_ref, v_ref, None, None, o_ref,
+                m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                page_size=page_size, hq=hq, softcap=softcap)
+
+
+def _paged_kernel_q8(lens_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                     o_ref, m_ref, l_ref, acc_ref, *,
+                     scale, n_kv, page_size, hq, softcap):
+    _paged_body(lens_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                page_size=page_size, hq=hq, softcap=softcap)
+
+
+def _paged_body(lens_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
+                m_ref, l_ref, acc_ref, *,
+                scale, n_kv, page_size, hq, softcap):
+    bh = pl.program_id(0)
+    kj = pl.program_id(1)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    kv_len = lens_ref[bh // hq]
+    k_pos = kj * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (1, page_size), 1)
+
+    @pl.when(kj * page_size < kv_len)         # skip fully-invalid blocks
+    def _body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (1, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (ps, d)
+        if ks_ref is not None:
+            k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        s = jnp.where(k_pos < kv_len, s, NEG_INF)         # (1, ps)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0]
+        if vs_ref is not None:
+            v = v.astype(jnp.float32) \
+                * vs_ref[0, 0].astype(jnp.float32)[:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_decode_attention(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, block_tables: jax.Array,
+                           kv_len: jax.Array, *,
+                           k_scale: Optional[jax.Array] = None,
+                           v_scale: Optional[jax.Array] = None,
+                           softcap: Optional[float] = None,
+                           interpret: bool = False) -> jax.Array:
+    """q (B, Hq, D); k/v_pages (P, Hkv, page_size, D); block_tables
+    (B, n_blocks) int32; kv_len (B,) int32 -> (B, Hq, D).
+
+    Logical position t of batch b lives in page
+    ``block_tables[b, t // page_size]`` at offset ``t % page_size``;
+    positions at or beyond ``kv_len[b]`` are masked (their block-table
+    entries may point anywhere valid, e.g. the allocator's trash page).
+    With ``k_scale``/``v_scale`` (P, Hkv, page_size): pages are int8 and
+    dequantized per block inside VMEM.
+    """
+    b, hq, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    q8 = k_scale is not None
+
+    qf = q.reshape(b * hq, 1, d)
+
+    # with num_scalar_prefetch=2 every index_map receives (lens, bt) as
+    # trailing arguments — bt is what turns a logical block id into the
+    # physical page to DMA
+    def kv_index(h, j, lens, bt):
+        return (bt[h // hq, j], (h % hq) // group, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, 1, d), lambda h, j, lens, bt: (h, 0, 0)),
+        pl.BlockSpec((1, 1, ps, d), kv_index),
+        pl.BlockSpec((1, 1, ps, d), kv_index),
+    ]
+    operands = [kv_len.astype(jnp.int32), block_tables.astype(jnp.int32),
+                qf, k_pages, v_pages]
+    if q8:
+        def sc_index(h, j, lens, bt):
+            return (bt[h // hq, j], (h % hq) // group, 0)
+        in_specs += [pl.BlockSpec((1, 1, ps), sc_index),
+                     pl.BlockSpec((1, 1, ps), sc_index)]
+        operands += [k_scale, v_scale]
+        kern = _paged_kernel_q8
+    else:
+        kern = _paged_kernel
+    kernel = functools.partial(kern, scale=scale, n_kv=nb, page_size=ps,
+                               hq=hq, softcap=softcap)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hq, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, 1, d), lambda h, j, lens, bt: (h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, 1), jnp.float32),
+            pltpu.VMEM((1, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, 1, d), q.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out.reshape(b, hq, d)

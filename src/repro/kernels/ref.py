@@ -87,6 +87,44 @@ def decode_attention(q, k, v, kv_len, *, softcap=None):
     return o.reshape(b, hq, d).astype(q.dtype)
 
 
+def gather_pages(pages, block_tables):
+    """(P, H, ps, D) pages + (B, nb) tables -> contiguous (B, H, nb*ps, D).
+
+    The materialized-copy read of a paged cache (what the Pallas kernel's
+    block-table index maps avoid); also the shared gather for prefill
+    attention over paged caches.
+    """
+    g = pages[block_tables]                    # (B, nb, H, ps, D)
+    b, nb, h, ps, d = g.shape
+    return g.transpose(0, 2, 1, 3, 4).reshape(b, h, nb * ps, d)
+
+
+def gather_page_scales(scales, block_tables):
+    """(P, H, ps) scale pages + (B, nb) tables -> (B, H, nb*ps)."""
+    g = scales[block_tables]                   # (B, nb, H, ps)
+    b, nb, h, ps = g.shape
+    return g.transpose(0, 2, 1, 3).reshape(b, h, nb * ps)
+
+
+def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
+                           k_scale=None, v_scale=None, softcap=None):
+    """q (B,Hq,D); k/v_pages (P,Hkv,ps,D); block_tables (B,nb); kv_len (B,).
+
+    Gathers physical pages into a contiguous cache, then defers to the
+    dense :func:`decode_attention` oracle — positions >= kv_len are
+    masked, so trash-page contents never reach the softmax.
+    """
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) \
+            * gather_page_scales(k_scale, block_tables)[..., None]
+        v = v.astype(jnp.float32) \
+            * gather_page_scales(v_scale, block_tables)[..., None]
+    out = decode_attention(q, k, v, kv_len, softcap=softcap)
+    return out.astype(q.dtype)
+
+
 def rmsnorm(x, scale, *, eps=1e-6, plus_one=False):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

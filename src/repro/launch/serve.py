@@ -11,6 +11,13 @@ Modes:
     batch-offload  continuous batching over HeteGen-offloaded weights
                    (slot-based scheduling, host-resident parameters)
 
+``--paged`` switches the batch modes to the paged KV cache
+(:mod:`repro.serving.kv_cache`): slot admit/release maps/unmaps
+fixed-size pages through block tables instead of copying cache slices —
+token-identical to the dense path under greedy sampling (stochastic
+samplers only match in distribution: paged decode compacts the batch,
+which renumbers the rows a per-step key is consumed by).
+
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m \\
         --mode offload --budget-frac 0.25 --requests 4
 
@@ -34,6 +41,9 @@ def main() -> None:
     ap.add_argument("--prompt-len", type=int, default=16)
     ap.add_argument("--max-new", type=int, default=16)
     ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--paged", action="store_true",
+                    help="paged KV cache for the batch modes")
+    ap.add_argument("--page-size", type=int, default=16)
     ap.add_argument("--hw", default="a10", help="hardware model for the "
                     "alpha law (a10 | v5e)")
     ap.add_argument("--dryrun", action="store_true")
@@ -101,15 +111,25 @@ def main() -> None:
                 budget_bytes=args.budget_frac * total)
             print(f"offload backend: alpha={backend.policy.alpha:.3f} "
                   f"plan tuned for batch={backend.policy.batch}")
+        if args.paged and backend is None:
+            # the scan-stacked default cache is not pageable; the paged
+            # resident path runs through the per-layer backend cache
+            from repro.serving.backends import ResidentBackend
+            backend = ResidentBackend(cfg, params)
         b = ContinuousBatcher(cfg, params, backend=backend,
                               max_slots=max_slots,
-                              max_len=args.prompt_len + args.max_new + 8)
+                              max_len=args.prompt_len + args.max_new + 8,
+                              paged=args.paged, page_size=args.page_size)
         for i in range(args.requests):
             b.submit(list(prompt[i]), args.max_new)
         outs = b.run_until_done()
         total_toks = sum(len(v) for v in outs.values())
         print(f"continuous batching: {len(outs)} requests, "
               f"{total_toks} tokens generated")
+        if b.kv is not None:
+            used = b.kv.n_pages - 1 - b.kv.free_pages
+            print(f"paged KV: page_size={b.kv.page_size} "
+                  f"pool={b.kv.n_pages - 1} pages, {used} still mapped")
         if backend is not None:
             backend.close()
 

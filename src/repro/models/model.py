@@ -21,6 +21,7 @@ carried through the same scan.
 
 from __future__ import annotations
 
+import functools
 import math
 from typing import Dict, Optional, Tuple
 
@@ -338,7 +339,8 @@ def _apply_attn_layer(cfg, p, x, positions, *, kind: str,
                       rules: ShardingRules = NO_RULES,
                       cross_kv: Optional[Tuple] = None,
                       linear=None, kv_format: str = "bhtd",
-                      norm_fn=None, attend_fn=None):
+                      norm_fn=None, attend_fn=None,
+                      block_tables=None, paged_attend_fn=None):
     """Pre-norm attention + residual.  Returns (x, new_kv_cache).
 
     ``kv_cache`` is (k, v) buffers (B,T,...) to update at ``cur_len``;
@@ -353,6 +355,12 @@ def _apply_attn_layer(cfg, p, x, positions, *, kind: str,
     ``norm_fn``/``attend_fn`` optionally replace the inline norm /
     attention with pre-jitted equivalents (the eager offload path keeps
     its small device pieces fused; see :func:`make_backend_ops`).
+
+    With ``block_tables`` (B, nb), ``kv_cache`` holds *page pools*
+    instead of dense buffers — (k_pages, v_pages) in (P, Hkv, ps, hd)
+    layout, or (k, v, k_scale, v_scale) pools for q8 pages — written via
+    :func:`_paged_write` and attended through :func:`_paged_attend` (or
+    the pre-jitted ``paged_attend_fn``).
     """
     window = cfg.window if kind == "local" else None
     norm = norm_fn or (lambda pp, h: L.apply_norm(cfg, pp, h))
@@ -395,6 +403,24 @@ def _apply_attn_layer(cfg, p, x, positions, *, kind: str,
                               window=window, attn_softcap=cfg.attn_softcap,
                               rules=rules)
             new_cache = None
+        elif block_tables is not None:
+            if len(kv_cache) == 4:      # q8 pools: int8 pages + scales
+                k_pg, v_pg, ks_pg, vs_pg = kv_cache
+                k_pg, ks_pg = _paged_write_q8(k_pg, ks_pg, k, block_tables,
+                                              cur_len)
+                v_pg, vs_pg = _paged_write_q8(v_pg, vs_pg, v, block_tables,
+                                              cur_len)
+                new_cache = (k_pg, v_pg, ks_pg, vs_pg)
+                scales = (ks_pg, vs_pg)
+            else:
+                k_pg, v_pg = kv_cache
+                k_pg = _paged_write(k_pg, k, block_tables, cur_len)
+                v_pg = _paged_write(v_pg, v, block_tables, cur_len)
+                new_cache = (k_pg, v_pg)
+                scales = (None, None)
+            pa = paged_attend_fn or functools.partial(_paged_attend, cfg)
+            out = pa(q, k_pg, v_pg, block_tables, positions,
+                     cur_len + k.shape[1], window, *scales)
         else:
             k_buf, v_buf = kv_cache     # (B, Hkv, T, D) or (B, T, Hkv, D)
             k_buf = _update_kv(k_buf, k, cur_len, layout=kv_format)
@@ -809,6 +835,81 @@ def _stack_layer(stack, li):
     return jax.lax.dynamic_index_in_dim(stack, li, 0, keepdims=False)
 
 
+def _paged_positions(block_tables, new, cur_len, page_size):
+    """(page, offset) scatter coordinates for writing ``new`` (B, s, ...)
+    into a page pool through ``block_tables`` (B, nb) at ``cur_len``
+    (scalar, or (B,) per-slot vector with s == 1)."""
+    b, s = new.shape[:2]
+    cl = jnp.asarray(cur_len, jnp.int32)
+    if cl.ndim == 0:
+        pos = cl + jnp.arange(s, dtype=jnp.int32)          # (s,)
+        page = block_tables[:, pos // page_size]            # (B, s)
+        off = jnp.broadcast_to((pos % page_size)[None], (b, s))
+    else:
+        page = block_tables[jnp.arange(b), cl // page_size][:, None]
+        off = (cl % page_size)[:, None]                     # (B, 1)
+    return page, off
+
+
+def _paged_write(pages, new, block_tables, cur_len):
+    """Scatter ``new`` (B, s, H, D) into a (P, H, page_size, D) pool.
+
+    The paged counterpart of :func:`_update_kv`: physical pages come from
+    the block table, so the write touches only the slot's own tokens —
+    never a (B, max_len) slice.  Unmapped table entries point at the
+    allocator's trash page, keeping masked garbage writes harmless.
+    """
+    page, off = _paged_positions(block_tables, new, cur_len, pages.shape[2])
+    return pages.at[page, :, off].set(new.astype(pages.dtype))
+
+
+def _paged_write_q8(pages, scale_pages, new, block_tables, cur_len):
+    """Quantize ``new`` (B, s, H, D) and scatter into int8 pages plus
+    per-(page, head, token) scale pages (P, H, page_size)."""
+    q, m = _quantize_kv(new)
+    page, off = _paged_positions(block_tables, new, cur_len, pages.shape[2])
+    pages = pages.at[page, :, off].set(q)
+    scale_pages = scale_pages.at[page, :, off].set(
+        m.astype(scale_pages.dtype))
+    return pages, scale_pages
+
+
+def _paged_attend(cfg, q, k_pages, v_pages, block_tables, q_positions,
+                  kv_len, window, k_scale=None, v_scale=None):
+    """Attention over a paged cache.  Decode (s == 1, no window) runs the
+    paged flash-decode kernel — K/V are read through the block table at
+    HBM rate, never materialized contiguously.  Prefill (and windowed
+    layers, which the decode kernel does not mask) takes the gather
+    fallback: pages are assembled into a (B, Hkv, T, D) view and attended
+    with the shared masked-attention math — fine for the compute-bound
+    phase."""
+    from repro.kernels import ref as R
+
+    b, s = q.shape[:2]
+    lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
+    if s == 1 and window is None:
+        from repro.kernels import ops as K
+        out = K.paged_decode_attention(q[:, 0], k_pages, v_pages,
+                                       block_tables, lens,
+                                       k_scale=k_scale, v_scale=v_scale,
+                                       softcap=cfg.attn_softcap)
+        return out[:, None]
+    k_buf = R.gather_pages(k_pages, block_tables)
+    v_buf = R.gather_pages(v_pages, block_tables)
+    if k_scale is not None:
+        # dequantize in fp32, exactly as the paged kernel and its oracle
+        # do — prefill and decode must read the same KV values
+        k_buf = k_buf.astype(jnp.float32) \
+            * R.gather_page_scales(k_scale, block_tables)[..., None]
+        v_buf = v_buf.astype(jnp.float32) \
+            * R.gather_page_scales(v_scale, block_tables)[..., None]
+    kvpos = jnp.arange(k_buf.shape[2])
+    return L.attention(q, k_buf, v_buf, q_positions=q_positions,
+                       kv_positions=kvpos[None], kv_len=lens, causal=True,
+                       window=window, attn_softcap=cfg.attn_softcap,
+                       kv_format="bhtd")
+
+
 def _update_kv(buf, new, cur_len, *, layout: str = "bthd"):
     """Write ``new`` (B,s,H,D) into a cache buffer at ``cur_len``.
 
@@ -1059,7 +1160,7 @@ def decode_step(cfg: ModelConfig, params: Dict, token: jax.Array,
 
 def decoder_layer(cfg, p, x, positions, *, kv_cache, cur_len, linear,
                   kind: str = "dense", rules: ShardingRules = NO_RULES,
-                  ops: Optional[Dict] = None):
+                  ops: Optional[Dict] = None, block_tables=None):
     """One full decoder layer (attention + FFN), backend-parameterized.
 
     ``kv_cache`` is this layer's (k, v) buffers in (B, T, Hkv, hd) layout;
@@ -1067,6 +1168,11 @@ def decoder_layer(cfg, p, x, positions, *, kv_cache, cur_len, linear,
     continuous batching.  ``ops`` optionally carries pre-jitted "norm" /
     "attend" device pieces (:func:`make_backend_ops`) for eager drivers.
     Returns (x, (k_buf, v_buf)).
+
+    With ``block_tables`` the layer runs against paged page pools instead
+    (``kv_cache`` = (k_pages, v_pages[, k_scale, v_scale]); see
+    :mod:`repro.serving.kv_cache`): writes scatter through the block
+    table and decode attends via the paged flash-decode kernel.
     """
     ops = ops or {}
     x, new_kv = _apply_attn_layer(cfg, p, x, positions, kind=kind,
@@ -1074,7 +1180,9 @@ def decoder_layer(cfg, p, x, positions, *, kv_cache, cur_len, linear,
                                   rules=rules, linear=linear,
                                   kv_format="bthd",
                                   norm_fn=ops.get("norm"),
-                                  attend_fn=ops.get("attend"))
+                                  attend_fn=ops.get("attend"),
+                                  block_tables=block_tables,
+                                  paged_attend_fn=ops.get("paged_attend"))
     x = _apply_ffn(cfg, p, x, kind, rules, linear=linear,
                    norm_fn=ops.get("norm"))
     return x, new_kv
@@ -1094,8 +1202,15 @@ def make_backend_ops(cfg: ModelConfig) -> Dict:
                            causal=True, window=window,
                            attn_softcap=cfg.attn_softcap, kv_format="bthd")
 
+    def _paged(q, k_pages, v_pages, block_tables, q_positions, kv_len,
+               window, k_scale=None, v_scale=None):
+        return _paged_attend(cfg, q, k_pages, v_pages, block_tables,
+                             q_positions, kv_len, window,
+                             k_scale=k_scale, v_scale=v_scale)
+
     return {"norm": jax.jit(partial(L.apply_norm, cfg)),
             "attend": jax.jit(_attend, static_argnums=(5,)),
+            "paged_attend": jax.jit(_paged, static_argnums=(6,)),
             "logits": jax.jit(lambda shared, x: lm_logits(cfg, shared, x))}
 
 
@@ -1155,7 +1270,8 @@ def init_backend_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
     """Per-layer KV cache for backend execution: "k{l}"/"v{l}" buffers in
     (B, T, Hkv, hd) layout plus "len" (scalar; continuous batching replaces
     it with a (B,) per-slot vector).  Batch lives on axis 0 of every
-    buffer."""
+    buffer.  The paged alternative (no dense (B, T) buffers) is minted by
+    :meth:`repro.serving.kv_cache.PagedKVCache.init_cache`."""
     dt = _dtype(cfg)
     cache: Dict = {"len": jnp.zeros((), jnp.int32)}
     for l in range(cfg.n_layers):
@@ -1172,7 +1288,12 @@ def backend_prefill(cfg: ModelConfig, shared: Dict, batch: Dict, cache: Dict,
     """Prompt/step processing through the shared layer math with all
     linears routed through ``linear(x, "blk{l}.{name}")``.  Mirrors
     :func:`prefill` for the dense GQA families.  ``ops`` carries the
-    pre-jitted device pieces for eager drivers (:func:`make_backend_ops`)."""
+    pre-jitted device pieces for eager drivers (:func:`make_backend_ops`).
+
+    A cache holding "pages_k{l}"/"pages_v{l}" pools plus "block_tables"
+    (from :class:`repro.serving.kv_cache.PagedKVCache`) switches every
+    layer to the paged plumbing; "pages_ks{l}"/"pages_vs{l}" scale pools
+    additionally select q8 (int8-page) writes."""
     ops = ops or {}
     if cfg.embeds_input and "embeds" in batch:
         x = batch["embeds"].astype(_dtype(cfg))
@@ -1186,13 +1307,28 @@ def backend_prefill(cfg: ModelConfig, shared: Dict, batch: Dict, cache: Dict,
     x = _add_learned_pos(cfg, shared, x, positions)
     kinds = cfg.layer_kinds()
     new_cache = dict(cache)
+    paged = "pages_k0" in cache         # paged pools instead of dense bufs
+    bt = cache.get("block_tables")
+    q8 = "pages_ks0" in cache
     for l in range(cfg.n_layers):
         lin = (lambda h, nm, _l=l: linear(h, f"blk{_l}.{nm}"))
+        if paged:
+            kvc = (cache[f"pages_k{l}"], cache[f"pages_v{l}"])
+            if q8:
+                kvc += (cache[f"pages_ks{l}"], cache[f"pages_vs{l}"])
+        else:
+            kvc = (cache[f"k{l}"], cache[f"v{l}"])
         x, kv = decoder_layer(cfg, shared["layers"][l], x, positions,
-                              kv_cache=(cache[f"k{l}"], cache[f"v{l}"]),
-                              cur_len=cur_len, linear=lin, kind=kinds[l],
-                              ops=ops)
-        new_cache[f"k{l}"], new_cache[f"v{l}"] = kv
+                              kv_cache=kvc, cur_len=cur_len, linear=lin,
+                              kind=kinds[l], ops=ops,
+                              block_tables=bt if paged else None)
+        if paged:
+            new_cache[f"pages_k{l}"], new_cache[f"pages_v{l}"] = kv[:2]
+            if q8:
+                (new_cache[f"pages_ks{l}"],
+                 new_cache[f"pages_vs{l}"]) = kv[2:]
+        else:
+            new_cache[f"k{l}"], new_cache[f"v{l}"] = kv
     new_cache["len"] = cur_len + s
     norm = ops.get("norm") or (lambda pp, h: L.apply_norm(cfg, pp, h))
     x = norm(shared["final_norm"], x[:, -1:])

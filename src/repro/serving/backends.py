@@ -35,6 +35,7 @@ from repro.core.hw import HardwareSpec, TPU_V5E
 from repro.core.policy import LinearSpec, PolicyResult, build_policy
 from repro.models import model as M
 from repro.models.config import ModelConfig
+from repro.serving.kv_cache import PagedKVCache
 
 
 @runtime_checkable
@@ -53,6 +54,12 @@ class LinearBackend(Protocol):
     def linear(self, x: jax.Array, name: str) -> jax.Array: ...
 
     def init_cache(self, batch: int, max_len: int) -> Dict: ...
+
+    def init_paged_cache(self, batch: int, max_len: int, *,
+                         page_size: int = 16,
+                         n_pages: Optional[int] = None,
+                         kv_dtype: Optional[str] = None
+                         ) -> "PagedKVCache": ...
 
     def prefill(self, batch: Dict, cache: Dict
                 ) -> Tuple[Dict, jax.Array]: ...
@@ -126,7 +133,10 @@ class ResidentBackend:
             return M.backend_decode(cfg, shared, token, cache,
                                     linear=_linear_from(weights, biases))
 
-        self._prefill = jax.jit(_prefill)
+        # the cache is donated in BOTH steps: callers never reuse the
+        # input cache, and for paged admission donation lets the page
+        # pools update in place instead of copying every pool per admit
+        self._prefill = jax.jit(_prefill, donate_argnums=(4,))
         self._decode = jax.jit(_decode, donate_argnums=(4,))
 
     # -- LinearBackend surface -----------------------------------------
@@ -135,6 +145,13 @@ class ResidentBackend:
 
     def init_cache(self, batch: int, max_len: int) -> Dict:
         return M.init_backend_cache(self.cfg, batch, max_len)
+
+    def init_paged_cache(self, batch: int, max_len: int, *,
+                         page_size: int = 16,
+                         n_pages: Optional[int] = None,
+                         kv_dtype: Optional[str] = None) -> PagedKVCache:
+        return PagedKVCache(self.cfg, batch, max_len, page_size=page_size,
+                            n_pages=n_pages, kv_dtype=kv_dtype)
 
     def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
         return self._prefill(self.shared, self.weights, self.biases,
@@ -176,6 +193,11 @@ class ScanResidentBackend:
 
     def init_cache(self, batch: int, max_len: int) -> Dict:
         return M.init_cache(self.cfg, batch, max_len)
+
+    def init_paged_cache(self, batch: int, max_len: int, **kw):
+        raise NotImplementedError(
+            "the scan-stacked cache is not pageable; use ResidentBackend "
+            "or HeteGenBackend for paged serving")
 
     def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
         return self._prefill_fn(self.params, batch, cache)
@@ -254,6 +276,13 @@ class HeteGenBackend:
 
     def init_cache(self, batch: int, max_len: int) -> Dict:
         return M.init_backend_cache(self.cfg, batch, max_len)
+
+    def init_paged_cache(self, batch: int, max_len: int, *,
+                         page_size: int = 16,
+                         n_pages: Optional[int] = None,
+                         kv_dtype: Optional[str] = None) -> PagedKVCache:
+        return PagedKVCache(self.cfg, batch, max_len, page_size=page_size,
+                            n_pages=n_pages, kv_dtype=kv_dtype)
 
     def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
         return M.backend_prefill(self.cfg, self.shared, batch, cache,

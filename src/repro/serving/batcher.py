@@ -21,6 +21,31 @@ parameters, with the placement plan tuned for the decode batch
 (= ``max_slots``).  Supported for the dense/moe/vlm transformer families
 (per-slot state for SSM trunks would need per-slot state snapshots; see
 DESIGN.md §8).
+
+``paged=True`` swaps the dense per-layer cache for the
+:class:`repro.serving.kv_cache.PagedKVCache` subsystem: admission *maps*
+pages for the request and prefill scatters its KV straight into them
+through a batch-1 block-table view; release *unmaps* them back to the
+free list.  No whole-cache slice is ever copied in or out of the global
+cache, and when the pool runs dry requests simply stay queued until a
+finishing request returns pages.  Decode attends through the paged
+flash-decode kernel (block-table gather on TPU, jnp gather oracle here)
+and *compacts* to the active slots: the pools are global, so selecting
+the active block-table rows shrinks the decode batch to the real
+occupancy instead of computing masked garbage in empty slots.  Paged
+results are token-identical to the dense path under greedy sampling;
+stochastic samplers draw per logits *row*, and compaction renumbers
+rows, so they match only in distribution.  ``kv_dtype="int8"`` stores
+q8 pages (int8 + scale pools) for half the cache footprint.
+
+``retune_hysteresis`` (with a retune-capable backend, i.e. HeteGen)
+re-tunes the placement plan when the *executed* decode batch drifts from
+the planned batch by more than the hysteresis margin — §4.1's cost model
+shifts alpha with compute intensity, but rebuilding the engine every
+time one request finishes would thrash; the margin makes retunes sticky.
+Only paged mode executes occupancy-sized batches (compaction), so only
+paged mode ever re-tunes; the dense cache always runs ``max_slots``-wide
+and its plan correctly stays put.
 """
 
 from __future__ import annotations
@@ -35,6 +60,7 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serving.backends import ScanResidentBackend
+from repro.serving.kv_cache import PagesExhausted, slot_view
 from repro.serving.sampling import SamplerConfig, make_sampler
 
 
@@ -53,7 +79,10 @@ class ContinuousBatcher:
     def __init__(self, cfg: ModelConfig, params: Optional[Dict] = None, *,
                  max_slots: int = 4, max_len: int = 512,
                  backend=None, sampler: SamplerConfig = SamplerConfig(),
-                 seed: int = 0):
+                 seed: int = 0, paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 retune_hysteresis: Optional[int] = None):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
@@ -69,7 +98,15 @@ class ContinuousBatcher:
         self.max_len = max_len
         self.sample = make_sampler(sampler)
         self._key = jax.random.PRNGKey(seed)
-        self.cache = self.backend.init_cache(max_slots, max_len)
+        self.paged = paged
+        self.kv = None
+        if paged:
+            self.kv = self.backend.init_paged_cache(
+                max_slots, max_len, page_size=page_size, n_pages=n_pages,
+                kv_dtype=kv_dtype)
+            self.cache = self.kv.init_cache()
+        else:
+            self.cache = self.backend.init_cache(max_slots, max_len)
         # per-slot lengths (vector 'len' drives per-slot scatter updates)
         self.cache["len"] = jnp.zeros((max_slots,), jnp.int32)
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
@@ -77,6 +114,9 @@ class ContinuousBatcher:
         self.requests: Dict[int, Request] = {}
         self._ids = itertools.count()
         self.queue: List[Request] = []
+        self.retune_hysteresis = retune_hysteresis
+        self._plan_batch = max_slots
+        self.retunes = 0
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int,
@@ -95,33 +135,68 @@ class ContinuousBatcher:
         return sub
 
     def _admit(self) -> None:
-        axis = self.backend.cache_batch_axis
         for slot in self._free_slots():
             if not self.queue:
                 break
+            if self.paged:
+                # map pages for the whole request up front (prompt +
+                # generated tokens) — all-or-nothing, so when the pool is
+                # dry the request stays queued (FIFO) until a finishing
+                # request unmaps pages
+                need = min(len(self.queue[0].prompt)
+                           + self.queue[0].max_new, self.max_len)
+                try:
+                    self.kv.alloc(slot, need)
+                except PagesExhausted:
+                    break
             req = self.queue.pop(0)
             req.slot = slot
-            one_cache = self.backend.init_cache(1, self.max_len)
             toks = jnp.asarray([req.prompt], jnp.int32)
-            one_cache, logits = self.backend.prefill({"tokens": toks},
-                                                     one_cache)
+            if self.paged:
+                logits = self._prefill_paged_slot(slot, toks)
+            else:
+                logits = self._prefill_dense_slot(slot, toks)
             first = self.sample(logits, self._next_key())
-            # merge slot: every cache leaf carries batch at `axis`
-            def merge(glob, one):
-                if glob.ndim == 0 or glob.shape == ():
-                    return glob
-                return jax.lax.dynamic_update_slice_in_dim(
-                    glob, one.astype(glob.dtype), slot, axis=axis)
-            for key in self.cache:
-                if key == "len":
-                    continue
-                self.cache[key] = merge(self.cache[key], one_cache[key])
             self.cache["len"] = self.cache["len"].at[slot].set(
                 len(req.prompt))
             self.tokens = self.tokens.at[slot].set(first[0])
             req.generated.append(int(first[0]))
             self.active[slot] = True
             self._maybe_finish(req)
+
+    def _prefill_dense_slot(self, slot: int, toks: jax.Array) -> jax.Array:
+        """Batch-1 prefill into a fresh dense cache, then whole-slice
+        merge of every leaf into the global cache (the copy the paged
+        path exists to avoid)."""
+        axis = self.backend.cache_batch_axis
+        one_cache = self.backend.init_cache(1, self.max_len)
+        one_cache, logits = self.backend.prefill({"tokens": toks},
+                                                 one_cache)
+
+        # merge slot: every cache leaf carries batch at `axis`
+        def merge(glob, one):
+            if glob.ndim == 0 or glob.shape == ():
+                return glob
+            return jax.lax.dynamic_update_slice_in_dim(
+                glob, one.astype(glob.dtype), slot, axis=axis)
+        for key in self.cache:
+            if key == "len":
+                continue
+            self.cache[key] = merge(self.cache[key], one_cache[key])
+        return logits
+
+    def _prefill_paged_slot(self, slot: int, toks: jax.Array) -> jax.Array:
+        """Prefill through a batch-1 block-table view: the page pools are
+        shared, so the prompt's KV scatters straight into the pages just
+        mapped for this slot — admission moves exactly the new tokens,
+        never a (1, max_len) cache slice."""
+        self.cache["block_tables"] = self.kv.device_block_tables()
+        one = slot_view(self.cache, slot)
+        one, logits = self.backend.prefill({"tokens": toks}, one)
+        for key in one:
+            if key.startswith("pages_"):
+                self.cache[key] = one[key]
+        return logits
 
     def _maybe_finish(self, req: Request) -> None:
         if len(req.generated) >= req.max_new or \
@@ -130,6 +205,12 @@ class ContinuousBatcher:
             req.done = True
             if req.slot is not None:
                 self.active[req.slot] = False
+                if self.paged:
+                    # unmap: pages go back to the free list (shared
+                    # prefix pages survive via their ref-counts)
+                    self.kv.free(req.slot)
+                    self.cache["block_tables"] = \
+                        self.kv.device_block_tables()
                 self.cache["len"] = self.cache["len"].at[req.slot].set(0)
                 req.slot = None
 
@@ -142,14 +223,57 @@ class ContinuousBatcher:
         self._admit()
         if not self.active.any():
             return 0
-        self.cache, logits = self.backend.decode(self.tokens, self.cache)
-        nxt = self.sample(logits, self._next_key())
-        self.tokens = nxt
+        occ = int(self.active.sum())
+        # the batch a decode step actually executes: paged decode compacts
+        # to the active slots (cheap — a block-table row gather), dense
+        # decode always runs the full slot width (inactive slots compute
+        # masked garbage, the static-shape pattern)
+        executed = occ if self.paged else self.max_slots
+        if (self.retune_hysteresis is not None
+                and hasattr(self.backend, "retune")
+                and abs(executed - self._plan_batch)
+                > self.retune_hysteresis):
+            # executed batch drifted past the hysteresis margin: rebuild
+            # the placement plan for it (ROADMAP item); small oscillations
+            # stay on the current plan.  §4.1's cost model only sees the
+            # executed width, so dense mode never re-tunes on occupancy.
+            self.backend.retune(executed)
+            self._plan_batch = executed
+            self.retunes += 1
+        if self.paged and occ < self.max_slots:
+            self._decode_active_slots()
+        else:
+            self.cache, logits = self.backend.decode(self.tokens,
+                                                     self.cache)
+            self.tokens = self.sample(logits, self._next_key())
+        nxt = self.tokens
         for req in list(self.requests.values()):
             if req.slot is not None and self.active[req.slot]:
                 req.generated.append(int(nxt[req.slot]))
                 self._maybe_finish(req)
         return int(self.active.sum())
+
+    def _decode_active_slots(self) -> None:
+        """One decode step over the active slots only.
+
+        The paged cache makes batch compaction a metadata operation: the
+        pools are global, so selecting the active block-table / length /
+        token rows yields a smaller decode batch whose GEMMs match the
+        real occupancy (what ``retune`` plans for) — inactive slots cost
+        nothing and write nothing.  Results scatter back by slot index.
+        """
+        idx = jnp.asarray(np.flatnonzero(self.active))
+        sub = {k: v for k, v in self.cache.items()
+               if k.startswith("pages_")}
+        sub["block_tables"] = self.cache["block_tables"][idx]
+        sub["len"] = self.cache["len"][idx]
+        sub, logits = self.backend.decode(self.tokens[idx], sub)
+        for key in sub:
+            if key.startswith("pages_"):
+                self.cache[key] = sub[key]
+        self.cache["len"] = self.cache["len"].at[idx].set(sub["len"])
+        nxt = self.sample(logits, self._next_key())
+        self.tokens = self.tokens.at[idx].set(nxt)
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         for _ in range(max_steps):

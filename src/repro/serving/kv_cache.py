@@ -1,0 +1,202 @@
+"""Paged KV cache: a block-pool allocator for the offload serving path.
+
+``init_backend_cache`` allocates dense (B, max_len) buffers per layer, so
+the continuous batcher's slot admit/release copies whole-cache slices and
+long contexts cannot fit alongside offloaded weights.  This module
+replaces that with the block-table design of vLLM-style serving: KV
+tokens live in fixed-size **pages** drawn from one global pool per layer,
+and each slot owns a **block table** mapping logical kv blocks to
+physical page ids.  Admission maps pages, release unmaps them — no cache
+buffer is ever sliced or merged.
+
+Split of responsibilities:
+
+  * :class:`PagedKVCache` is the *host-side allocator*: free-list,
+    ref-counts, per-slot block tables.  It never holds device arrays —
+    pools live in the cache dict it mints (:meth:`init_cache`) and flow
+    functionally through the model step (which may donate them), while
+    the allocator only re-exports its block tables to the device after
+    map/unmap events.
+  * the *device-side* page pools are plain cache-dict leaves
+    ("pages_k{l}" / "pages_v{l}", layout (n_pages, Hkv, page_size, hd) —
+    one (page_size, hd) tile per (page, head), the layout the Pallas
+    paged decode kernel DMAs directly) consumed by
+    :func:`repro.models.model.backend_prefill`'s paged plumbing.
+
+Ref-counts make shared prompt prefixes cheap: :meth:`fork` aliases the
+fully-immutable pages of a prefix into another slot's table and bumps
+their counts (the trailing partial page is copied, so no copy-on-write
+is ever needed mid-decode); pages return to the free list only when the
+last owner releases them.
+
+Page id 0 is a reserved trash page: unmapped block-table entries point at
+it, so the masked garbage writes of inactive batcher slots land somewhere
+harmless instead of in another slot's pages.
+
+Layout decision (recorded for ROADMAP): page_size defaults to 16 tokens —
+small enough that a slot wastes < 1 page of KV on average at release,
+large enough that the (page_size, hd) kernel tile fills a TPU sublane
+register for fp32/bf16 head dims >= 128 lanes.  int8 ("q8") pools carry
+per-(page, head, token) fp32 scale pages mirroring the dense int8 cache.
+"""
+
+from __future__ import annotations
+
+from typing import Dict, List, Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+
+TRASH_PAGE = 0
+
+
+class PagesExhausted(RuntimeError):
+    """Raised when an allocation needs more pages than the free list has."""
+
+
+class PagedKVCache:
+    """Block-pool allocator + block tables for a slot-based serving cache.
+
+    ``n_pages`` bounds the pool (page 0 is reserved as trash); the default
+    matches dense capacity — ``max_slots * ceil(max_len / page_size)``
+    usable pages — but smaller pools are valid and simply make admission
+    wait for pages (the OOM-of-pages regime the batcher queues through).
+    """
+
+    def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int, *,
+                 page_size: int = 16, n_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None):
+        self.cfg = cfg
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.page_size = page_size
+        self.blocks_per_slot = -(-max_len // page_size)
+        self.n_pages = (1 + max_slots * self.blocks_per_slot
+                        if n_pages is None else int(n_pages))
+        if self.n_pages < 2:
+            raise ValueError("need at least one usable page beyond trash")
+        self.kv_dtype = kv_dtype
+        # host-side metadata: free list, ref-counts, block tables
+        self._free: List[int] = list(range(self.n_pages - 1, TRASH_PAGE, -1))
+        self._ref = np.zeros((self.n_pages,), np.int32)
+        self._tables = np.full((max_slots, self.blocks_per_slot), TRASH_PAGE,
+                               np.int32)
+        self._n_blocks = np.zeros((max_slots,), np.int32)
+
+    # -- device-side pool construction ---------------------------------
+    def init_cache(self) -> Dict:
+        """Mint the cache dict the model's paged plumbing consumes."""
+        cfg = self.cfg
+        q8 = self.kv_dtype == "int8"
+        dt = jnp.int8 if q8 else jnp.dtype(cfg.dtype)
+        shape = (self.n_pages, cfg.n_kv_heads, self.page_size, cfg.hd)
+        cache: Dict = {"len": jnp.zeros((self.max_slots,), jnp.int32),
+                       "block_tables": self.device_block_tables()}
+        for l in range(cfg.n_layers):
+            cache[f"pages_k{l}"] = jnp.zeros(shape, dt)
+            cache[f"pages_v{l}"] = jnp.zeros(shape, dt)
+            if q8:
+                cache[f"pages_ks{l}"] = jnp.zeros(shape[:3], jnp.float32)
+                cache[f"pages_vs{l}"] = jnp.zeros(shape[:3], jnp.float32)
+        return cache
+
+    def device_block_tables(self) -> jnp.ndarray:
+        """The (max_slots, blocks_per_slot) tables as a device array —
+        re-exported after every map/unmap event (tiny: int32 per block)."""
+        return jnp.asarray(self._tables)
+
+    # -- allocator -----------------------------------------------------
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    def blocks_for(self, n_tokens: int) -> int:
+        return max(-(-n_tokens // self.page_size), 0)
+
+    def alloc(self, slot: int, n_tokens: int) -> None:
+        """Map pages so ``slot`` covers ``n_tokens`` logical positions.
+
+        All-or-nothing: raises :class:`PagesExhausted` (mapping nothing)
+        when the free list cannot cover the growth, so a failed admission
+        leaves the pool untouched and the request can simply stay queued.
+        """
+        need_blocks = self.blocks_for(n_tokens)
+        if need_blocks > self.blocks_per_slot:
+            raise ValueError(
+                f"{n_tokens} tokens exceed max_len={self.max_len}")
+        grow = need_blocks - int(self._n_blocks[slot])
+        if grow <= 0:
+            return
+        if grow > len(self._free):
+            raise PagesExhausted(
+                f"slot {slot} needs {grow} pages, {len(self._free)} free")
+        for j in range(int(self._n_blocks[slot]), need_blocks):
+            pid = self._free.pop()
+            self._ref[pid] = 1
+            self._tables[slot, j] = pid
+        self._n_blocks[slot] = need_blocks
+
+    def free(self, slot: int) -> None:
+        """Unmap every page of ``slot``; pages whose ref-count hits zero
+        return to the free list (shared prefix pages survive)."""
+        for j in range(int(self._n_blocks[slot])):
+            pid = int(self._tables[slot, j])
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+        self._tables[slot, :] = TRASH_PAGE
+        self._n_blocks[slot] = 0
+
+    def fork(self, cache: Dict, src_slot: int, dst_slot: int,
+             n_tokens: int) -> Dict:
+        """Alias ``src_slot``'s first ``n_tokens`` into ``dst_slot``.
+
+        Fully-covered pages are shared by reference (ref-count bump, no
+        data movement); the trailing partial page — the only one a future
+        append could write into — is deep-copied into a fresh page, so no
+        copy-on-write machinery is needed on the decode path.  Returns
+        the cache dict (with the partial-page copies applied).
+        """
+        if self._n_blocks[dst_slot]:
+            raise ValueError(f"dst slot {dst_slot} still holds pages")
+        n_full, partial = divmod(n_tokens, self.page_size)
+        if n_full + (1 if partial else 0) > int(self._n_blocks[src_slot]):
+            raise ValueError("fork extends past src slot's mapped pages")
+        if partial and not self._free:
+            raise PagesExhausted("no free page for the partial prefix page")
+        for j in range(n_full):
+            pid = int(self._tables[src_slot, j])
+            self._ref[pid] += 1
+            self._tables[dst_slot, j] = pid
+        self._n_blocks[dst_slot] = n_full
+        if partial:
+            src_pid = int(self._tables[src_slot, n_full])
+            dst_pid = self._free.pop()
+            self._ref[dst_pid] = 1
+            self._tables[dst_slot, n_full] = dst_pid
+            self._n_blocks[dst_slot] = n_full + 1
+            cache = dict(cache)
+            for key in list(cache):
+                if key.startswith("pages_"):
+                    pool = cache[key]
+                    cache[key] = pool.at[dst_pid].set(pool[src_pid])
+        return cache
+
+    def mapped_pages(self, slot: int) -> List[int]:
+        return [int(p) for p in self._tables[slot, :self._n_blocks[slot]]]
+
+    def refcount(self, page_id: int) -> int:
+        return int(self._ref[page_id])
+
+
+def slot_view(cache: Dict, slot: int) -> Dict:
+    """A batch-1 view of a paged cache for admission prefill: the pools
+    are shared (writes scatter into the slot's mapped pages), only the
+    block-table row and length are sliced — no buffer copies."""
+    one = {k: v for k, v in cache.items()
+           if k.startswith("pages_")}
+    one["block_tables"] = cache["block_tables"][slot:slot + 1]
+    one["len"] = jnp.zeros((), jnp.int32)
+    return one

@@ -105,6 +105,76 @@ def test_decode_attention_matches_flash_last_row(rng):
     np.testing.assert_allclose(got, full[:, :, -1], rtol=2e-5, atol=2e-5)
 
 
+def _paged_pool(rng, k, v, page_size):
+    """Scatter dense (B, Hkv, S, D) K/V into a permuted page pool +
+    block tables (page 0 left as trash)."""
+    b, hkv, s, d = k.shape
+    nb = s // page_size
+    n_pages = 1 + b * nb
+    perm = rng.permutation(np.arange(1, n_pages))
+    bt = np.zeros((b, nb), np.int32)
+    kp = np.zeros((n_pages, hkv, page_size, d), np.asarray(k).dtype)
+    vp = np.zeros_like(kp)
+    for i in range(b):
+        for j in range(nb):
+            pid = int(perm[i * nb + j])
+            bt[i, j] = pid
+            kp[pid] = np.asarray(k[i, :, j * page_size:(j + 1) * page_size])
+            vp[pid] = np.asarray(v[i, :, j * page_size:(j + 1) * page_size])
+    return jnp.asarray(kp), jnp.asarray(vp), jnp.asarray(bt)
+
+
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (8, 1), (4, 4)])
+def test_paged_decode_attention(rng, hq, hkv):
+    """Paged kernel == paged oracle == dense decode oracle: gathering K/V
+    through a permuted block table changes nothing but the layout."""
+    b, s, d, ps = 3, 256, 64, 16
+    q = _rand(rng, (b, hq, d))
+    k = _rand(rng, (b, hkv, s, d))
+    v = _rand(rng, (b, hkv, s, d))
+    kv_len = jnp.asarray([17, 100, 256], jnp.int32)
+    kp, vp, bt = _paged_pool(rng, k, v, ps)
+    want_dense = ref.decode_attention(q, k, v, kv_len)
+    want = ref.paged_decode_attention(q, kp, vp, bt, kv_len)
+    got = ops.paged_decode_attention(q, kp, vp, bt, kv_len)
+    np.testing.assert_allclose(want, want_dense, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_softcap(rng):
+    b, hq, hkv, s, d, ps = 2, 4, 2, 128, 32, 16
+    q = _rand(rng, (b, hq, d))
+    k = _rand(rng, (b, hkv, s, d))
+    v = _rand(rng, (b, hkv, s, d))
+    kv_len = jnp.asarray([50, 128], jnp.int32)
+    kp, vp, bt = _paged_pool(rng, k, v, ps)
+    got = ops.paged_decode_attention(q, kp, vp, bt, kv_len, softcap=20.0)
+    want = ref.paged_decode_attention(q, kp, vp, bt, kv_len, softcap=20.0)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_decode_attention_q8(rng):
+    """int8 pages with per-(page, head, token) scales dequantize in the
+    kernel body exactly as the q8 oracle does after gathering."""
+    b, hq, hkv, s, d, ps = 2, 4, 2, 128, 32, 16
+    n_pages = 1 + b * (s // ps)
+    q = _rand(rng, (b, hq, d))
+    k8 = jnp.asarray(rng.integers(-127, 127, (n_pages, hkv, ps, d)),
+                     jnp.int8)
+    v8 = jnp.asarray(rng.integers(-127, 127, (n_pages, hkv, ps, d)),
+                     jnp.int8)
+    ks = jnp.abs(_rand(rng, (n_pages, hkv, ps))) * 0.01
+    vs = jnp.abs(_rand(rng, (n_pages, hkv, ps))) * 0.01
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_pages)).reshape(b, -1),
+                     jnp.int32)
+    kv_len = jnp.asarray([37, 128], jnp.int32)
+    got = ops.paged_decode_attention(q, k8, v8, bt, kv_len,
+                                     k_scale=ks, v_scale=vs)
+    want = ref.paged_decode_attention(q, k8, v8, bt, kv_len,
+                                      k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
 @pytest.mark.parametrize("shape", [(4, 128), (2, 33, 128), (3, 5, 7, 256)])
 @pytest.mark.parametrize("plus_one", [False, True])
 def test_rmsnorm(rng, shape, plus_one):

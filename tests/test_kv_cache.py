@@ -1,0 +1,373 @@
+"""The paged KV subsystem: block-pool allocator, block-table plumbing,
+and the continuous batcher's page map/unmap admit/release path.
+
+The contract under test: ``ContinuousBatcher(paged=True)`` over
+ResidentBackend / HeteGenBackend is *token-identical* to the dense-cache
+path for interleaved admit/release schedules, admission performs no
+whole-cache slice merges (page map/unmap only), page exhaustion queues
+requests until a release returns pages, and prefix ``fork`` shares pages
+by ref-count with reclaim only at the last release.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.hw import PAPER_A10
+from repro.kernels import ref
+from repro.models import model as M
+from repro.serving.backends import (HeteGenBackend, ResidentBackend,
+                                    ScanResidentBackend)
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.kv_cache import (TRASH_PAGE, PagedKVCache, PagesExhausted,
+                                    slot_view)
+
+
+@pytest.fixture(scope="module")
+def tiny_setup():
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def opt_setup():
+    cfg = reduced(get_config("opt-6.7b"), layers=3)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _mixed_requests(rng, cfg, n=5):
+    prompts = [list(rng.integers(0, cfg.vocab_size, k))
+               for k in (5, 9, 3, 7, 4)[:n]]
+    max_news = [6, 4, 5, 3, 7][:n]
+    return prompts, max_news
+
+
+def _allocator_consistent(kv: PagedKVCache):
+    """Pool invariant: every page is free xor mapped (ref-counted)."""
+    mapped = {}
+    for s in range(kv.max_slots):
+        for pid in kv.mapped_pages(s):
+            mapped[pid] = mapped.get(pid, 0) + 1
+    assert TRASH_PAGE not in mapped
+    for pid, cnt in mapped.items():
+        assert kv.refcount(pid) == cnt, pid
+        assert pid not in kv._free
+    assert len(kv._free) + len(mapped) == kv.n_pages - 1
+    assert len(set(kv._free)) == len(kv._free)          # no double-free
+
+
+# ---------------------------------------------------------------------------
+# token-exact equivalence vs the dense path
+# ---------------------------------------------------------------------------
+
+def test_paged_vs_dense_resident_interleaved(tiny_setup, rng):
+    """Interleaved admit/release (5 requests through 2 slots): the paged
+    batcher samples the same tokens as the dense-cache batcher."""
+    cfg, params = tiny_setup
+    prompts, max_news = _mixed_requests(rng, cfg)
+
+    dense = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                              max_slots=2, max_len=64)
+    dids = [dense.submit(p, m) for p, m in zip(prompts, max_news)]
+    dout = dense.run_until_done()
+
+    paged = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                              max_slots=2, max_len=64, paged=True,
+                              page_size=8)
+    pids = [paged.submit(p, m) for p, m in zip(prompts, max_news)]
+    pout = paged.run_until_done()
+
+    for d, p in zip(dids, pids):
+        assert dout[d] == pout[p], (d, p)
+    # release unmapped everything: the pool drained back to full
+    assert paged.kv.free_pages == paged.kv.n_pages - 1
+    _allocator_consistent(paged.kv)
+
+
+def test_paged_vs_dense_hetegen_batcher(opt_setup, rng):
+    """Acceptance: ContinuousBatcher over HeteGenBackend with PagedKVCache
+    is token-identical to the dense-cache path on offloaded weights."""
+    cfg, params = opt_setup
+    prompts, max_news = _mixed_requests(rng, cfg, n=4)
+
+    dense = ContinuousBatcher(cfg, params, max_slots=3, max_len=64)
+    dids = [dense.submit(p, m) for p, m in zip(prompts, max_news)]
+    dout = dense.run_until_done()
+
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=3)
+    paged = ContinuousBatcher(cfg, backend=hb, max_slots=3, max_len=64,
+                              paged=True, page_size=8)
+    pids = [paged.submit(p, m) for p, m in zip(prompts, max_news)]
+    pout = paged.run_until_done()
+
+    for d, p in zip(dids, pids):
+        assert dout[d] == pout[p], (d, p)
+    assert paged.kv.free_pages == paged.kv.n_pages - 1
+    hb.close()
+
+
+def test_paged_logits_match_dense(tiny_setup, rng):
+    """Stronger than token equality: prefill + decode logits through the
+    paged plumbing match the dense backend cache to fp tolerance."""
+    cfg, params = tiny_setup
+    be = ResidentBackend(cfg, params)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+
+    dc = be.init_cache(2, 32)
+    dc, dlog = be.prefill({"tokens": toks}, dc)
+
+    kv = be.init_paged_cache(2, 32, page_size=8)
+    kv.alloc(0, 12)
+    kv.alloc(1, 12)
+    pc = kv.init_cache()
+    pc["len"] = jnp.zeros((), jnp.int32)    # scalar len: batched prefill
+    pc, plog = be.prefill({"tokens": toks}, pc)
+    np.testing.assert_allclose(plog, dlog, rtol=1e-5, atol=1e-5)
+
+    tok = jnp.argmax(dlog, -1).astype(jnp.int32)
+    for _ in range(3):
+        dc, dlog = be.decode(tok, dc)
+        pc, plog = be.decode(tok, pc)
+        np.testing.assert_allclose(plog, dlog, rtol=1e-5, atol=1e-5)
+        tok = jnp.argmax(dlog, -1).astype(jnp.int32)
+
+
+def test_admission_is_map_only(tiny_setup, rng, monkeypatch):
+    """Paged admit/release never takes the dense whole-slice merge path —
+    the only cache writes are page scatters through the block table."""
+    cfg, params = tiny_setup
+    prompts, max_news = _mixed_requests(rng, cfg)
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          max_slots=2, max_len=64, paged=True, page_size=8)
+
+    def boom(self, *a, **k):
+        raise AssertionError("dense slice merge on the paged path")
+    monkeypatch.setattr(ContinuousBatcher, "_prefill_dense_slot", boom)
+    for p, m in zip(prompts, max_news):
+        b.submit(p, m)
+    out = b.run_until_done()
+    assert all(len(v) for v in out.values())
+
+
+# ---------------------------------------------------------------------------
+# page exhaustion / fragmentation
+# ---------------------------------------------------------------------------
+
+def test_pages_exhausted_queues_until_release(tiny_setup, rng):
+    """A pool too small for two concurrent requests serializes them: the
+    second stays queued (its slot empty) until the first releases."""
+    cfg, params = tiny_setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 9)) for _ in range(2)]
+    # 19 tokens -> 3 pages of 8 each; 4 usable pages fit only one request
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          max_slots=2, max_len=32, paged=True, page_size=8,
+                          n_pages=5)
+    r0 = b.submit(prompts[0], 10)
+    r1 = b.submit(prompts[1], 10)
+    b.step()
+    assert b.active.sum() == 1 and len(b.queue) == 1   # r1 starved of pages
+    out = b.run_until_done()
+    assert len(out[r0]) == 10 and len(out[r1]) == 10
+    assert b.kv.free_pages == 4
+
+    # and the tokens match an uncontended dense run (queueing changed
+    # scheduling, not results)
+    dense = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                              max_slots=2, max_len=32)
+    d0 = dense.submit(prompts[0], 10)
+    d1 = dense.submit(prompts[1], 10)
+    dout = dense.run_until_done()
+    assert out[r0] == dout[d0]
+
+
+def test_fragmentation_churn_reuses_pages(tiny_setup, rng):
+    """Admit/release churn over a small pool: pages recycle through the
+    free list with the allocator invariant intact and nothing leaked."""
+    cfg, params = tiny_setup
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          max_slots=2, max_len=32, paged=True, page_size=8,
+                          n_pages=9)
+    for i in range(8):
+        b.submit(list(rng.integers(0, cfg.vocab_size, 3 + (i % 5))),
+                 2 + (i % 4))
+    out = b.run_until_done()
+    assert len(out) == 8 and all(len(v) for v in out.values())
+    assert b.kv.free_pages == 8
+    _allocator_consistent(b.kv)
+
+
+def test_alloc_all_or_nothing(tiny_setup):
+    cfg, _ = tiny_setup
+    kv = PagedKVCache(cfg, 2, 64, page_size=8, n_pages=3)   # 2 usable
+    with pytest.raises(PagesExhausted):
+        kv.alloc(0, 24)                                     # needs 3
+    assert kv.free_pages == 2 and kv.mapped_pages(0) == []
+    with pytest.raises(ValueError):
+        kv.alloc(0, 100)                                    # > max_len
+    kv.alloc(0, 16)
+    assert kv.free_pages == 0 and len(kv.mapped_pages(0)) == 2
+
+
+# ---------------------------------------------------------------------------
+# prefix sharing (fork) and ref-count reclaim
+# ---------------------------------------------------------------------------
+
+def test_fork_shares_pages_and_reclaims_by_refcount(tiny_setup, rng):
+    cfg, _ = tiny_setup
+    kv = PagedKVCache(cfg, 2, 64, page_size=8)
+    kv.alloc(0, 20)                                 # 3 pages
+    cache = kv.init_cache()
+    # stamp recognizable values through the slot-0 block table
+    pool = cache["pages_k0"]
+    for j, pid in enumerate(kv.mapped_pages(0)):
+        pool = pool.at[pid].set(float(j + 1))
+    cache["pages_k0"] = pool
+
+    cache = kv.fork(cache, 0, 1, 17)                # 2 full + 1 partial
+    src, dst = kv.mapped_pages(0), kv.mapped_pages(1)
+    assert dst[:2] == src[:2]                       # full pages aliased
+    assert dst[2] != src[2]                         # partial page copied
+    assert kv.refcount(src[0]) == 2 and kv.refcount(src[1]) == 2
+    assert kv.refcount(src[2]) == 1 and kv.refcount(dst[2]) == 1
+    np.testing.assert_array_equal(cache["pages_k0"][dst[2]],
+                                  cache["pages_k0"][src[2]])
+    # the forked slot reads the identical prefix through its own table
+    bt = kv.device_block_tables()
+    g = ref.gather_pages(cache["pages_k0"], bt)
+    np.testing.assert_array_equal(g[0, :, :17], g[1, :, :17])
+
+    free0 = kv.free_pages
+    kv.free(0)                                      # shared pages survive
+    assert kv.refcount(src[0]) == 1 and kv.refcount(src[1]) == 1
+    assert kv.free_pages == free0 + 1               # only src partial page
+    kv.free(1)                                      # last owner: reclaim
+    assert kv.free_pages == kv.n_pages - 1
+    _allocator_consistent(kv)
+
+
+def test_fork_rejects_bad_targets(tiny_setup):
+    cfg, _ = tiny_setup
+    kv = PagedKVCache(cfg, 2, 64, page_size=8)
+    kv.alloc(0, 10)
+    kv.alloc(1, 8)
+    cache = kv.init_cache()
+    with pytest.raises(ValueError):
+        kv.fork(cache, 0, 1, 8)             # dst still holds pages
+    kv.free(1)
+    with pytest.raises(ValueError):
+        kv.fork(cache, 0, 1, 30)            # past src's mapped pages
+
+
+# ---------------------------------------------------------------------------
+# slot_view / q8 pools
+# ---------------------------------------------------------------------------
+
+def test_slot_view_shares_pools(tiny_setup):
+    cfg, _ = tiny_setup
+    kv = PagedKVCache(cfg, 3, 32, page_size=8)
+    kv.alloc(1, 10)
+    cache = kv.init_cache()
+    one = slot_view(cache, 1)
+    assert one["pages_k0"] is cache["pages_k0"]     # pools shared, no copy
+    assert one["block_tables"].shape == (1, kv.blocks_per_slot)
+    assert one["len"].shape == ()
+
+
+def test_q8_paged_pools_close_to_fp(tiny_setup, rng):
+    """int8 pages + scale pages track the fp paged path within quant
+    error (mirrors decode_attention's q8 contract at the model level)."""
+    cfg, params = tiny_setup
+    be = ResidentBackend(cfg, params)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 6)), jnp.int32)
+
+    def run(kv_dtype):
+        kv = be.init_paged_cache(2, 32, page_size=8, kv_dtype=kv_dtype)
+        kv.alloc(0, 12)
+        kv.alloc(1, 12)
+        c = kv.init_cache()
+        c["len"] = jnp.zeros((), jnp.int32)
+        c, logits = be.prefill({"tokens": toks}, c)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)
+        c, logits = be.decode(tok, c)
+        return logits
+
+    fp = run(None)
+    q8 = run("int8")
+    err = float(jnp.max(jnp.abs(q8 - fp)) / jnp.max(jnp.abs(fp)))
+    assert err < 0.05, err
+
+
+def test_q8_paged_batcher_serves(tiny_setup, rng):
+    """kv_dtype='int8' threads through the batcher: q8 paged serving runs
+    interleaved admit/release end to end and drains the pool."""
+    cfg, params = tiny_setup
+    prompts, max_news = _mixed_requests(rng, cfg, n=3)
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          max_slots=2, max_len=64, paged=True, page_size=8,
+                          kv_dtype="int8")
+    rids = [b.submit(p, m) for p, m in zip(prompts, max_news)]
+    out = b.run_until_done()
+    assert [len(out[r]) for r in rids] == max_news[:3]
+    assert b.kv.kv_dtype == "int8"
+    assert b.cache["pages_k0"].dtype == jnp.int8
+    assert b.kv.free_pages == b.kv.n_pages - 1
+
+
+# ---------------------------------------------------------------------------
+# occupancy-driven re-tuning (ROADMAP item)
+# ---------------------------------------------------------------------------
+
+def test_occupancy_retune_with_hysteresis(opt_setup, rng):
+    """When active slots collapse 3 -> 1, the paged batcher compacts the
+    decode batch to the occupancy and re-tunes the HeteGen plan for that
+    *executed* batch; the hysteresis margin keeps one-slot wobbles from
+    rebuilding the engine, and results stay token-exact."""
+    cfg, params = opt_setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 5)) for _ in range(3)]
+    max_news = [12, 2, 2]
+
+    dense = ContinuousBatcher(cfg, params, max_slots=3, max_len=64)
+    dids = [dense.submit(p, m) for p, m in zip(prompts, max_news)]
+    dout = dense.run_until_done()
+
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=3)
+    b = ContinuousBatcher(cfg, backend=hb, max_slots=3, max_len=64,
+                          paged=True, page_size=8, retune_hysteresis=1)
+    pids = [b.submit(p, m) for p, m in zip(prompts, max_news)]
+    pout = b.run_until_done()
+
+    assert b.retunes == 1                   # 3 -> 2 absorbed, 3 -> 1 retuned
+    assert hb.policy.batch == 1             # plan == executed decode batch
+    for d, p in zip(dids, pids):
+        assert dout[d] == pout[p]
+    hb.close()
+
+    # a wide margin absorbs everything: zero rebuilds
+    hb2 = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=3)
+    b2 = ContinuousBatcher(cfg, backend=hb2, max_slots=3, max_len=64,
+                           paged=True, page_size=8, retune_hysteresis=10)
+    for p, m in zip(prompts, max_news):
+        b2.submit(p, m)
+    b2.run_until_done()
+    assert b2.retunes == 0 and hb2.policy.batch == 3
+    hb2.close()
+
+    # dense mode always executes max_slots-wide: never re-tunes
+    hb3 = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=3)
+    b3 = ContinuousBatcher(cfg, backend=hb3, max_slots=3, max_len=64,
+                           retune_hysteresis=1)
+    for p, m in zip(prompts, max_news):
+        b3.submit(p, m)
+    b3.run_until_done()
+    assert b3.retunes == 0 and hb3.policy.batch == 3
+    hb3.close()
+
+
+def test_scan_backend_rejects_paged(tiny_setup):
+    cfg, params = tiny_setup
+    with pytest.raises(NotImplementedError):
+        ContinuousBatcher(cfg, backend=ScanResidentBackend(cfg, params),
+                          max_slots=2, max_len=32, paged=True)

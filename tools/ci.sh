@@ -42,4 +42,36 @@ print("offload smoke OK:", res["tokens"].tolist(),
       f"alpha={res['alpha']:.3f}")
 EOF
 
+echo "== smoke: paged KV continuous batching over HeteGen (tiny config) =="
+python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.backends import HeteGenBackend, ResidentBackend
+from repro.serving.batcher import ContinuousBatcher
+
+cfg = get_config("tiny")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (5, 3, 7)]
+
+dense = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          max_slots=2, max_len=32)
+dids = [dense.submit(p, 3) for p in prompts]
+dout = dense.run_until_done()
+
+hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+b = ContinuousBatcher(cfg, backend=hb, max_slots=2, max_len=32,
+                      paged=True, page_size=8, retune_hysteresis=1)
+pids = [b.submit(p, 3) for p in prompts]
+pout = b.run_until_done()
+assert all(dout[d] == pout[p] for d, p in zip(dids, pids)), (dout, pout)
+assert b.kv.free_pages == b.kv.n_pages - 1, "pages leaked"
+hb.close()
+print("paged smoke OK:", [pout[p] for p in pids])
+EOF
+
 echo "CI OK"
