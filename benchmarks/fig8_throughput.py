@@ -16,6 +16,11 @@ systems win on aggregate throughput via large effective batches): at full
 offload, aggregate tok/s grows with the decode batch while the batch-aware
 planner shifts alpha toward the accelerator as host GEMMs become
 compute-bound.
+
+Finally, a real (not simulated) mixed-sampler request sweep through the
+:class:`repro.serving.api.LLM` facade: staggered requests carrying
+per-request SamplingParams over resident and HeteGen-offloaded backends,
+reporting aggregate tok/s and the backend's per-phase alphas.
 """
 from repro.benchmarks_shim import *  # noqa
 
@@ -60,4 +65,57 @@ def run():
         # batching pays: aggregate throughput at batch 32 >> batch 1
         rows.append((f"fig8.{arch}.batch_speedup_32x", agg / agg1))
         assert agg > 2.0 * agg1
+
+    rows += _facade_mixed_sampler_sweep()
+    return rows
+
+
+def _facade_mixed_sampler_sweep():
+    """Real request-level serving through the LLM facade: staggered
+    requests with mixed per-request samplers, resident vs offloaded."""
+    import time
+
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.core.hw import PAPER_A10
+    from repro.models import model as M
+    from repro.serving.api import LLM
+    from repro.serving.backends import HeteGenBackend
+    from repro.serving.sampling import SamplingParams
+
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    samplers = [SamplingParams(),
+                SamplingParams(kind="topp", top_p=0.9, seed=1),
+                SamplingParams(kind="topk", top_k=16, temperature=0.9,
+                               seed=2)]
+
+    def sweep(llm: LLM) -> float:
+        rng = np.random.default_rng(0)
+        t0 = time.perf_counter()
+        for i in range(6):
+            n = int(rng.integers(4, 12))
+            llm.submit(list(rng.integers(0, cfg.vocab_size, n)),
+                       max_new=8, sampling=samplers[i % len(samplers)])
+            llm.step()
+        outs = llm.drain()
+        dt = max(time.perf_counter() - t0, 1e-9)
+        return sum(len(o.tokens) for o in outs.values()) / dt
+
+    rows = []
+    with LLM(cfg, params, max_slots=3, max_len=64) as llm:
+        rows.append(("fig8.facade.mixed_sampler.resident_tok_s",
+                     sweep(llm)))
+    be = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=3)
+    with LLM(cfg, backend=be, own_backend=True, max_slots=3,
+             max_len=64) as llm:
+        rows.append(("fig8.facade.mixed_sampler.hetegen_tok_s",
+                     sweep(llm)))
+        alphas = {ph: p.alpha for ph, p in be.policies.items()}
+        rows.append(("fig8.facade.hetegen_decode_alpha",
+                     alphas["decode"]))
+        rows.append(("fig8.facade.hetegen_prefill_alpha",
+                     alphas["prefill"]))
     return rows

@@ -1,41 +1,56 @@
-"""Quickstart: generate with a tiny LM, resident vs HeteGen-offloaded.
+"""Quickstart: one serving front door — resident, HeteGen-offloaded,
+and streaming, all through :class:`repro.serving.api.LLM`.
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
 from repro.core.hw import PAPER_A10
 from repro.models import model as M
-from repro.serving.engine import Generator
-from repro.serving.offload_runtime import OffloadGenerator
+from repro.serving.api import LLM
+from repro.serving.backends import HeteGenBackend
+from repro.serving.sampling import SamplingParams
 
 
 def main():
     cfg = get_config("opt-125m")
     print(f"model: {cfg.name} ({cfg.param_count()/1e6:.0f}M params)")
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    prompt = np.random.default_rng(0).integers(
-        0, cfg.vocab_size, (2, 16)).astype(np.int32)
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 16)) for _ in range(2)]
 
     print("\n-- resident (all weights on device) --")
-    gen = Generator(cfg, params)
-    r = gen.generate({"tokens": jnp.asarray(prompt)}, 12)
-    print("tokens:", r.tokens[0][:8], "…")
-    print(f"decode: {r.tokens_per_s:.1f} tok/s")
+    with LLM(cfg, params) as llm:
+        outs = llm.generate(prompts, max_new=12)
+        print("tokens:", outs[0].tokens[:8], "…")
+        print(f"executor={llm.last_executor}, "
+              f"{llm.stats()['tokens_per_s']:.1f} tok/s decode")
+
+        print("\n-- streaming (tokens delivered as they decode) --")
+        line = []
+        for tok in llm.stream(prompts[0], max_new=8,
+                              sampling=SamplingParams(kind="topp",
+                                                      top_p=0.9, seed=7)):
+            line.append(tok)
+            print(f"  got {tok}", flush=True)
+        print("streamed:", line)
 
     print("\n-- HeteGen offload (weights in host memory, alpha-split) --")
-    off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0)
-    res = off.generate(prompt, 12)
-    print("tokens:", res["tokens"].tolist()[0][:8], "…")
-    print(f"alpha = {res['alpha']:.3f}; outputs match: "
-          f"{res['tokens'].tolist() == r.tokens}")
-    st = res["stream_stats"]
-    print(f"stream busy (s): cpu={st.cpu:.3f} pin={st.pin:.3f} "
-          f"trans={st.trans:.3f} dev={st.dev:.3f}")
-    off.close()
+    backend = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0)
+    with LLM(cfg, backend=backend, own_backend=True) as off:
+        res = off.generate(prompts, max_new=12)
+        st = off.stats()
+        print("tokens:", res[0].tokens[:8], "…")
+        print("phase plans (compute-bound prefill vs link-bound decode):")
+        for ph, a in sorted(st["phase_alpha"].items()):
+            print(f"  {ph}: alpha={a:.3f}")
+        print("outputs match resident:",
+              [o.tokens for o in res] == [o.tokens for o in outs])
+        s = st["stream"]
+        print(f"stream busy (s): cpu={s.cpu:.3f} pin={s.pin:.3f} "
+              f"trans={s.trans:.3f} dev={s.dev:.3f}")
 
 
 if __name__ == "__main__":

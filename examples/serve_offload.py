@@ -1,6 +1,7 @@
-"""End-to-end serving driver (the paper's deployment): batched requests
-through the continuous batcher — over resident weights AND over
-HeteGen-offloaded weights — plus batch-aware offloaded generation.
+"""End-to-end serving driver (the paper's deployment): staggered
+requests with per-request sampling through the one front door
+(:class:`repro.serving.api.LLM`) — over resident weights AND over
+HeteGen-offloaded weights with phase-aware placement plans.
 
     PYTHONPATH=src python examples/serve_offload.py [--requests 8]
 """
@@ -13,28 +14,32 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.hw import PAPER_A10
 from repro.models import model as M
+from repro.serving.api import LLM
 from repro.serving.backends import HeteGenBackend
-from repro.serving.batcher import ContinuousBatcher
-from repro.serving.offload_runtime import OffloadGenerator
+from repro.serving.sampling import SamplingParams
+
+SAMPLERS = [SamplingParams(),                                   # greedy
+            SamplingParams(kind="topp", top_p=0.9, seed=1),
+            SamplingParams(kind="topk", top_k=40,
+                           temperature=0.8, seed=2),
+            SamplingParams(kind="temperature", temperature=1.2, seed=3)]
 
 
-def drive(b: ContinuousBatcher, cfg, rng, n_requests: int):
-    """Submit staggered requests and run the batcher dry."""
+def drive(llm: LLM, cfg, rng, n_requests: int):
+    """Submit staggered mixed-sampler requests and run the facade dry."""
     t0 = time.perf_counter()
-    steps = 0
-    for _ in range(n_requests):
+    for i in range(n_requests):
         n = int(rng.integers(4, 16))
-        b.submit(list(rng.integers(0, cfg.vocab_size, n)),
-                 max_new=int(rng.integers(8, 24)))
-        b.step(); steps += 1          # requests join mid-flight
-    while b.queue or b.active.any():
-        b.step(); steps += 1
+        llm.submit(list(rng.integers(0, cfg.vocab_size, n)),
+                   max_new=int(rng.integers(8, 24)),
+                   sampling=SAMPLERS[i % len(SAMPLERS)])
+        llm.step()                    # requests join mid-flight
+    outs = llm.drain()
     dt = time.perf_counter() - t0
-    done = [r for r in b.requests.values() if r.done]
-    toks = sum(len(r.generated) for r in done)
-    print(f"completed {len(done)} requests, {toks} tokens, "
-          f"{steps} engine steps in {dt:.1f}s "
-          f"({toks/dt:.1f} tok/s aggregate)")
+    toks = sum(len(o.tokens) for o in outs.values())
+    print(f"completed {len(outs)} requests, {toks} tokens in {dt:.1f}s "
+          f"({toks/dt:.1f} tok/s aggregate, mixed samplers per batch)")
+    return outs
 
 
 def main():
@@ -46,36 +51,45 @@ def main():
 
     cfg = get_config(args.arch)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
-    rng = np.random.default_rng(0)
 
     print(f"== continuous batching (resident): {args.requests} staggered "
           "requests ==")
-    b = ContinuousBatcher(cfg, params, max_slots=args.slots, max_len=128)
-    drive(b, cfg, rng, args.requests)
+    with LLM(cfg, params, max_slots=args.slots, max_len=128) as llm:
+        res_outs = drive(llm, cfg, np.random.default_rng(0), args.requests)
 
     print("\n== continuous batching over HeteGen-offloaded weights ==")
     backend = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
                              batch=args.slots)
-    print(f"plan tuned for batch={backend.policy.batch}: "
-          f"alpha={backend.policy.alpha:.3f}")
-    rng = np.random.default_rng(0)      # same request stream
-    ob = ContinuousBatcher(cfg, backend=backend, max_slots=args.slots,
-                           max_len=128)
-    drive(ob, cfg, rng, args.requests)
-    backend.close()
+    with LLM(cfg, backend=backend, own_backend=True, max_slots=args.slots,
+             max_len=128) as off:
+        off_outs = drive(off, cfg, np.random.default_rng(0), args.requests)
+        st = off.stats()
+        print("phase plans: " + "  ".join(
+            f"{ph}: alpha={a:.3f} (batch={st['phase_batch'][ph][0]}, "
+            f"tokens/seq={st['phase_batch'][ph][1]})"
+            for ph, a in sorted(st["phase_alpha"].items())))
+    same = all(res_outs[r].tokens == off_outs[r].tokens for r in res_outs)
+    print(f"offloaded == resident token-for-token (per-request PRNG "
+          f"streams): {same}")
 
-    print("\n== HeteGen batched generation (weights in host memory) ==")
+    print("\n== one-shot offloaded generation (requests arrive together) ==")
+    rng = np.random.default_rng(1)
     for batch in (1, 4):
-        off = OffloadGenerator(cfg, params, hw=PAPER_A10, budget_bytes=0,
-                               batch=batch)
-        prompt = rng.integers(0, cfg.vocab_size, (batch, 12)).astype(np.int32)
-        res = off.generate(prompt, 16)
-        print(f"batch={batch}: alpha={res['alpha']:.3f} "
-              f"resident={res['resident_bytes']/1e6:.1f}MB "
-              f"pinned-ring={res['pinned_overhead_bytes']/1e6:.1f}MB "
-              f"{res['tokens_per_s']:.1f} tok/s "
-              "(CPU-only container; see benchmarks/fig8 for the A10 model)")
-        off.close()
+        backend = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                                 batch=batch)
+        with LLM(cfg, backend=backend, own_backend=True) as one:
+            prompts = [list(rng.integers(0, cfg.vocab_size, 12))
+                       for _ in range(batch)]
+            one.generate(prompts, max_new=16)
+            st = one.stats()
+            al = st["phase_alpha"]
+            print(f"batch={batch}: executor={st['executor']} "
+                  f"decode-alpha={al['decode']:.3f} "
+                  f"prefill-alpha={al['prefill']:.3f} "
+                  f"resident={st['resident_bytes']/1e6:.1f}MB "
+                  f"{st['tokens_per_s']:.1f} tok/s "
+                  "(CPU-only container; see benchmarks/fig8 for the A10 "
+                  "model)")
 
 
 if __name__ == "__main__":

@@ -32,6 +32,9 @@ All functions are pure and unit-free (any consistent speed/time units).
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
+
+DEFAULT_PREFILL_TOKENS = 128   # prompt-length prior when none was observed
 
 
 def alpha_analytic(v_cpu: float, v_gpu: float, v_com: float) -> float:
@@ -53,6 +56,37 @@ def alpha_for_batch(hw, batch: int) -> float:
     :class:`repro.core.hw.HardwareSpec`).
     """
     intensity = float(max(batch, 1))
+    return alpha_analytic(hw.v_cpu(intensity), hw.v_gpu(intensity),
+                          hw.v_com())
+
+
+def resolve_phase_tokens(phase: str,
+                         tokens_per_seq: Optional[int] = None) -> int:
+    """Per-sequence tokens of one step for a serving phase — THE place
+    the phase -> intensity rule lives (alpha law and policy builder both
+    call it): 1 for decode, the prompt length for prefill
+    (:data:`DEFAULT_PREFILL_TOKENS` when unobserved)."""
+    if phase not in ("prefill", "decode"):
+        raise ValueError(f"unknown phase {phase!r}")
+    if tokens_per_seq is None:
+        tokens_per_seq = DEFAULT_PREFILL_TOKENS if phase == "prefill" else 1
+    return max(int(tokens_per_seq), 1)
+
+
+def alpha_for_phase(hw, batch: int, phase: str = "decode",
+                    tokens_per_seq: Optional[int] = None) -> float:
+    """Phase-aware analytic ratio (paper §4.1).
+
+    Decode moves every parameter byte per step but computes only ``batch``
+    token positions, so its arithmetic intensity is ~``batch`` FLOPs per
+    parameter byte and the link/host usually dominate (small alpha).
+    Prefill computes ``batch * prompt_len`` positions against the same
+    weight traffic, so intensity scales with the prompt: the host GEMM
+    derates by orders of magnitude and the optimal split pushes toward
+    the accelerator (alpha -> 1).
+    """
+    intensity = float(max(batch, 1)
+                      * resolve_phase_tokens(phase, tokens_per_seq))
     return alpha_analytic(hw.v_cpu(intensity), hw.v_gpu(intensity),
                           hw.v_com())
 

@@ -58,6 +58,16 @@ class StreamStats:
         return {"cpu": self.cpu / w, "pin": self.pin / w,
                 "trans": self.trans / w, "dev": self.dev / w}
 
+    def __add__(self, other: "StreamStats") -> "StreamStats":
+        """Aggregate busy seconds across engines (e.g. the per-phase
+        partitions of a phase-aware backend).  Wall takes the max: the
+        engines share one serving timeline, they don't extend it."""
+        return StreamStats(cpu=self.cpu + other.cpu,
+                           pin=self.pin + other.pin,
+                           trans=self.trans + other.trans,
+                           dev=self.dev + other.dev,
+                           wall=max(self.wall, other.wall))
+
 
 class HeteGenEngine:
     """Executes named linears under a placement plan with async overlap."""
@@ -66,7 +76,8 @@ class HeteGenEngine:
                  plan: Sequence[ModulePlan], *,
                  biases: Optional[Dict[str, np.ndarray]] = None,
                  tile: int = 128,
-                 device: Optional[jax.Device] = None):
+                 device: Optional[jax.Device] = None,
+                 resident_store: Optional[Dict[str, jax.Array]] = None):
         self.plan = {p.name: p for p in plan}
         self.order = [p.name for p in plan]
         self.tile = tile
@@ -75,7 +86,10 @@ class HeteGenEngine:
         self.stats = StreamStats()
         self._lock = threading.Lock()
 
-        # Partition every weight once, ahead of time.
+        # Partition every weight once, ahead of time.  ``resident_store``
+        # lets a phase-aware backend run several engines (one partition per
+        # serving phase) without holding duplicate device copies of the
+        # modules both plans promote to residency.
         self._resident: Dict[str, jax.Array] = {}
         self._host_part: Dict[str, np.ndarray] = {}
         self._dev_cols: Dict[str, int] = {}
@@ -84,7 +98,12 @@ class HeteGenEngine:
         for p in plan:
             w = weights[p.name]
             if p.mode == "resident":
-                self._resident[p.name] = jax.device_put(w, self.device)
+                if resident_store is not None and p.name in resident_store:
+                    self._resident[p.name] = resident_store[p.name]
+                else:
+                    self._resident[p.name] = jax.device_put(w, self.device)
+                    if resident_store is not None:
+                        resident_store[p.name] = self._resident[p.name]
                 continue
             if p.mode == "host":
                 self._host_part[p.name] = w

@@ -44,7 +44,15 @@ class PolicyResult:
     schedule: Optional[SchedulePlan]   # residency plan (None if no budget)
     predicted_step_time: float         # sum of per-module critical paths
     resident_bytes: int = 0            # accelerator bytes held by residents
-    batch: int = 1                     # decode batch the plan was tuned for
+    batch: int = 1                     # batch the plan was tuned for
+    phase: str = "decode"              # "prefill" | "decode" (paper §4.1)
+    tokens_per_seq: int = 1            # step tokens per sequence (prompt
+    #                                    length for prefill, 1 for decode)
+
+    @property
+    def intensity(self) -> int:
+        """FLOPs per parameter byte the plan was tuned for."""
+        return self.batch * self.tokens_per_seq
 
 
 def build_policy(
@@ -53,6 +61,8 @@ def build_policy(
     *,
     budget_bytes: Optional[float] = None,
     batch: int = 1,
+    phase: str = "decode",
+    tokens_per_seq: Optional[int] = None,
     use_alpha_benchmark: bool = True,
     use_module_scheduler: bool = True,
     tile: int = 128,
@@ -61,8 +71,16 @@ def build_policy(
 
     ``budget_bytes`` — accelerator memory available for weights (None means
     'only the streaming ring fits': fully offloaded operation).
+
+    ``phase`` — the serving phase the plan targets (§4.1): decode steps run
+    ~``batch`` FLOPs per weight byte (link/host bound, small alpha), while
+    prefill runs ``batch * tokens_per_seq`` (compute bound, alpha -> 1).
+    ``tokens_per_seq`` defaults to 1 for decode and
+    :data:`repro.core.alpha.DEFAULT_PREFILL_TOKENS` for prefill.
     """
-    intensity = max(batch, 1)          # decode: ~batch FLOPs per weight byte
+    tokens_per_seq = alpha_lib.resolve_phase_tokens(phase, tokens_per_seq)
+    batch = max(batch, 1)
+    intensity = batch * tokens_per_seq  # FLOPs per weight byte this phase
     v_cpu = hw.v_cpu(intensity)
     v_gpu = hw.v_gpu(intensity)
     v_com = hw.v_com()
@@ -116,4 +134,5 @@ def build_policy(
     return PolicyResult(plan=plan, alpha=a, schedule=sched,
                         predicted_step_time=t_pred,
                         resident_bytes=resident_bytes,
-                        batch=intensity)
+                        batch=batch, phase=phase,
+                        tokens_per_seq=tokens_per_seq)

@@ -1,22 +1,24 @@
 """Serving launcher — the paper's deployment shape.
 
-Modes:
+Every mode is flag parsing over ONE front door,
+:class:`repro.serving.api.LLM` (docs/SERVING.md):
 
-    resident       jitted generator, weights on device
+    resident       jitted one-shot generation, weights on device
     offload        HeteGen: weights in host memory, alpha-split linears,
                    pinned-ring streaming (`--budget-frac` sets the device
-                   memory available for residency promotion); the placement
-                   plan is tuned for the request batch size
-    batch          continuous batching demo over N synthetic requests
+                   memory available for residency promotion); the backend
+                   holds per-phase placement plans — compute-bound
+                   prefill (alpha -> 1) and link-bound decode
+    batch          continuous batching over N synthetic requests
     batch-offload  continuous batching over HeteGen-offloaded weights
-                   (slot-based scheduling, host-resident parameters)
 
-``--paged`` switches the batch modes to the paged KV cache
-(:mod:`repro.serving.kv_cache`): slot admit/release maps/unmaps
-fixed-size pages through block tables instead of copying cache slices —
-token-identical to the dense path under greedy sampling (stochastic
-samplers only match in distribution: paged decode compacts the batch,
-which renumbers the rows a per-step key is consumed by).
+The modes differ only in which backend is handed to the facade and
+whether requests arrive together (one-shot executor) or staggered
+(continuous batcher).  ``--paged`` swaps the batch modes to the paged KV
+cache; ``--sampler`` picks the per-request sampling (requests carry
+their own :class:`repro.serving.sampling.SamplingParams`, so paged and
+dense decode stay token-identical even stochastically); ``--stream``
+prints the first request's tokens as they decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m \\
         --mode offload --budget-frac 0.25 --requests 4
@@ -44,6 +46,11 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache for the batch modes")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--sampler", choices=("greedy", "temperature", "topk",
+                                          "topp"), default="greedy")
+    ap.add_argument("--temperature", type=float, default=1.0)
+    ap.add_argument("--stream", action="store_true",
+                    help="stream the first request token by token")
     ap.add_argument("--hw", default="a10", help="hardware model for the "
                     "alpha law (a10 | v5e)")
     ap.add_argument("--dryrun", action="store_true")
@@ -60,78 +67,80 @@ def main() -> None:
         raise SystemExit(subprocess.call(cmd))
 
     import jax
-    import jax.numpy as jnp
     import numpy as np
 
     from repro.configs import get_config, reduced
     from repro.core.hw import HARDWARE
     from repro.models import model as M
+    from repro.serving.api import LLM
+    from repro.serving.sampling import SamplingParams
 
     cfg = get_config(args.arch)
     if args.reduced:
         cfg = reduced(cfg)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompt = rng.integers(0, cfg.vocab_size,
-                          (args.requests, args.prompt_len)).astype(np.int32)
+    prompts = [list(rng.integers(0, cfg.vocab_size, args.prompt_len))
+               for _ in range(args.requests)]
+    sampling = SamplingParams(
+        kind=args.sampler, temperature=args.temperature,
+        top_k=40 if args.sampler == "topk" else 0,
+        top_p=0.9 if args.sampler == "topp" else 1.0)
     print(f"serving {cfg.name} ({cfg.param_count()/1e6:.1f}M) "
-          f"mode={args.mode}")
+          f"mode={args.mode} sampler={args.sampler}")
 
-    if args.mode == "resident":
-        from repro.serving.engine import Generator
-        r = Generator(cfg, params).generate({"tokens": jnp.asarray(prompt)},
-                                            args.max_new)
-        print(f"{args.requests} x {args.max_new} tokens, "
-              f"{r.tokens_per_s:.1f} tok/s decode")
-    elif args.mode == "offload":
-        from repro.serving.offload_runtime import (OffloadGenerator,
-                                                   enumerate_linears)
-        hw = HARDWARE[args.hw]
+    # the one divergence between modes: which backend the facade drives.
+    # slots = the decode width the facade schedules, and therefore the
+    # batch the offload plan is built for — matching them up front avoids
+    # throwaway engine partitions (the batcher re-tunes to its slot count)
+    slots = args.requests if args.mode == "offload" else 4
+    backend = None
+    if args.mode in ("offload", "batch-offload"):
+        from repro.serving.backends import HeteGenBackend, enumerate_linears
         total = sum(s.nbytes for s in enumerate_linears(cfg))
-        off = OffloadGenerator(cfg, params, hw=hw,
-                               budget_bytes=args.budget_frac * total)
-        res = off.generate(prompt, args.max_new)
-        st = res["stream_stats"]
-        print(f"alpha={res['alpha']:.3f} resident="
-              f"{res['resident_bytes']/1e6:.0f}MB/"
-              f"{total/1e6:.0f}MB  {res['tokens_per_s']:.1f} tok/s")
-        print(f"stream busy (s): cpu={st.cpu:.3f} pin={st.pin:.3f} "
-              f"trans={st.trans:.3f} dev={st.dev:.3f}")
-        off.close()
-    else:
-        from repro.serving.batcher import ContinuousBatcher
-        backend = None
-        max_slots = 4
-        if args.mode == "batch-offload":
-            from repro.serving.backends import HeteGenBackend
-            from repro.serving.offload_runtime import enumerate_linears
-            total = sum(s.nbytes for s in enumerate_linears(cfg))
-            backend = HeteGenBackend(
-                cfg, params, hw=HARDWARE[args.hw], batch=max_slots,
-                budget_bytes=args.budget_frac * total)
-            print(f"offload backend: alpha={backend.policy.alpha:.3f} "
-                  f"plan tuned for batch={backend.policy.batch}")
-        if args.paged and backend is None:
-            # the scan-stacked default cache is not pageable; the paged
-            # resident path runs through the per-layer backend cache
-            from repro.serving.backends import ResidentBackend
-            backend = ResidentBackend(cfg, params)
-        b = ContinuousBatcher(cfg, params, backend=backend,
-                              max_slots=max_slots,
-                              max_len=args.prompt_len + args.max_new + 8,
-                              paged=args.paged, page_size=args.page_size)
-        for i in range(args.requests):
-            b.submit(list(prompt[i]), args.max_new)
-        outs = b.run_until_done()
-        total_toks = sum(len(v) for v in outs.values())
-        print(f"continuous batching: {len(outs)} requests, "
-              f"{total_toks} tokens generated")
-        if b.kv is not None:
-            used = b.kv.n_pages - 1 - b.kv.free_pages
-            print(f"paged KV: page_size={b.kv.page_size} "
-                  f"pool={b.kv.n_pages - 1} pages, {used} still mapped")
-        if backend is not None:
-            backend.close()
+        backend = HeteGenBackend(cfg, params, hw=HARDWARE[args.hw],
+                                 batch=slots,
+                                 budget_bytes=args.budget_frac * total)
+
+    with LLM(cfg, params, backend=backend, own_backend=True,
+             sampling=sampling, max_slots=slots,
+             max_len=args.prompt_len + args.max_new + 8,
+             paged=args.paged, page_size=args.page_size) as llm:
+        if args.stream:
+            toks = []
+            for tok in llm.stream(prompts[0], args.max_new):
+                toks.append(tok)
+                print(f"  stream> {tok}", flush=True)
+            prompts = prompts[1:]
+
+        if args.mode in ("resident", "offload"):
+            # requests arrive together: the facade runs them one-shot
+            outs = llm.generate(prompts, args.max_new) if prompts else []
+        else:
+            # staggered arrivals: continuous batching
+            for p in prompts:
+                llm.submit(p, args.max_new)
+            outs = list(llm.drain().values())
+
+        st = llm.stats()
+        total_toks = sum(len(o.tokens) for o in outs)
+        print(f"{len(outs)} requests, {total_toks} tokens "
+              f"via executor={st['executor']}, "
+              f"{st.get('tokens_per_s', 0.0):.1f} tok/s")
+        if "phase_alpha" in st:
+            al = st["phase_alpha"]
+            print("phase plans: " + "  ".join(
+                f"{ph}: alpha={a:.3f}" for ph, a in sorted(al.items())))
+            print(f"resident={st['resident_bytes']/1e6:.0f}MB")
+        if "stream" in st:
+            s = st["stream"]
+            print(f"stream busy (s): cpu={s.cpu:.3f} pin={s.pin:.3f} "
+                  f"trans={s.trans:.3f} dev={s.dev:.3f}")
+        if "paged" in st:
+            pg = st["paged"]
+            print(f"paged KV: page_size={pg['page_size']} "
+                  f"pool={pg['pool_pages']} pages, "
+                  f"{pg['mapped_pages']} still mapped")
 
 
 if __name__ == "__main__":

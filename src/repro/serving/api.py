@@ -1,0 +1,447 @@
+"""The request-level serving front door (docs/SERVING.md).
+
+One facade, :class:`LLM`, covers every serving shape this repo has:
+resident jitted generation, HeteGen-offloaded generation, continuous
+batching (dense or paged KV), and streaming — behind a request-level API:
+
+    with LLM(cfg, params) as llm:                       # resident
+        outs = llm.generate([p1, p2], max_new=32)       # blocking batch
+
+    llm = LLM(cfg, backend=HeteGenBackend(cfg, params, hw=..., ...),
+              own_backend=True)                         # offloaded
+    for tok in llm.stream(prompt, max_new=64):          # incremental
+        ...
+    rid = llm.submit(prompt, max_new=16,
+                     sampling=SamplingParams(kind="topp", top_p=0.9),
+                     on_token=print)                    # callback stream
+    llm.drain()
+
+Requests are the unit: each carries its prompt, budget, stop token, and
+its own :class:`repro.serving.sampling.SamplingParams` (per-request PRNG
+stream included).  The facade owns the scheduler and picks the executor:
+
+  * **one-shot generator** — when a ``generate`` call arrives with no
+    other requests in flight and a rectangular prompt batch, the whole
+    batch runs as one prefill + decode loop
+    (:class:`repro.serving.engine.Generator` under the hood);
+  * **continuous batcher** — ``submit``/``stream``, ragged prompts, or
+    calls overlapping in-flight work run through slot-based continuous
+    batching (:class:`repro.serving.batcher.ContinuousBatcher`).
+
+Because sampling draws from request-owned PRNG streams (keyed by request
+id and token count, never batch row), the two executors produce
+token-identical output for the same requests — executor choice is purely
+a throughput decision.
+
+Backends plug in unchanged: ``backend=None`` serves the scan-stacked
+resident path from ``params`` (or a jitted per-layer
+``ResidentBackend`` when ``paged=True``); any
+:class:`repro.serving.backends.LinearBackend` — including the phase-aware
+:class:`repro.serving.backends.HeteGenBackend`, which swaps placement
+plans between prefill and decode — drops in via ``backend=``.
+``own_backend=True`` transfers backend lifetime to the facade;
+``close()`` (or the context manager) tears down everything the facade
+owns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from typing import Callable, Dict, Iterator, List, Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ModelConfig
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.engine import Generator
+from repro.serving.sampling import SamplingParams, request_key
+
+Prompt = Sequence[int]
+
+
+@dataclasses.dataclass
+class GenRequest:
+    """One generation request, fully self-describing."""
+
+    prompt: List[int]
+    max_new: int
+    eos: Optional[int] = None
+    sampling: SamplingParams = SamplingParams()
+    stream: Optional[Callable[[int], None]] = None   # per-token callback
+    rid: Optional[int] = None                        # assigned by the LLM
+
+
+@dataclasses.dataclass
+class RequestOutput:
+    """What a finished request produced."""
+
+    rid: int
+    prompt: List[int]
+    tokens: List[int]
+    finish_reason: str          # "length" | "eos"
+
+
+def _finish_reason(tokens: List[int], eos: Optional[int]) -> str:
+    return "eos" if (eos is not None and tokens and tokens[-1] == eos) \
+        else "length"
+
+
+class LLM:
+    """Request-level serving facade — the one front door.
+
+    ``cfg, params`` serve resident weights; ``backend=`` swaps the
+    execution engine (ResidentBackend, HeteGenBackend, ...).  Scheduler
+    shape (``max_slots``, ``max_len``, ``paged``, ``retune_hysteresis``,
+    ...) is facade-level config; everything request-level travels on the
+    request itself.
+    """
+
+    def __init__(self, cfg: ModelConfig, params: Optional[Dict] = None, *,
+                 backend=None, own_backend: Optional[bool] = None,
+                 sampling: SamplingParams = SamplingParams(),
+                 max_slots: int = 4, max_len: int = 512,
+                 paged: bool = False, page_size: int = 16,
+                 n_pages: Optional[int] = None,
+                 kv_dtype: Optional[str] = None,
+                 retune_hysteresis: Optional[int] = None,
+                 seed: int = 0):
+        if backend is None and params is None:
+            raise ValueError("LLM needs params or a backend")
+        self.cfg = cfg
+        self._params = params
+        self._backend = backend
+        built_here = False
+        if backend is None and paged:
+            # the scan-stacked cache is not pageable; paged resident
+            # serving runs through the jitted per-layer backend
+            from repro.serving.backends import ResidentBackend
+            self._backend = ResidentBackend(cfg, params)
+            built_here = True
+        self._own_backend = built_here if own_backend is None \
+            else bool(own_backend)
+        self.sampling = sampling
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.paged = paged
+        self.page_size = page_size
+        self.n_pages = n_pages
+        self.kv_dtype = kv_dtype
+        self.retune_hysteresis = retune_hysteresis
+        self.seed = seed
+        self._base_key = jax.random.PRNGKey(seed)
+        self._ids = itertools.count()
+        self._batcher: Optional[ContinuousBatcher] = None
+        self._generator: Optional[Generator] = None
+        self._callbacks: Dict[int, Callable[[int], None]] = {}
+        self._delivered: Dict[int, int] = {}
+        self._streaming: set = set()    # rids owned by live stream() iters
+        self._closed = False
+        self.last_executor: Optional[str] = None
+        self.last_metrics: Dict[str, float] = {}
+
+    # -- executors ------------------------------------------------------
+    def _ensure_batcher(self) -> ContinuousBatcher:
+        if self._batcher is None:
+            kw = dict(max_slots=self.max_slots, max_len=self.max_len,
+                      seed=self.seed, paged=self.paged,
+                      page_size=self.page_size, n_pages=self.n_pages,
+                      kv_dtype=self.kv_dtype,
+                      retune_hysteresis=self.retune_hysteresis)
+            if self._backend is None:
+                self._batcher = ContinuousBatcher(self.cfg, self._params,
+                                                  **kw)
+            else:
+                # the facade manages backend lifetime, not the batcher
+                self._batcher = ContinuousBatcher(self.cfg,
+                                                  backend=self._backend,
+                                                  own_backend=False, **kw)
+        return self._batcher
+
+    def _ensure_generator(self) -> Generator:
+        if self._generator is None:
+            if self._backend is None:
+                self._generator = Generator(self.cfg, self._params)
+            else:
+                self._generator = Generator(self.cfg,
+                                            backend=self._backend)
+        return self._generator
+
+    # -- request normalization -----------------------------------------
+    def _as_requests(self, prompts, max_new, eos, sampling
+                     ) -> List[GenRequest]:
+        if isinstance(prompts, GenRequest):
+            prompts = [prompts]
+        elif prompts and isinstance(prompts[0], (int, np.integer)):
+            prompts = [prompts]          # a single raw token sequence
+        reqs: List[GenRequest] = []
+        for i, p in enumerate(prompts):
+            if isinstance(p, GenRequest):
+                req = p
+            else:
+                if max_new is None:
+                    raise ValueError("max_new is required for raw prompts")
+                sp = sampling[i] if isinstance(sampling, (list, tuple)) \
+                    else (sampling or self.sampling)
+                req = GenRequest(list(int(t) for t in p), max_new,
+                                 eos=eos, sampling=sp)
+            if req.rid is None:
+                req.rid = next(self._ids)
+            reqs.append(req)
+        return reqs
+
+    # -- blocking batch -------------------------------------------------
+    def generate(self,
+                 prompts: Union[Prompt, Sequence[Prompt],
+                                Sequence[GenRequest]],
+                 max_new: Optional[int] = None, *,
+                 eos: Optional[int] = None,
+                 sampling: Union[SamplingParams,
+                                 Sequence[SamplingParams], None] = None
+                 ) -> List[RequestOutput]:
+        """Run a batch of requests to completion and return their outputs.
+
+        Executor selection: a rectangular batch with nothing else in
+        flight runs one-shot (single prefill + jitted decode loop);
+        ragged prompts, per-request budgets, or overlap with submitted
+        work run through the continuous batcher.  Either way the tokens
+        are identical (request-owned sampling streams).
+        """
+        reqs = self._as_requests(prompts, max_new, eos, sampling)
+        if not reqs:
+            return []
+        busy = self._batcher is not None and (
+            self._batcher.queue or self._batcher.active.any())
+        rect = (len({len(r.prompt) for r in reqs}) == 1
+                and len({r.max_new for r in reqs}) == 1
+                and not any(r.stream for r in reqs))
+        if rect and not busy:
+            return self._generate_oneshot(reqs)
+        return self._generate_batched(reqs)
+
+    def _generate_oneshot(self, reqs: List[GenRequest]
+                          ) -> List[RequestOutput]:
+        g = self._ensure_generator()
+        toks = jnp.asarray([r.prompt for r in reqs], jnp.int32)
+        keys = [request_key(self._base_key, r.rid, r.sampling)
+                for r in reqs]
+        res = g.generate({"tokens": toks}, reqs[0].max_new,
+                         sampling=[r.sampling for r in reqs],
+                         request_keys=keys)
+        self.last_executor = "generator"
+        self.last_metrics = {"prefill_s": res.prefill_s,
+                             "decode_s": res.decode_s,
+                             "tokens_per_s": res.tokens_per_s}
+        outs = []
+        for req, row in zip(reqs, res.tokens):
+            if req.eos is not None and req.eos in row:
+                row = row[:row.index(req.eos) + 1]
+            outs.append(RequestOutput(req.rid, req.prompt, list(row),
+                                      _finish_reason(row, req.eos)))
+        return outs
+
+    def _generate_batched(self, reqs: List[GenRequest]
+                          ) -> List[RequestOutput]:
+        b = self._ensure_batcher()
+        for req in reqs:
+            self._submit_req(req)
+        t0 = time.perf_counter()
+        steps = 0
+        while not all(b.requests[r.rid].done for r in reqs):
+            self._step_or_stall()
+            steps += 1
+        dt = max(time.perf_counter() - t0, 1e-9)
+        n_tok = sum(len(b.requests[r.rid].generated) for r in reqs)
+        self.last_executor = "batcher"
+        self.last_metrics = {"steps": steps, "wall_s": dt,
+                             "tokens_per_s": n_tok / dt}
+        return [self._take_result(r.rid) for r in reqs]
+
+    # -- incremental ----------------------------------------------------
+    def submit(self, prompt: Union[Prompt, GenRequest],
+               max_new: Optional[int] = None, *,
+               eos: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               on_token: Optional[Callable[[int], None]] = None) -> int:
+        """Queue one request on the continuous batcher; returns its id.
+
+        ``on_token`` (or ``GenRequest.stream``) is called with each new
+        token as scheduler steps deliver it.
+        """
+        req = self._as_requests(prompt, max_new, eos, sampling)[0]
+        return self._submit_req(req, on_token)
+
+    def _submit_req(self, req: GenRequest,
+                    on_token: Optional[Callable[[int], None]] = None
+                    ) -> int:
+        b = self._ensure_batcher()
+        b.submit(req.prompt, req.max_new, req.eos,
+                 sampling=req.sampling, rid=req.rid)
+        self._delivered[req.rid] = 0
+        cb = on_token or req.stream
+        if cb is not None:
+            self._callbacks[req.rid] = cb
+        return req.rid
+
+    def step(self) -> int:
+        """Advance the scheduler one decode step; fires stream callbacks.
+
+        Returns the number of active slots after the step.
+        """
+        if self._batcher is None:
+            return 0
+        n = self._batcher.step()
+        self._deliver()
+        return n
+
+    def _step_or_stall(self) -> int:
+        """One scheduler step that refuses to spin: an idle scheduler
+        whose admission makes no progress can never make any (a queued
+        request wants more pages than the whole pool holds)."""
+        b = self._batcher
+        idle_before = not b.active.any()
+        queued_before = len(b.queue)
+        n = self.step()
+        if n == 0 and b.queue and idle_before \
+                and len(b.queue) == queued_before:
+            raise RuntimeError("scheduler stalled with queued requests")
+        return n
+
+    def stream(self, prompt: Union[Prompt, GenRequest],
+               max_new: Optional[int] = None, *,
+               eos: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None
+               ) -> Iterator[int]:
+        """Submit one request and yield its tokens as they are decoded.
+
+        Submission happens eagerly (the request is in the scheduler the
+        moment this returns); only the token delivery is lazy.  Other
+        in-flight requests keep advancing underneath (continuous
+        batching); interleave several ``stream`` iterators freely.
+        """
+        rid = self.submit(prompt, max_new, eos=eos, sampling=sampling)
+        # the iterator owns this request's reporting: a concurrent drain()
+        # must neither evict it mid-iteration nor double-report it
+        self._streaming.add(rid)
+        return self._stream_tokens(rid)
+
+    def _stream_tokens(self, rid: int) -> Iterator[int]:
+        b = self._batcher
+        req = b.requests[rid]
+        sent = 0
+        try:
+            while True:
+                while sent < len(req.generated):
+                    yield req.generated[sent]
+                    sent += 1
+                if req.done:
+                    break
+                self._step_or_stall()
+            self.last_executor = "batcher"
+        finally:
+            self._streaming.discard(rid)
+            if req.done:
+                self._take_result(rid)  # evict: fully delivered by yield
+
+    def drain(self, max_steps: int = 100_000) -> Dict[int, RequestOutput]:
+        """Run the batcher until every submitted request finishes.
+
+        Each finished request is reported exactly once (across drains and
+        ``generate`` calls) and then evicted from the scheduler's books.
+        """
+        b = self._batcher
+        if b is None:
+            return {}
+        t0 = time.perf_counter()
+        before = sum(len(r.generated) for r in b.requests.values())
+        steps = 0
+        for _ in range(max_steps):
+            if not b.queue and not b.active.any():
+                break
+            self._step_or_stall()
+            steps += 1
+        dt = max(time.perf_counter() - t0, 1e-9)
+        toks = sum(len(r.generated) for r in b.requests.values()) - before
+        self.last_executor = "batcher"
+        self.last_metrics = {"steps": steps, "wall_s": dt,
+                             "tokens_per_s": toks / dt}
+        return {rid: self._take_result(rid)
+                for rid in list(b.requests)
+                if b.requests[rid].done and rid not in self._streaming}
+
+    def result(self, rid: int) -> RequestOutput:
+        """Output of a batcher-scheduled request (complete or partial)."""
+        req = self._ensure_batcher().requests[rid]
+        return RequestOutput(req.rid, req.prompt, list(req.generated),
+                             _finish_reason(req.generated, req.eos))
+
+    def _take_result(self, rid: int) -> RequestOutput:
+        """result() + eviction: finished requests leave the scheduler's
+        books once reported, so a long-lived facade doesn't accumulate
+        every request it ever served (and repeated drains never re-report
+        old work)."""
+        out = self.result(rid)
+        self._batcher.requests.pop(rid, None)
+        self._delivered.pop(rid, None)
+        return out
+
+    def _deliver(self) -> None:
+        for rid, cb in list(self._callbacks.items()):
+            req = self._batcher.requests[rid]
+            sent = self._delivered.get(rid, 0)
+            for tok in req.generated[sent:]:
+                cb(tok)
+            self._delivered[rid] = len(req.generated)
+            if req.done:
+                del self._callbacks[rid]
+
+    # -- introspection / lifecycle -------------------------------------
+    @property
+    def backend(self):
+        """The executing backend (None = scan-stacked resident path)."""
+        if self._backend is not None:
+            return self._backend
+        return self._batcher.backend if self._batcher is not None else None
+
+    def stats(self) -> Dict:
+        """Serving counters: executor choice, per-phase plans, engine
+        stream busy-time — whatever the active backend exposes."""
+        st: Dict = {"executor": self.last_executor, **self.last_metrics}
+        be = self.backend
+        if be is not None and hasattr(be, "policies"):
+            st["phase_alpha"] = {ph: p.alpha
+                                 for ph, p in be.policies.items()}
+            st["phase_batch"] = {ph: (p.batch, p.tokens_per_seq)
+                                 for ph, p in be.policies.items()}
+        if be is not None and hasattr(be, "device_resident_bytes"):
+            st["resident_bytes"] = be.device_resident_bytes()
+        if be is not None and hasattr(be, "finish_stats"):
+            st["stream"] = be.finish_stats()
+        if self._batcher is not None:
+            st["retunes"] = self._batcher.retunes
+            kv = self._batcher.kv
+            if kv is not None:
+                st["paged"] = {"page_size": kv.page_size,
+                               "pool_pages": kv.n_pages - 1,
+                               "mapped_pages": kv.n_pages - 1
+                               - kv.free_pages}
+        return st
+
+    def close(self) -> None:
+        """Tear down everything the facade owns (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._batcher is not None:
+            self._batcher.close()
+        if self._own_backend and self._backend is not None:
+            self._backend.close()
+
+    def __enter__(self) -> "LLM":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

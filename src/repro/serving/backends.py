@@ -30,7 +30,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.engine import HeteGenEngine, ModulePlan
+from repro.core.alpha import resolve_phase_tokens
+from repro.core.engine import HeteGenEngine, ModulePlan, StreamStats
 from repro.core.hw import HardwareSpec, TPU_V5E
 from repro.core.policy import LinearSpec, PolicyResult, build_policy
 from repro.models import model as M
@@ -47,6 +48,14 @@ class LinearBackend(Protocol):
     ("blk{l}.wq", "blk{l}.w_down", ...).  ``cache_batch_axis`` is the axis
     carrying the batch in every cache buffer (the continuous batcher's
     slot-merge axis).
+
+    The serving **phase** is part of the seam: ``prefill`` and ``decode``
+    are distinct entry points because their placement economics differ
+    (paper §4.1 — prefill is compute-bound, decode link-bound), and a
+    planning backend may execute them under different plans.  Backends
+    that re-plan expose ``retune(batch, phase=..., tokens_per_seq=...)``;
+    schedulers probe for it with ``hasattr`` (resident backends don't
+    plan, so it is not part of the required protocol).
     """
 
     cache_batch_axis: int
@@ -213,11 +222,24 @@ class ScanResidentBackend:
 class HeteGenBackend:
     """HeteGen-scheduled offloaded execution of the shared layer math.
 
-    Weights live in host memory; every ``linear`` runs through the threaded
+    Weights live in host memory; every ``linear`` runs through a threaded
     :class:`HeteGenEngine` under a placement plan built for the *real*
-    decode batch size — §4.1's cost model shifts the optimal alpha with
-    compute intensity, so ``retune(batch)`` rebuilds the plan (and the
+    workload — §4.1's cost model shifts the optimal alpha with compute
+    intensity, so ``retune(batch, phase=...)`` rebuilds the plan (and the
     engine's weight partition) whenever the serving batch changes.
+
+    The backend is **phase-aware** (docs/SERVING.md): it holds one plan
+    and one engine partition per serving phase.  Decode moves every weight
+    byte to produce ``batch`` tokens (link/host bound — small alpha, the
+    host GEMM earns its keep), while prefill computes ``batch * prompt``
+    positions against the same traffic (compute bound — alpha -> 1, stream
+    nearly everything to the accelerator).  ``prefill``/``decode`` route
+    their linears through their own phase's partition; the prefill plan is
+    (re)tuned lazily from the observed prompt shape, with a multiplicative
+    hysteresis (``prefill_retune_factor``) so prompt-length jitter does
+    not rebuild the engine.  Engines share device-resident module copies
+    through a common ``resident_store``, so dual plans never duplicate
+    promoted weights on the accelerator.
     """
 
     cache_batch_axis = 0
@@ -228,7 +250,9 @@ class HeteGenBackend:
                  batch: int = 1,
                  use_alpha_benchmark: bool = True,
                  use_module_scheduler: bool = True,
-                 alpha_override: Optional[float] = None):
+                 alpha_override: Optional[float] = None,
+                 phase_plans: bool = True,
+                 prefill_retune_factor: float = 2.0):
         self.cfg = cfg
         shared, weights, biases = M.extract_backend_params(cfg, params)
         self.shared = shared
@@ -241,38 +265,92 @@ class HeteGenBackend:
         self.use_alpha_benchmark = use_alpha_benchmark
         self.use_module_scheduler = use_module_scheduler
         self.alpha_override = alpha_override
+        self.phase_plans = phase_plans
+        self.prefill_retune_factor = max(float(prefill_retune_factor), 1.0)
         self.batch: Optional[int] = None
-        self.engine: Optional[HeteGenEngine] = None
-        self.policy: Optional[PolicyResult] = None
+        self.policies: Dict[str, PolicyResult] = {}
+        self.engines: Dict[str, HeteGenEngine] = {}
+        self._resident_store: Dict[str, jax.Array] = {}
+        self._stats_tally = StreamStats()   # closed engines' busy seconds
+        self._phase = "decode"
         self.retune(batch)
 
-    # -- batch-aware planning ------------------------------------------
-    def retune(self, batch: int) -> PolicyResult:
-        """(Re)build the placement plan and engine for ``batch``."""
+    # -- phase/batch-aware planning ------------------------------------
+    @property
+    def policy(self) -> Optional[PolicyResult]:
+        """The decode-phase plan (the historical single-plan surface)."""
+        return self.policies.get("decode")
+
+    @property
+    def engine(self) -> Optional[HeteGenEngine]:
+        """The decode-phase engine (the historical single-engine surface)."""
+        return self.engines.get("decode")
+
+    def retune(self, batch: int, phase: str = "decode", *,
+               tokens_per_seq: Optional[int] = None) -> PolicyResult:
+        """(Re)build ``phase``'s placement plan and engine for ``batch``.
+
+        No-op when the phase already holds a plan for exactly this
+        (batch, tokens_per_seq); the soft (hysteresis-guarded) prefill
+        path is :meth:`_ensure_prefill_plan`.
+        """
         batch = max(int(batch), 1)
-        if self.engine is not None and batch == self.batch:
-            return self.policy
-        if self.engine is not None:
-            self.engine.close()
-        self.policy = build_policy(
+        tokens_per_seq = resolve_phase_tokens(phase, tokens_per_seq)
+        cur = self.policies.get(phase)
+        if cur is not None and cur.batch == batch \
+                and cur.tokens_per_seq == tokens_per_seq:
+            return cur
+        pol = build_policy(
             self.linears, self.hw, budget_bytes=self.budget_bytes,
-            batch=batch, use_alpha_benchmark=self.use_alpha_benchmark,
+            batch=batch, phase=phase, tokens_per_seq=tokens_per_seq,
+            use_alpha_benchmark=self.use_alpha_benchmark,
             use_module_scheduler=self.use_module_scheduler)
         if self.alpha_override is not None:
-            self.policy.plan = [
+            pol.plan = [
                 ModulePlan(p.name, p.group, p.mode,
                            self.alpha_override if p.mode == "hetegen"
                            else p.alpha)
-                for p in self.policy.plan]
-        self.engine = HeteGenEngine(self._host_weights, self.policy.plan,
-                                    biases=self._host_biases)
-        self.engine.warm_prefetch()
-        self.batch = batch
-        return self.policy
+                for p in pol.plan]
+        old = self.engines.pop(phase, None)
+        if old is not None:
+            # a replaced partition's busy seconds still happened: bank
+            # them so finish_stats never undercounts across retunes
+            self._stats_tally = self._stats_tally + old.finish_stats()
+            old.close()
+        self.policies[phase] = pol
+        # drop store entries no current plan keeps resident BEFORE building
+        # the new engine, so stale device copies are released
+        keep = {p.name for r in self.policies.values()
+                for p in r.plan if p.mode == "resident"}
+        for name in list(self._resident_store):
+            if name not in keep:
+                del self._resident_store[name]
+        eng = HeteGenEngine(self._host_weights, pol.plan,
+                            biases=self._host_biases,
+                            resident_store=self._resident_store)
+        eng.warm_prefetch()
+        self.engines[phase] = eng
+        if phase == "decode":
+            self.batch = batch
+        return pol
+
+    def _ensure_prefill_plan(self, batch: int, seq: int) -> None:
+        """Tune the prefill plan to the observed prompt shape, with
+        multiplicative hysteresis: rebuild only when the observed
+        intensity leaves [cur/f, cur*f] (prompt-length jitter across
+        requests must not thrash the engine partition)."""
+        cur = self.policies.get("prefill")
+        intensity = max(batch, 1) * max(seq, 1)
+        if cur is not None:
+            f = self.prefill_retune_factor
+            if cur.intensity / f <= intensity <= cur.intensity * f:
+                return
+        self.retune(batch, phase="prefill", tokens_per_seq=seq)
 
     # -- LinearBackend surface -----------------------------------------
     def linear(self, x: jax.Array, name: str) -> jax.Array:
-        return self.engine.linear(x, name)
+        eng = self.engines.get(self._phase) or self.engines["decode"]
+        return eng.linear(x, name)
 
     def init_cache(self, batch: int, max_len: int) -> Dict:
         return M.init_backend_cache(self.cfg, batch, max_len)
@@ -285,14 +363,49 @@ class HeteGenBackend:
                             n_pages=n_pages, kv_dtype=kv_dtype)
 
     def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
-        return M.backend_prefill(self.cfg, self.shared, batch, cache,
-                                 linear=self.linear, ops=self._ops)
+        if self.phase_plans:
+            if "tokens" in batch:
+                b, s = batch["tokens"].shape
+            else:
+                b, s = batch["embeds"].shape[:2]
+            self._ensure_prefill_plan(b, s)
+            self._phase = "prefill"
+        try:
+            return M.backend_prefill(self.cfg, self.shared, batch, cache,
+                                     linear=self.linear, ops=self._ops)
+        finally:
+            self._phase = "decode"
 
     def decode(self, token: jax.Array, cache: Dict
                ) -> Tuple[Dict, jax.Array]:
         return M.backend_decode(self.cfg, self.shared, token, cache,
                                 linear=self.linear, ops=self._ops)
 
+    # -- stats over all phase engines ----------------------------------
+    def reset_stats(self) -> None:
+        self._stats_tally = StreamStats()
+        for eng in self.engines.values():
+            eng.reset_stats()
+
+    def finish_stats(self) -> StreamStats:
+        out = self._stats_tally
+        for eng in self.engines.values():
+            out = out + eng.finish_stats()
+        return out
+
+    def device_resident_bytes(self) -> int:
+        seen: Dict[str, int] = {}
+        for eng in self.engines.values():
+            for name, arr in eng._resident.items():
+                seen[name] = int(np.prod(arr.shape)) * arr.dtype.itemsize
+        return sum(seen.values())
+
+    def pinned_overhead_bytes(self) -> int:
+        return sum(eng.pinned_overhead_bytes()
+                   for eng in self.engines.values())
+
     def close(self) -> None:
-        if self.engine is not None:
-            self.engine.close()
+        for eng in self.engines.values():
+            eng.close()
+        self.engines.clear()
+        self._resident_store.clear()

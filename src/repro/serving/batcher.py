@@ -20,7 +20,15 @@ over HeteGen-offloaded weights — continuous batching over host-resident
 parameters, with the placement plan tuned for the decode batch
 (= ``max_slots``).  Supported for the dense/moe/vlm transformer families
 (per-slot state for SSM trunks would need per-slot state snapshots; see
-DESIGN.md §8).
+docs/SERVING.md).
+
+Sampling is **per request** (docs/SERVING.md): each submit may carry its
+own :class:`repro.serving.sampling.SamplingParams`, rows of one decode
+batch are sampled under their own parameters (row-vectorized sampler),
+and every request owns a PRNG stream keyed by its id and generated-token
+count — never by batch-row number.  Paged compaction can therefore
+renumber rows freely: paged and dense decode are token-identical even
+under stochastic sampling.
 
 ``paged=True`` swaps the dense per-layer cache for the
 :class:`repro.serving.kv_cache.PagedKVCache` subsystem: admission *maps*
@@ -32,20 +40,25 @@ finishing request returns pages.  Decode attends through the paged
 flash-decode kernel (block-table gather on TPU, jnp gather oracle here)
 and *compacts* to the active slots: the pools are global, so selecting
 the active block-table rows shrinks the decode batch to the real
-occupancy instead of computing masked garbage in empty slots.  Paged
-results are token-identical to the dense path under greedy sampling;
-stochastic samplers draw per logits *row*, and compaction renumbers
-rows, so they match only in distribution.  ``kv_dtype="int8"`` stores
-q8 pages (int8 + scale pools) for half the cache footprint.
+occupancy instead of computing masked garbage in empty slots.
+``kv_dtype="int8"`` stores q8 pages (int8 + scale pools) for half the
+cache footprint.
 
 ``retune_hysteresis`` (with a retune-capable backend, i.e. HeteGen)
-re-tunes the placement plan when the *executed* decode batch drifts from
-the planned batch by more than the hysteresis margin — §4.1's cost model
-shifts alpha with compute intensity, but rebuilding the engine every
-time one request finishes would thrash; the margin makes retunes sticky.
-Only paged mode executes occupancy-sized batches (compaction), so only
-paged mode ever re-tunes; the dense cache always runs ``max_slots``-wide
-and its plan correctly stays put.
+re-tunes the decode placement plan when the *executed* decode batch
+drifts from the planned batch by more than the hysteresis margin —
+§4.1's cost model shifts alpha with compute intensity, but rebuilding
+the engine every time one request finishes would thrash; the margin
+makes retunes sticky.  Only paged mode executes occupancy-sized batches
+(compaction), so only paged mode ever re-tunes; the dense cache always
+runs ``max_slots``-wide and its plan correctly stays put.  The *prefill*
+plan is phase-tuned inside the backend itself from observed prompt
+shapes, with its own multiplicative hysteresis — the two phases re-tune
+independently.
+
+The batcher owns backend lifetime when it constructed the backend (or
+when handed one with ``own_backend=True``): ``close()`` — or leaving the
+``with`` block — shuts down the owned backend's engine threads.
 """
 
 from __future__ import annotations
@@ -61,7 +74,9 @@ import numpy as np
 from repro.models.config import ModelConfig
 from repro.serving.backends import ScanResidentBackend
 from repro.serving.kv_cache import PagesExhausted, slot_view
-from repro.serving.sampling import SamplerConfig, make_sampler
+from repro.serving.sampling import (SamplerConfig, SamplingParams, greedy,
+                                    pack_sampling, request_key, sample_rows,
+                                    step_key)
 
 
 @dataclasses.dataclass
@@ -70,6 +85,8 @@ class Request:
     prompt: List[int]
     max_new: int
     eos: Optional[int] = None
+    sampling: SamplingParams = SamplingParams()
+    key: Optional[jax.Array] = None     # request-owned PRNG stream
     generated: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
     slot: Optional[int] = None
@@ -82,13 +99,18 @@ class ContinuousBatcher:
                  seed: int = 0, paged: bool = False, page_size: int = 16,
                  n_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
-                 retune_hysteresis: Optional[int] = None):
+                 retune_hysteresis: Optional[int] = None,
+                 own_backend: Optional[bool] = None):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
         if backend is None and params is None:
             raise ValueError("ContinuousBatcher needs params or a backend")
         self.cfg = cfg
+        # own the backend when we constructed it; callers handing one over
+        # transfer ownership with own_backend=True
+        self._own_backend = backend is None if own_backend is None \
+            else bool(own_backend)
         self.backend = backend or ScanResidentBackend(cfg, params)
         if hasattr(self.backend, "retune"):
             # the decode batch is the slot count — enforce the documented
@@ -96,8 +118,8 @@ class ContinuousBatcher:
             self.backend.retune(max_slots)
         self.max_slots = max_slots
         self.max_len = max_len
-        self.sample = make_sampler(sampler)
-        self._key = jax.random.PRNGKey(seed)
+        self.default_sampling = SamplingParams.from_config(sampler)
+        self._base_key = jax.random.PRNGKey(seed)
         self.paged = paged
         self.kv = None
         if paged:
@@ -111,18 +133,32 @@ class ContinuousBatcher:
         self.cache["len"] = jnp.zeros((max_slots,), jnp.int32)
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self.active = np.zeros((max_slots,), bool)
+        self.slot_req: List[Optional[Request]] = [None] * max_slots
         self.requests: Dict[int, Request] = {}
         self._ids = itertools.count()
         self.queue: List[Request] = []
         self.retune_hysteresis = retune_hysteresis
         self._plan_batch = max_slots
         self.retunes = 0
+        self._closed = False
+        # packed sampling params change only when slot->request assignment
+        # does (admit/release), not every step — cache the device arrays
+        self._pack_sig: Optional[tuple] = None
+        self._packed = None
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int,
-               eos: Optional[int] = None) -> int:
-        rid = next(self._ids)
-        req = Request(rid, list(prompt), max_new, eos)
+               eos: Optional[int] = None, *,
+               sampling: Optional[SamplingParams] = None,
+               rid: Optional[int] = None) -> int:
+        """Queue a request.  ``sampling`` defaults to the batcher-wide
+        config; ``rid`` lets an owning scheduler keep one id space."""
+        rid = next(self._ids) if rid is None else rid
+        if rid in self.requests:
+            raise ValueError(f"duplicate request id {rid}")
+        sp = self.default_sampling if sampling is None else sampling
+        req = Request(rid, list(prompt), max_new, eos, sampling=sp,
+                      key=request_key(self._base_key, rid, sp))
         self.requests[rid] = req
         self.queue.append(req)
         return rid
@@ -130,9 +166,33 @@ class ContinuousBatcher:
     def _free_slots(self) -> List[int]:
         return [i for i in range(self.max_slots) if not self.active[i]]
 
-    def _next_key(self) -> jax.Array:
-        self._key, sub = jax.random.split(self._key)
-        return sub
+    def _sample_slot_rows(self, logits: jax.Array,
+                          slots: List[int]) -> jax.Array:
+        """Sample one token per logits row, row i belonging to slot
+        ``slots[i]``.  Each occupied slot draws under its request's own
+        params with the key for its next token; vacant rows (the dense
+        path's masked garbage) sample greedily with a dead key, so they
+        consume no entropy and cannot perturb real requests."""
+        params, keys = [], []
+        for s in slots:
+            req = self.slot_req[s]
+            if req is None:
+                params.append(SamplingParams())
+                keys.append(jnp.zeros((2,), jnp.uint32))
+            else:
+                params.append(req.sampling)
+                keys.append(step_key(req.key, len(req.generated)))
+        if all(p.kind == "greedy" for p in params):
+            # the default serving config: skip the full-vocab sort the
+            # mixed-kind sampler needs (greedy rows never draw entropy,
+            # so this is exactly equivalent)
+            return greedy(logits)
+        sig = tuple((s, -1 if self.slot_req[s] is None
+                     else self.slot_req[s].rid) for s in slots)
+        if sig != self._pack_sig:
+            self._pack_sig = sig
+            self._packed = pack_sampling(params)
+        return sample_rows(logits, jnp.stack(keys), self._packed)
 
     def _admit(self) -> None:
         for slot in self._free_slots():
@@ -151,12 +211,13 @@ class ContinuousBatcher:
                     break
             req = self.queue.pop(0)
             req.slot = slot
+            self.slot_req[slot] = req
             toks = jnp.asarray([req.prompt], jnp.int32)
             if self.paged:
                 logits = self._prefill_paged_slot(slot, toks)
             else:
                 logits = self._prefill_dense_slot(slot, toks)
-            first = self.sample(logits, self._next_key())
+            first = self._sample_slot_rows(logits, [slot])
             self.cache["len"] = self.cache["len"].at[slot].set(
                 len(req.prompt))
             self.tokens = self.tokens.at[slot].set(first[0])
@@ -205,6 +266,7 @@ class ContinuousBatcher:
             req.done = True
             if req.slot is not None:
                 self.active[req.slot] = False
+                self.slot_req[req.slot] = None
                 if self.paged:
                     # unmap: pages go back to the free list (shared
                     # prefix pages survive via their ref-counts)
@@ -234,10 +296,12 @@ class ContinuousBatcher:
                 and abs(executed - self._plan_batch)
                 > self.retune_hysteresis):
             # executed batch drifted past the hysteresis margin: rebuild
-            # the placement plan for it (ROADMAP item); small oscillations
-            # stay on the current plan.  §4.1's cost model only sees the
-            # executed width, so dense mode never re-tunes on occupancy.
-            self.backend.retune(executed)
+            # the decode placement plan for it (ROADMAP item); small
+            # oscillations stay on the current plan.  §4.1's cost model
+            # only sees the executed width, so dense mode never re-tunes
+            # on occupancy.  The prefill plan is the backend's own
+            # business (phase-tuned on observed prompt shapes).
+            self.backend.retune(executed, phase="decode")
             self._plan_batch = executed
             self.retunes += 1
         if self.paged and occ < self.max_slots:
@@ -245,7 +309,8 @@ class ContinuousBatcher:
         else:
             self.cache, logits = self.backend.decode(self.tokens,
                                                      self.cache)
-            self.tokens = self.sample(logits, self._next_key())
+            self.tokens = self._sample_slot_rows(
+                logits, list(range(self.max_slots)))
         nxt = self.tokens
         for req in list(self.requests.values()):
             if req.slot is not None and self.active[req.slot]:
@@ -262,7 +327,8 @@ class ContinuousBatcher:
         real occupancy (what ``retune`` plans for) — inactive slots cost
         nothing and write nothing.  Results scatter back by slot index.
         """
-        idx = jnp.asarray(np.flatnonzero(self.active))
+        slots = np.flatnonzero(self.active)
+        idx = jnp.asarray(slots)
         sub = {k: v for k, v in self.cache.items()
                if k.startswith("pages_")}
         sub["block_tables"] = self.cache["block_tables"][idx]
@@ -272,7 +338,7 @@ class ContinuousBatcher:
             if key.startswith("pages_"):
                 self.cache[key] = sub[key]
         self.cache["len"] = self.cache["len"].at[idx].set(sub["len"])
-        nxt = self.sample(logits, self._next_key())
+        nxt = self._sample_slot_rows(logits, list(slots))
         self.tokens = self.tokens.at[idx].set(nxt)
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
@@ -281,3 +347,21 @@ class ContinuousBatcher:
                 break
             self.step()
         return {rid: r.generated for rid, r in self.requests.items()}
+
+    # ------------------------------------------------------------------
+    def close(self) -> None:
+        """Release the backend when this batcher owns it (an offload
+        backend holds engine threads and pinned rings — leaking it leaks
+        non-daemon threads).  Idempotent; safe on shared backends (no-op
+        unless owning)."""
+        if self._closed:
+            return
+        self._closed = True
+        if self._own_backend:
+            self.backend.close()
+
+    def __enter__(self) -> "ContinuousBatcher":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

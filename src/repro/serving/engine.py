@@ -5,6 +5,11 @@ runs the autoregressive loop with a donated cache.  This is the path the
 multi-pod dry-run lowers (``serve_step``); the paper's *offload* runtime —
 eager, layer-streaming, HeteGen-scheduled — lives in
 :mod:`repro.serving.offload_runtime` and shares the same layer math.
+
+Request-level serving (per-request sampling, streaming, continuous
+batching) fronts this class through :class:`repro.serving.api.LLM`, which
+uses it as the one-shot executor for rectangular batches
+(docs/SERVING.md).
 """
 
 from __future__ import annotations
@@ -20,7 +25,9 @@ import jax.numpy as jnp
 from repro.distributed.shardings import NO_RULES, ShardingRules
 from repro.models import model as M
 from repro.models.config import ModelConfig
-from repro.serving.sampling import SamplerConfig, make_sampler
+from repro.serving.sampling import (SamplerConfig, SamplingParams,
+                                    make_sampler, pack_sampling, request_key,
+                                    sample_rows, step_key)
 
 
 @dataclasses.dataclass
@@ -73,13 +80,43 @@ class Generator:
                 nxt = self.sample(logits, key)
                 return cache, nxt
 
+            def _decode_logits(params, token, cache):
+                return M.decode_step(cfg, params, token, cache, rules)
+
+            def _decode_greedy(params, token, cache):
+                cache, logits = M.decode_step(cfg, params, token, cache,
+                                              rules)
+                return cache, jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
             self._prefill = jax.jit(_prefill)
             self._decode = jax.jit(_decode, donate_argnums=(2,))
+            # logits-returning variant for request-level sampling: per-row
+            # params/keys live outside the jit, so the loop moves a
+            # (B, vocab) row per step instead of (B,) ids
+            self._decode_logits = jax.jit(_decode_logits,
+                                          donate_argnums=(2,))
+            # all-greedy request batches keep the fused loop regardless of
+            # the constructor's sampler (greedy rows consume no entropy)
+            self._decode_greedy = jax.jit(_decode_greedy,
+                                          donate_argnums=(2,))
 
     # ------------------------------------------------------------------
     def generate(self, batch: Dict, max_new_tokens: int,
                  *, max_len: Optional[int] = None,
-                 seed: int = 0) -> GenerateResult:
+                 seed: int = 0,
+                 sampling: Optional[List[SamplingParams]] = None,
+                 request_keys: Optional[List[jax.Array]] = None
+                 ) -> GenerateResult:
+        """Generate ``max_new_tokens`` per row.
+
+        ``sampling`` switches to request-level sampling: one
+        :class:`SamplingParams` per row, drawn under per-request PRNG
+        streams (``request_keys``, derived from ``seed`` and the row
+        index when omitted) — the same streams the continuous batcher
+        consumes, so one-shot and batched execution of the same requests
+        are token-identical.  Without it, the constructor's whole-batch
+        sampler runs (jitted into the decode step on the scan path).
+        """
         cfg = self.cfg
         if "tokens" in batch:
             b, s = batch["tokens"].shape
@@ -92,24 +129,64 @@ class Generator:
         cache = M.init_cache(cfg, b, total) if be is None \
             else be.init_cache(b, total)
 
+        packed = None
+        all_greedy = False
+        if sampling is not None:
+            if len(sampling) != b:
+                raise ValueError(f"{len(sampling)} SamplingParams for "
+                                 f"batch {b}")
+            all_greedy = all(p.kind == "greedy" for p in sampling)
+            if all_greedy:
+                # greedy rows consume no entropy: keep the fused jitted
+                # loop ((B,) ids per step) instead of shipping (B, vocab)
+                # logits out for the row-vectorized sampler
+                sampling = None
+            else:
+                packed = pack_sampling(sampling)
+                if request_keys is None:
+                    base = jax.random.PRNGKey(seed)
+                    request_keys = [request_key(base, i, sp)
+                                    for i, sp in enumerate(sampling)]
+
+                def row_keys(step: int) -> jax.Array:
+                    return jnp.stack([step_key(k, step)
+                                      for k in request_keys])
+
         t0 = time.perf_counter()
         if be is None:
             cache, logits = self._prefill(self.params, batch, cache)
         else:
             cache, logits = be.prefill(batch, cache)
         key = jax.random.PRNGKey(seed)
-        tok = self.sample(logits, key)
+        if packed is not None:
+            tok = sample_rows(logits, row_keys(0), packed)
+        elif all_greedy:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        else:
+            tok = self.sample(logits, key)
         jax.block_until_ready(tok)
         t1 = time.perf_counter()
 
         out = [tok]
         for i in range(max_new_tokens - 1):
             key = jax.random.fold_in(key, i)
-            if be is None:
-                cache, tok = self._decode(self.params, tok, cache, key)
+            if packed is not None:
+                if be is None:
+                    cache, logits = self._decode_logits(self.params, tok,
+                                                        cache)
+                else:
+                    cache, logits = be.decode(tok, cache)
+                tok = sample_rows(logits, row_keys(i + 1), packed)
+            elif be is None:
+                if all_greedy:
+                    cache, tok = self._decode_greedy(self.params, tok,
+                                                     cache)
+                else:
+                    cache, tok = self._decode(self.params, tok, cache, key)
             else:
                 cache, logits = be.decode(tok, cache)
-                tok = self.sample(logits, key)
+                tok = jnp.argmax(logits, axis=-1).astype(jnp.int32) \
+                    if all_greedy else self.sample(logits, key)
             out.append(tok)
         jax.block_until_ready(out[-1])
         t2 = time.perf_counter()

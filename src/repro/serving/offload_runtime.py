@@ -20,6 +20,11 @@ compute intensity — and sampling is pluggable via
 Supports the dense GQA decoder families (the paper's OPT models and
 mistral-style configs).  Correctness: outputs match the fully-resident
 jitted path to fp tolerance (tests/test_offload_runtime.py).
+
+For request-level serving (per-request sampling, streaming, continuous
+batching) drive the backend through :class:`repro.serving.api.LLM`
+instead — this generator is the phase-aware one-shot executor kept for
+stats-rich offload benchmarking (docs/SERVING.md).
 """
 
 from __future__ import annotations
@@ -79,8 +84,7 @@ class OffloadGenerator:
             self.backend.retune(b)
         total = max_len or (s + max_new_tokens)
         cache = self.backend.init_cache(b, total)
-        engine = self.backend.engine
-        engine.reset_stats()
+        self.backend.reset_stats()
         t0 = time.perf_counter()
         cache, logits = self.backend.prefill(
             {"tokens": jnp.asarray(tokens)}, cache)
@@ -95,7 +99,10 @@ class OffloadGenerator:
             out.append(self.sample(logits, key))
         jax.block_until_ready(out[-1])
         t2 = time.perf_counter()
-        stats = engine.finish_stats()
+        # stream stats aggregate over the backend's phase engines (the
+        # prefill partition ran the prompt, the decode partition the loop)
+        stats = self.backend.finish_stats()
+        prefill_policy = self.backend.policies.get("prefill")
         return {
             "tokens": np.stack([np.asarray(t) for t in out], axis=1),
             "prefill_s": t1 - t0,
@@ -103,9 +110,11 @@ class OffloadGenerator:
             "tokens_per_s": b * max(max_new_tokens - 1, 1) / max(t2 - t1, 1e-9),
             "stream_stats": stats,
             "alpha": self.policy.alpha,
+            "prefill_alpha": (None if prefill_policy is None
+                              else prefill_policy.alpha),
             "batch": self.backend.batch,
-            "resident_bytes": engine.device_resident_bytes(),
-            "pinned_overhead_bytes": engine.pinned_overhead_bytes(),
+            "resident_bytes": self.backend.device_resident_bytes(),
+            "pinned_overhead_bytes": self.backend.pinned_overhead_bytes(),
         }
 
     def close(self):

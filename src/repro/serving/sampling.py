@@ -1,12 +1,32 @@
 """Token samplers: greedy / temperature / top-k / nucleus (top-p).
 
 All samplers are jit-safe pure functions (B, V) fp32 logits -> (B,) int32.
+
+Two generations of API live here:
+
+  * the original whole-batch samplers (``greedy`` / ``temperature_sample``
+    / ... / ``make_sampler(SamplerConfig)``) apply ONE sampler config to
+    every row — kept for the jitted scan-resident decode step, where
+    sampling fuses into the compiled loop;
+  * the request-level API (:class:`SamplingParams`, :func:`pack_sampling`,
+    :func:`sample_rows`) vectorizes the sampler *parameters* over rows:
+    each row carries its own kind/temperature/top-k/top-p and its own PRNG
+    key, so one decode batch can mix greedy and stochastic requests.
+
+Row independence is the load-bearing property of :func:`sample_rows`:
+every row's draw depends only on that row's logits and that row's key —
+never on its position in the batch or on the other rows.  Per-request
+keys (:func:`request_key` / :func:`step_key`) are derived from the
+request id and its generated-token count, so reordering or compacting
+the batch (the paged batcher drops finished slots) cannot renumber the
+stream a stochastic sampler draws from: paged and dense decode are
+token-identical, not merely identical in distribution.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Dict, Optional, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -65,3 +85,105 @@ def make_sampler(cfg: SamplerConfig):
         return lambda logits, key: topp_sample(logits, key, cfg.top_p,
                                                cfg.temperature)
     raise ValueError(f"unknown sampler {cfg.kind!r}")
+
+
+# ---------------------------------------------------------------------------
+# Request-level sampling: per-row parameters, per-request PRNG streams.
+# ---------------------------------------------------------------------------
+
+_KINDS = ("greedy", "temperature", "topk", "topp")
+_KIND_ID = {k: i for i, k in enumerate(_KINDS)}
+
+
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling parameters (the serving front door's unit).
+
+    ``top_k <= 0`` disables top-k truncation; ``top_p >= 1`` disables
+    nucleus truncation — both filters compose, so ``kind="topp"`` with a
+    positive ``top_k`` applies both.  ``seed`` pins the request's PRNG
+    stream; ``None`` derives it from the scheduler's base key and the
+    request id (:func:`request_key`).
+    """
+
+    kind: str = "greedy"        # greedy | temperature | topk | topp
+    temperature: float = 1.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: Optional[int] = None
+
+    def __post_init__(self):
+        if self.kind not in _KINDS:
+            raise ValueError(f"unknown sampler kind {self.kind!r}")
+
+    @classmethod
+    def from_config(cls, cfg: SamplerConfig,
+                    seed: Optional[int] = None) -> "SamplingParams":
+        """Lift a whole-batch :class:`SamplerConfig` to request level."""
+        return cls(kind=cfg.kind, temperature=cfg.temperature,
+                   top_k=cfg.top_k if cfg.kind == "topk" else 0,
+                   top_p=cfg.top_p if cfg.kind == "topp" else 1.0,
+                   seed=seed)
+
+
+def request_key(base_key: jax.Array, rid: int,
+                params: SamplingParams) -> jax.Array:
+    """The PRNG key owning one request's whole sampling stream."""
+    if params.seed is not None:
+        return jax.random.PRNGKey(params.seed)
+    return jax.random.fold_in(base_key, rid)
+
+
+def step_key(req_key: jax.Array, n_generated: int) -> jax.Array:
+    """Key for the request's ``n_generated``-th sampled token (0-based).
+
+    Indexing by the request's own token count — not by decode-step or
+    batch-row number — is what makes draws independent of scheduling.
+    """
+    return jax.random.fold_in(req_key, n_generated)
+
+
+def pack_sampling(params: Sequence[SamplingParams]) -> Dict[str, jax.Array]:
+    """Row-vectorize a list of per-request params into device arrays."""
+    return {
+        "kind": jnp.asarray([_KIND_ID[p.kind] for p in params], jnp.int32),
+        "temperature": jnp.asarray([p.temperature for p in params],
+                                   jnp.float32),
+        "top_k": jnp.asarray([p.top_k for p in params], jnp.int32),
+        "top_p": jnp.asarray([p.top_p for p in params], jnp.float32),
+    }
+
+
+def sample_rows(logits: jax.Array, keys: jax.Array,
+                packed: Dict[str, jax.Array]) -> jax.Array:
+    """Sample one token per row under per-row parameters.  Jit-safe.
+
+    ``logits``: (B, V) fp; ``keys``: (B, 2) uint32 stacked PRNG keys (one
+    per row — rows with ``kind="greedy"`` never consume theirs);
+    ``packed``: :func:`pack_sampling` output with (B,) leaves.
+
+    One descending sort per row serves every kind: top-k keeps the first
+    ``k`` sorted positions, top-p keeps the smallest prefix whose
+    cumulative mass reaches ``p`` (the crossing token included), and the
+    draw is a per-row categorical over the surviving sorted logits with
+    that row's own key.  Position 0 always survives, so the filters can
+    never empty a row.
+    """
+    logits = logits.astype(jnp.float32)
+    n_vocab = logits.shape[-1]
+    t = jnp.maximum(packed["temperature"], 1e-4)[:, None]
+    order = jnp.argsort(logits, axis=-1)[:, ::-1]
+    sorted_scaled = jnp.take_along_axis(logits / t, order, axis=-1)
+    probs = jax.nn.softmax(sorted_scaled, axis=-1)
+    pos = jnp.arange(n_vocab)[None, :]
+    k = packed["top_k"][:, None]
+    keep = jnp.where(k > 0, pos < k, True)
+    csum = jnp.cumsum(probs, axis=-1)
+    keep &= (csum - probs) < packed["top_p"][:, None]
+    keep = keep.at[:, 0].set(True)
+    masked = jnp.where(keep, sorted_scaled, -jnp.inf)
+    choice = jax.vmap(jax.random.categorical)(keys, masked)
+    sampled = jnp.take_along_axis(order, choice[:, None], axis=-1)[:, 0]
+    return jnp.where(packed["kind"] == _KIND_ID["greedy"],
+                     jnp.argmax(logits, axis=-1),
+                     sampled).astype(jnp.int32)

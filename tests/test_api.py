@@ -1,0 +1,370 @@
+"""The request-level serving front door (docs/SERVING.md): LLM facade,
+per-request SamplingParams, streaming, executor invariance, and the
+phase-aware placement plans behind the LinearBackend seam."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.api import LLM, GenRequest
+from repro.serving.backends import HeteGenBackend, ResidentBackend
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.sampling import (SamplingParams, greedy, pack_sampling,
+                                    sample_rows)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+@pytest.fixture(scope="module")
+def opt_setup():
+    cfg = reduced(get_config("opt-6.7b"), layers=2)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+# ---------------------------------------------------------------------------
+# row-vectorized sampling
+# ---------------------------------------------------------------------------
+
+def test_sample_rows_mixed_kinds_honored(rng):
+    """Every row obeys its own params: greedy/topk-1/tiny-topp rows equal
+    argmax while a hot temperature row actually explores, topk rows stay
+    inside their top-k set, topp rows inside their nucleus."""
+    logits = jnp.asarray(rng.standard_normal((5, 64)) * 2, jnp.float32)
+    packed = pack_sampling([
+        SamplingParams(),
+        SamplingParams(kind="topk", top_k=1),
+        SamplingParams(kind="topp", top_p=1e-6),
+        SamplingParams(kind="topk", top_k=5, temperature=3.0),
+        SamplingParams(kind="temperature", temperature=3.0),
+    ])
+    ref = np.asarray(greedy(logits))
+    top5 = set(np.asarray(jax.lax.top_k(logits[3], 5)[1]).tolist())
+    seen3, seen4 = set(), set()
+    for i in range(200):
+        keys = jnp.stack([jax.random.PRNGKey(1000 + 7 * i + r)
+                          for r in range(5)])
+        out = np.asarray(sample_rows(logits, keys, packed))
+        assert out[0] == ref[0] and out[1] == ref[1] and out[2] == ref[2]
+        assert out[3] in top5
+        seen3.add(int(out[3]))
+        seen4.add(int(out[4]))
+    assert len(seen3) > 1          # stochastic rows explore...
+    assert len(seen4) > len(seen3)  # ...and unrestricted explores more
+
+
+def test_sample_rows_row_independent(rng):
+    """A row's draw depends only on its own logits and key — the property
+    that makes paged compaction safe under stochastic sampling."""
+    logits = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
+    sp = [SamplingParams(kind="topp", top_p=0.8, temperature=1.5)] * 4
+    keys = jnp.stack([jax.random.PRNGKey(r) for r in (9, 1, 2, 3)])
+    a = sample_rows(logits, keys, pack_sampling(sp))
+    # same row 0 moved into a different batch, surrounded by other rows
+    shuffled = jnp.concatenate([logits[:1], logits[::-1][:2]])
+    b = sample_rows(shuffled, keys[:3], pack_sampling(sp[:3]))
+    assert int(a[0]) == int(b[0])
+
+
+# ---------------------------------------------------------------------------
+# per-request sampling in the batcher
+# ---------------------------------------------------------------------------
+
+def _run_batcher(cfg, params, reqs, *, max_slots=2, paged=False, seed=0):
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          own_backend=True, max_slots=max_slots,
+                          max_len=48, paged=paged, page_size=8, seed=seed)
+    rids = [b.submit(p, n, sampling=sp, rid=rid)
+            for rid, (p, n, sp) in enumerate(reqs)]
+    out = b.run_until_done()
+    b.close()
+    return [out[r] for r in rids]
+
+
+def test_mixed_samplers_one_batch_scheduling_invariant(setup, rng):
+    """Greedy and stochastic requests share one decode batch, and each
+    request's tokens are what it would have generated alone — per-request
+    params and PRNG streams are honored regardless of co-tenants."""
+    cfg, params = setup
+    p0 = list(rng.integers(0, cfg.vocab_size, 6))
+    p1 = list(rng.integers(0, cfg.vocab_size, 6))
+    sp1 = SamplingParams(kind="topp", top_p=0.95, temperature=2.0, seed=13)
+    mixed = _run_batcher(cfg, params, [(p0, 5, SamplingParams()),
+                                       (p1, 5, sp1)])
+    alone0 = _run_batcher(cfg, params, [(p0, 5, SamplingParams())])
+    # the stochastic request keeps rid 1 so its key derivation matches
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          own_backend=True, max_slots=2, max_len=48)
+    rid = b.submit(p1, 5, sampling=sp1, rid=1)
+    alone1 = b.run_until_done()[rid]
+    b.close()
+    assert mixed[0] == alone0[0]
+    assert mixed[1] == alone1
+
+
+def test_paged_dense_token_identical_stochastic(setup, rng):
+    """The PR-2 claim upgraded: with request-owned PRNG streams, paged
+    compaction (which renumbers rows) is invisible to stochastic
+    samplers — paged == dense token-for-token, not just in
+    distribution."""
+    cfg, params = setup
+    reqs = []
+    sps = [SamplingParams(kind="topp", top_p=0.9, temperature=1.3, seed=3),
+           SamplingParams(),
+           SamplingParams(kind="temperature", temperature=0.8),  # unseeded
+           SamplingParams(kind="topk", top_k=8, temperature=1.5, seed=4)]
+    for n, sp in zip((5, 9, 3, 7), sps):
+        reqs.append((list(rng.integers(0, cfg.vocab_size, n)), 6, sp))
+    dense = _run_batcher(cfg, params, reqs, seed=0)
+    paged = _run_batcher(cfg, params, reqs, paged=True, seed=0)
+    assert dense == paged
+
+
+# ---------------------------------------------------------------------------
+# the LLM facade
+# ---------------------------------------------------------------------------
+
+def test_facade_executor_selection_and_identity(setup, rng):
+    """Rectangular batches run one-shot, ragged/streamed work runs through
+    the batcher — and the executors are token-identical for the same
+    requests (greedy AND seeded stochastic)."""
+    cfg, params = setup
+    p = [list(rng.integers(0, cfg.vocab_size, 7)) for _ in range(3)]
+    sps = [SamplingParams(),
+           SamplingParams(kind="topp", top_p=0.9, temperature=1.5, seed=5),
+           SamplingParams(kind="topk", top_k=4, temperature=2.0, seed=6)]
+    with LLM(cfg, params, max_slots=2, max_len=64, seed=0) as llm:
+        one = llm.generate(p, max_new=5, sampling=sps)
+        assert llm.last_executor == "generator"
+    with LLM(cfg, params, max_slots=2, max_len=64, seed=0) as llm:
+        # same requests, staggered: forced through the batcher
+        rids = [llm.submit(pi, 5, sampling=sp) for pi, sp in zip(p, sps)]
+        outs = llm.drain()
+        assert llm.last_executor == "batcher"
+        for o, rid in zip(one, rids):
+            assert o.tokens == outs[rid].tokens
+
+
+def test_facade_ragged_goes_to_batcher(setup, rng):
+    cfg, params = setup
+    p = [list(rng.integers(0, cfg.vocab_size, n)) for n in (4, 9)]
+    with LLM(cfg, params, max_slots=2, max_len=64) as llm:
+        outs = llm.generate(p, max_new=4)
+        assert llm.last_executor == "batcher"
+        assert [len(o.tokens) for o in outs] == [4, 4]
+
+
+def test_facade_streaming_iterator_and_callback(setup, rng):
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 6))
+    with LLM(cfg, params, max_slots=2, max_len=32) as llm:
+        ref = llm.generate([p], max_new=5)[0]
+        streamed = list(llm.stream(p, max_new=5))
+        got = []
+        llm.submit(p, 5, on_token=got.append)
+        llm.drain()
+    assert streamed == ref.tokens
+    assert got == ref.tokens
+
+
+def test_facade_eos_and_finish_reason(setup, rng):
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 6))
+    with LLM(cfg, params, max_slots=2, max_len=32) as llm:
+        ref = llm.generate([p], max_new=5)[0]
+        eos = ref.tokens[1]
+        one = llm.generate([p], max_new=5, eos=eos)[0]
+        assert one.finish_reason == "eos"
+        assert one.tokens == ref.tokens[:ref.tokens.index(eos) + 1]
+        # batcher path stops at the same place
+        rid = llm.submit(p, 5, eos=eos)
+        out = llm.drain()[rid]
+        assert out.tokens == one.tokens
+        assert out.finish_reason == "eos"
+
+
+def test_facade_gen_request_objects(setup, rng):
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 5))
+    with LLM(cfg, params, max_slots=2, max_len=32) as llm:
+        outs = llm.generate([GenRequest(p, 4),
+                             GenRequest(p, 6)])   # ragged budgets
+        assert llm.last_executor == "batcher"
+        assert [len(o.tokens) for o in outs] == [4, 6]
+
+
+def test_facade_paged_offload(setup, rng):
+    """The full stack through one door: HeteGen backend + paged KV +
+    mixed samplers, identical to the resident dense facade."""
+    cfg, params = setup
+    p = [list(rng.integers(0, cfg.vocab_size, n)) for n in (5, 8, 3)]
+    sps = [SamplingParams(),
+           SamplingParams(kind="topp", top_p=0.9, seed=2),
+           SamplingParams(kind="temperature", temperature=0.7)]
+    with LLM(cfg, params, max_slots=2, max_len=32, seed=0) as ref_llm:
+        rids = [ref_llm.submit(pi, 4, sampling=sp)
+                for pi, sp in zip(p, sps)]
+        ref = ref_llm.drain()
+        ref_toks = [ref[r].tokens for r in rids]
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+    with LLM(cfg, backend=hb, own_backend=True, max_slots=2, max_len=32,
+             paged=True, page_size=8, seed=0) as llm:
+        rids = [llm.submit(pi, 4, sampling=sp) for pi, sp in zip(p, sps)]
+        outs = llm.drain()
+        assert [outs[r].tokens for r in rids] == ref_toks
+    assert hb.engines == {}        # facade closed the owned backend
+
+
+# ---------------------------------------------------------------------------
+# phase-aware placement plans
+# ---------------------------------------------------------------------------
+
+def test_phase_plans_prefill_alpha_exceeds_decode(opt_setup, rng):
+    """Paper §4.1 on a link-bound hw model: prefill is compute-bound so
+    its plan pushes the split toward the accelerator (alpha -> 1), while
+    the decode plan keeps the host GEMM busy.  The backend holds BOTH and
+    executes prefill/decode under different engine partitions."""
+    cfg, params = opt_setup
+    be = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                        batch=2, use_alpha_benchmark=False)
+    assert set(be.policies) == {"decode"}
+    cache = be.init_cache(2, 80)
+    prompt = jnp.asarray(rng.integers(0, cfg.vocab_size, (2, 64)),
+                         jnp.int32)
+    cache, logits = be.prefill({"tokens": prompt}, cache)
+    assert set(be.policies) == {"prefill", "decode"}
+    a_pre = be.policies["prefill"].alpha
+    a_dec = be.policies["decode"].alpha
+    assert a_pre > a_dec
+    # the policy prior IS the phase-aware law
+    from repro.core.alpha import alpha_for_phase
+    assert a_pre == pytest.approx(
+        alpha_for_phase(PAPER_A10, 2, "prefill", tokens_per_seq=64))
+    assert a_dec == pytest.approx(alpha_for_phase(PAPER_A10, 2, "decode"))
+    assert be.policies["prefill"].phase == "prefill"
+    assert be.policies["prefill"].tokens_per_seq == 64
+    assert be.policies["decode"].tokens_per_seq == 1
+    # the partitions are physically different: more device columns for
+    # the compute-bound prefill plan (tile quantization can pin the
+    # narrow attention linears to 0 columns at this smoke scale, so look
+    # across the whole inventory)
+    pre, dec = be.engines["prefill"], be.engines["decode"]
+    assert any(pre._dev_cols[n] > dec._dev_cols.get(n, 0)
+               for n in pre._dev_cols)
+    be.close()
+
+
+def test_phase_plan_hysteresis(opt_setup, rng):
+    """Prompt-length jitter must not rebuild the prefill partition; a
+    phase change in workload shape must."""
+    cfg, params = opt_setup
+    be = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                        batch=1, use_alpha_benchmark=False)
+    cache = be.init_cache(1, 300)
+    toks = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 64)), jnp.int32)
+    be.prefill({"tokens": toks}, cache)
+    plan = be.policies["prefill"]
+    # jitter inside the 2x hysteresis band: same plan object survives
+    cache2 = be.init_cache(1, 300)
+    be.prefill({"tokens": toks[:, :40]}, cache2)
+    assert be.policies["prefill"] is plan
+    # 4x the tokens: outside the band, plan rebuilt for higher intensity
+    cache3 = be.init_cache(1, 300)
+    big = jnp.asarray(rng.integers(0, cfg.vocab_size, (1, 256)), jnp.int32)
+    be.prefill({"tokens": big}, cache3)
+    assert be.policies["prefill"] is not plan
+    assert be.policies["prefill"].alpha >= plan.alpha
+    be.close()
+
+
+def test_phase_plans_do_not_change_tokens(opt_setup, rng):
+    """Plan swapping is a performance decision: offloaded generation with
+    per-phase partitions matches the resident path token-for-token."""
+    cfg, params = opt_setup
+    p = [list(rng.integers(0, cfg.vocab_size, 9)) for _ in range(2)]
+    with LLM(cfg, params, seed=0) as ref:
+        want = [o.tokens for o in ref.generate(p, max_new=5)]
+    be = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+    with LLM(cfg, backend=be, own_backend=True, seed=0) as llm:
+        got = [o.tokens for o in llm.generate(p, max_new=5)]
+        assert set(be.policies) == {"prefill", "decode"}
+    assert got == want
+
+
+def test_facade_drain_leaves_live_streams_alone(setup, rng):
+    """A drain() interleaved with a suspended stream() iterator must not
+    evict or report the stream's request — the iterator owns it."""
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 5))
+    with LLM(cfg, params, max_slots=2, max_len=32) as llm:
+        ref = llm.generate([p], max_new=4)[0]
+        it = llm.stream(p, max_new=4)
+        first = next(it)
+        drained = llm.drain()           # runs the stream's request to done
+        assert drained == {}            # ...but does not report it
+        rest = list(it)                 # iterator still delivers the rest
+        assert [first] + rest == ref.tokens
+        assert llm._batcher.requests == {}   # iterator evicted on finish
+        # submission is eager: a drain before the first next() already
+        # runs the request, and the iterator still delivers every token
+        it2 = llm.stream(p, max_new=4)
+        assert llm.drain() == {}
+        assert list(it2) == ref.tokens
+
+
+def test_facade_drain_reports_each_request_once(setup, rng):
+    """A long-lived facade must not re-report (or retain) old work:
+    every drain returns exactly the requests that finished since the
+    last report."""
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 5))
+    with LLM(cfg, params, max_slots=2, max_len=32) as llm:
+        r1 = llm.submit(p, 3)
+        assert set(llm.drain()) == {r1}
+        r2 = llm.submit(p, 3)
+        assert set(llm.drain()) == {r2}     # r1 not re-reported
+        assert llm._batcher.requests == {}  # books stay bounded
+
+
+def test_facade_stall_detection_on_page_exhaustion(setup, rng):
+    """A queued request that wants more pages than the whole pool holds
+    can never run: the facade raises instead of spinning forever."""
+    cfg, params = setup
+    small = list(rng.integers(0, cfg.vocab_size, 4))
+    huge = list(rng.integers(0, cfg.vocab_size, 20))
+    with LLM(cfg, params, paged=True, page_size=8, n_pages=4,
+             max_slots=2, max_len=64) as llm:
+        with pytest.raises(RuntimeError, match="stalled"):
+            # ragged batch -> batcher; the huge request needs 7 pages,
+            # the pool holds 3
+            llm.generate([GenRequest(small, 2), GenRequest(huge, 30)])
+    with LLM(cfg, params, paged=True, page_size=8, n_pages=4,
+             max_slots=2, max_len=64) as llm:
+        llm.submit(huge, 30)
+        with pytest.raises(RuntimeError, match="stalled"):
+            llm.drain()
+
+
+def test_batcher_close_owns_backend(setup):
+    cfg, params = setup
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+    with ContinuousBatcher(cfg, backend=hb, own_backend=True,
+                           max_slots=2, max_len=32) as b:
+        b.submit([1, 2, 3], 2)
+        b.run_until_done()
+    assert hb.engines == {}        # context exit closed the owned backend
+    # not-owned backends survive their batcher
+    hb2 = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+    with ContinuousBatcher(cfg, backend=hb2, max_slots=2, max_len=32) as b:
+        b.submit([1, 2, 3], 2)
+        b.run_until_done()
+    assert hb2.engines != {}
+    hb2.close()

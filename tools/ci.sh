@@ -42,6 +42,41 @@ print("offload smoke OK:", res["tokens"].tolist(),
       f"alpha={res['alpha']:.3f}")
 EOF
 
+echo "== smoke: LLM facade (resident + offload, streaming request) =="
+python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.api import LLM
+from repro.serving.backends import HeteGenBackend
+from repro.serving.sampling import SamplingParams
+
+cfg = get_config("tiny")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(0, cfg.vocab_size, 6)) for _ in range(2)]
+
+with LLM(cfg, params, max_slots=2, max_len=32, seed=0) as llm:
+    outs = llm.generate(prompts, max_new=3)
+    assert llm.last_executor == "generator", llm.last_executor
+    streamed = list(llm.stream(
+        prompts[0], max_new=3,
+        sampling=SamplingParams(kind="topp", top_p=0.9, seed=1)))
+    assert len(streamed) == 3, streamed
+
+be = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+with LLM(cfg, backend=be, own_backend=True, max_slots=2, max_len=32,
+         seed=0) as off:
+    got = off.generate(prompts, max_new=3)
+    assert [o.tokens for o in got] == [o.tokens for o in outs]
+    assert set(be.policies) == {"prefill", "decode"}, be.policies.keys()
+assert be.engines == {}, "facade close must tear down the owned backend"
+print("LLM facade smoke OK:", [o.tokens for o in outs], "stream:", streamed)
+EOF
+
 echo "== smoke: paged KV continuous batching over HeteGen (tiny config) =="
 python - <<'EOF'
 import jax
