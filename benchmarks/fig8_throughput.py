@@ -67,6 +67,7 @@ def run():
         assert agg > 2.0 * agg1
 
     rows += _facade_mixed_sampler_sweep()
+    rows += _policy_latency_sweep()
     return rows
 
 
@@ -118,4 +119,53 @@ def _facade_mixed_sampler_sweep():
                      alphas["decode"]))
         rows.append(("fig8.facade.hetegen_prefill_alpha",
                      alphas["prefill"]))
+    return rows
+
+
+def _policy_latency_sweep():
+    """Scheduler-policy latency, measured for real: a late high-priority
+    request lands on a busy, page-tight paged batcher.  Under ``fcfs`` it
+    waits for a tenant to finish; under ``priority`` it preempts one
+    (optimistic paging + swap resume) and completes in a fraction of the
+    steps — the FlexGen point that policy, not kernels, sets tail
+    latency."""
+    import jax
+    import numpy as np
+
+    from repro.configs import get_config
+    from repro.models import model as M
+    from repro.serving.backends import ResidentBackend
+    from repro.serving.batcher import ContinuousBatcher
+
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    prompts = [list(rng.integers(0, cfg.vocab_size, 6)) for _ in range(3)]
+
+    def hipri_latency(policy: str) -> int:
+        b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                              own_backend=True, max_slots=2, max_len=48,
+                              paged=True, page_size=8, n_pages=7,
+                              policy=policy)
+        for p in prompts[:2]:
+            b.submit(p, 24)
+        for _ in range(3):
+            b.step()
+        hi = b.submit(prompts[2], 4, priority=5)
+        steps = 0
+        while not b.requests[hi].done:
+            b.step()
+            steps += 1
+        b.run_until_done()
+        b.close()
+        return steps
+
+    rows = []
+    lat = {pol: hipri_latency(pol) for pol in ("fcfs", "priority")}
+    for pol, steps in lat.items():
+        rows.append((f"fig8.sched.{pol}.hipri_latency_steps", steps))
+    rows.append(("fig8.sched.priority_latency_speedup",
+                 lat["fcfs"] / max(lat["priority"], 1)))
+    # the claim the scheduler seam exists for: policy moves tail latency
+    assert lat["priority"] < lat["fcfs"]
     return rows

@@ -1,5 +1,6 @@
 """Quickstart: one serving front door — resident, HeteGen-offloaded,
-and streaming, all through :class:`repro.serving.api.LLM`.
+streaming, and the event-loop AsyncLLM, all through
+:mod:`repro.serving.api`.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +10,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.hw import PAPER_A10
 from repro.models import model as M
-from repro.serving.api import LLM
+from repro.serving.api import AsyncLLM, LLM
 from repro.serving.backends import HeteGenBackend
 from repro.serving.sampling import SamplingParams
 
@@ -36,6 +37,22 @@ def main():
             line.append(tok)
             print(f"  got {tok}", flush=True)
         print("streamed:", line)
+
+        print("\n-- logprobs (recorded straight out of the sampler) --")
+        rid = llm.submit(prompts[0], max_new=3,
+                         sampling=SamplingParams(logprobs=2))
+        out = llm.drain()[rid]
+        for e in out.logprobs:
+            alts = ", ".join(f"{t}:{lp:.2f}" for t, lp in e["top"].items())
+            print(f"  token {e['token']} logprob={e['logprob']:.3f} "
+                  f"(top: {alts})")
+
+    print("\n-- AsyncLLM (event loop owns the step() crank) --")
+    with AsyncLLM(cfg, params, policy="priority") as allm:
+        handle = allm.submit(prompts[1], max_new=8)      # runs in background
+        line = list(allm.stream(prompts[0], max_new=8))  # no step() anywhere
+        print("streamed async:", line)
+        print("background request:", handle.result().tokens)
 
     print("\n-- HeteGen offload (weights in host memory, alpha-split) --")
     backend = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0)

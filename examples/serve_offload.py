@@ -1,7 +1,11 @@
 """End-to-end serving driver (the paper's deployment): staggered
 requests with per-request sampling through the one front door
 (:class:`repro.serving.api.LLM`) — over resident weights AND over
-HeteGen-offloaded weights with phase-aware placement plans.
+HeteGen-offloaded weights with phase-aware placement plans, plus the
+scheduler seam under pressure: a page-tight pool where the ``priority``
+policy preempts (host-swap resume) and the event-loop
+:class:`repro.serving.api.AsyncLLM` drives everything with no manual
+``step()``.
 
     PYTHONPATH=src python examples/serve_offload.py [--requests 8]
 """
@@ -14,7 +18,7 @@ import numpy as np
 from repro.configs import get_config
 from repro.core.hw import PAPER_A10
 from repro.models import model as M
-from repro.serving.api import LLM
+from repro.serving.api import AsyncLLM, LLM
 from repro.serving.backends import HeteGenBackend
 from repro.serving.sampling import SamplingParams
 
@@ -71,6 +75,42 @@ def main():
     same = all(res_outs[r].tokens == off_outs[r].tokens for r in res_outs)
     print(f"offloaded == resident token-for-token (per-request PRNG "
           f"streams): {same}")
+
+    print("\n== scheduler under page pressure (priority policy) ==")
+    # a pool ~half the worst case: optimistic paging admits every tenant,
+    # the late high-priority arrival evicts one (host-swap resume), and
+    # the victim still finishes token-exactly
+    rng = np.random.default_rng(2)
+    with LLM(cfg, params, max_slots=2, max_len=96, paged=True,
+             page_size=16, n_pages=7, policy="priority") as sched_llm:
+        low = [sched_llm.submit(list(rng.integers(0, cfg.vocab_size, 12)),
+                                max_new=24) for _ in range(2)]
+        for _ in range(4):
+            sched_llm.step()           # tenants take their pages
+        hi = sched_llm.submit(list(rng.integers(0, cfg.vocab_size, 20)),
+                              max_new=8, priority=5)
+        budgets = {low[0]: 24, low[1]: 24, hi: 8}
+        done_order = []
+        while len(done_order) < len(budgets):
+            sched_llm.step()
+            done_order += [
+                r for r, n in budgets.items() if r not in done_order
+                and len(sched_llm.result(r).tokens) >= n]
+        sched_llm.drain()
+        sc = sched_llm.stats()["scheduler"]
+        print(f"finish order {done_order} (high-priority rid {hi} jumped "
+              f"{len(low)} tenants); preemptions={sc['preemptions']}")
+
+    print("\n== AsyncLLM: the event loop owns step() ==")
+    with AsyncLLM(cfg, params, max_slots=args.slots, max_len=96,
+                  policy="fair_share") as allm:
+        handles = [allm.submit(list(rng.integers(0, cfg.vocab_size, 12)),
+                               max_new=16) for _ in range(args.requests)]
+        toks = sum(len(h.result().tokens) for h in handles)
+        st = allm.stats()
+        print(f"{len(handles)} requests, {toks} tokens via "
+              f"{st['executor']} with no caller-driven step(): "
+              f"{st['tokens_per_s']:.1f} tok/s")
 
     print("\n== one-shot offloaded generation (requests arrive together) ==")
     rng = np.random.default_rng(1)

@@ -14,14 +14,22 @@ Every mode is flag parsing over ONE front door,
 
 The modes differ only in which backend is handed to the facade and
 whether requests arrive together (one-shot executor) or staggered
-(continuous batcher).  ``--paged`` swaps the batch modes to the paged KV
-cache; ``--sampler`` picks the per-request sampling (requests carry
-their own :class:`repro.serving.sampling.SamplingParams`, so paged and
-dense decode stay token-identical even stochastically); ``--stream``
+(continuous batcher).  Scheduling is two more flags over the same door:
+``--policy fcfs|priority|fair_share`` picks the admission/preemption
+policy (with ``priority``, request i carries priority ``i %% 2`` so the
+preemption path is actually exercised), ``--async`` serves through the
+event-loop :class:`repro.serving.api.AsyncLLM` (no caller-driven
+``step()``), and ``--n-pages`` shrinks the paged pool to provoke
+optimistic-paging preemption.  ``--paged`` swaps the batch modes to the
+paged KV cache; ``--sampler`` picks the per-request sampling (requests
+carry their own :class:`repro.serving.sampling.SamplingParams`, so paged
+and dense decode stay token-identical even stochastically); ``--stream``
 prints the first request's tokens as they decode.
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m \\
         --mode offload --budget-frac 0.25 --requests 4
+    PYTHONPATH=src python -m repro.launch.serve --mode batch --paged \\
+        --policy priority --n-pages 24 --async
 
 ``--dryrun`` lowers/compiles the serve step for an assigned architecture
 on the production mesh (delegates to :mod:`repro.launch.dryrun`).
@@ -46,6 +54,14 @@ def main() -> None:
     ap.add_argument("--paged", action="store_true",
                     help="paged KV cache for the batch modes")
     ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--policy", choices=("fcfs", "priority", "fair_share"),
+                    default="fcfs", help="scheduler admission/preemption "
+                    "policy for the batch modes")
+    ap.add_argument("--async", dest="use_async", action="store_true",
+                    help="serve through the event-loop AsyncLLM "
+                    "(no caller-driven step())")
+    ap.add_argument("--n-pages", type=int, default=None,
+                    help="shrink the paged pool to provoke preemption")
     ap.add_argument("--sampler", choices=("greedy", "temperature", "topk",
                                           "topp"), default="greedy")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -102,45 +118,67 @@ def main() -> None:
                                  batch=slots,
                                  budget_bytes=args.budget_frac * total)
 
-    with LLM(cfg, params, backend=backend, own_backend=True,
-             sampling=sampling, max_slots=slots,
-             max_len=args.prompt_len + args.max_new + 8,
-             paged=args.paged, page_size=args.page_size) as llm:
-        if args.stream:
-            toks = []
-            for tok in llm.stream(prompts[0], args.max_new):
-                toks.append(tok)
-                print(f"  stream> {tok}", flush=True)
-            prompts = prompts[1:]
+    llm_kw = dict(sampling=sampling, max_slots=slots,
+                  max_len=args.prompt_len + args.max_new + 8,
+                  paged=args.paged, page_size=args.page_size,
+                  n_pages=args.n_pages, policy=args.policy)
+    # give the priority policy something to schedule: alternate priorities
+    prio = (lambda i: i % 2) if args.policy == "priority" else (lambda i: 0)
 
-        if args.mode in ("resident", "offload"):
-            # requests arrive together: the facade runs them one-shot
-            outs = llm.generate(prompts, args.max_new) if prompts else []
-        else:
-            # staggered arrivals: continuous batching
-            for p in prompts:
-                llm.submit(p, args.max_new)
-            outs = list(llm.drain().values())
+    if args.use_async:
+        # the event loop owns the step() crank: submit/stream only
+        from repro.serving.api import AsyncLLM
+        with AsyncLLM(cfg, params, backend=backend, own_backend=True,
+                      **llm_kw) as allm:
+            if args.stream:
+                for tok in allm.stream(prompts[0], args.max_new):
+                    print(f"  stream> {tok}", flush=True)
+                prompts = prompts[1:]
+            handles = [allm.submit(p, args.max_new, priority=prio(i))
+                       for i, p in enumerate(prompts)]
+            outs = [h.result() for h in handles]
+            st = allm.stats()
+    else:
+        with LLM(cfg, params, backend=backend, own_backend=True,
+                 **llm_kw) as llm:
+            if args.stream:
+                for tok in llm.stream(prompts[0], args.max_new):
+                    print(f"  stream> {tok}", flush=True)
+                prompts = prompts[1:]
 
-        st = llm.stats()
-        total_toks = sum(len(o.tokens) for o in outs)
-        print(f"{len(outs)} requests, {total_toks} tokens "
-              f"via executor={st['executor']}, "
-              f"{st.get('tokens_per_s', 0.0):.1f} tok/s")
-        if "phase_alpha" in st:
-            al = st["phase_alpha"]
-            print("phase plans: " + "  ".join(
-                f"{ph}: alpha={a:.3f}" for ph, a in sorted(al.items())))
-            print(f"resident={st['resident_bytes']/1e6:.0f}MB")
-        if "stream" in st:
-            s = st["stream"]
-            print(f"stream busy (s): cpu={s.cpu:.3f} pin={s.pin:.3f} "
-                  f"trans={s.trans:.3f} dev={s.dev:.3f}")
-        if "paged" in st:
-            pg = st["paged"]
-            print(f"paged KV: page_size={pg['page_size']} "
-                  f"pool={pg['pool_pages']} pages, "
-                  f"{pg['mapped_pages']} still mapped")
+            if args.mode in ("resident", "offload"):
+                # requests arrive together: the facade runs them one-shot
+                outs = llm.generate(prompts, args.max_new) \
+                    if prompts else []
+            else:
+                # staggered arrivals: continuous batching
+                for i, p in enumerate(prompts):
+                    llm.submit(p, args.max_new, priority=prio(i))
+                outs = list(llm.drain().values())
+            st = llm.stats()
+
+    total_toks = sum(len(o.tokens) for o in outs)
+    print(f"{len(outs)} requests, {total_toks} tokens "
+          f"via executor={st['executor']}, "
+          f"{st.get('tokens_per_s', 0.0):.1f} tok/s")
+    if "scheduler" in st:
+        sc = st["scheduler"]
+        print(f"scheduler: policy={sc['policy']} "
+              f"preemptions={sc['preemptions']}")
+    if "phase_alpha" in st:
+        al = st["phase_alpha"]
+        print("phase plans: " + "  ".join(
+            f"{ph}: alpha={a:.3f}" for ph, a in sorted(al.items())))
+        print(f"resident={st['resident_bytes']/1e6:.0f}MB")
+    if "stream" in st:
+        s = st["stream"]
+        print(f"stream busy (s): cpu={s.cpu:.3f} pin={s.pin:.3f} "
+              f"trans={s.trans:.3f} dev={s.dev:.3f}")
+    if "paged" in st:
+        pg = st["paged"]
+        print(f"paged KV: page_size={pg['page_size']} "
+              f"pool={pg['pool_pages']} pages, "
+              f"{pg['mapped_pages']} still mapped")
 
 
 if __name__ == "__main__":

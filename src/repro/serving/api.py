@@ -42,12 +42,26 @@ plans between prefill and decode — drops in via ``backend=``.
 ``own_backend=True`` transfers backend lifetime to the facade;
 ``close()`` (or the context manager) tears down everything the facade
 owns.
+
+Scheduling is a facade-level knob (``policy="fcfs" | "priority" |
+"fair_share"``, ``optimistic=``, ``preempt_mode=`` — see
+:mod:`repro.serving.scheduler` and docs/SERVING.md): requests carry a
+``priority``, page pressure preempts and resumes them token-exactly, and
+``SamplingParams.logprobs`` records per-token log-probabilities in the
+:class:`RequestOutput`.
+
+:class:`AsyncLLM` is the event-loop front end over the same facade: a
+background thread owns the ``step()`` crank, ``submit`` returns an
+:class:`AsyncRequest` handle (awaitable-style ``result()`` + token
+iterator), and ``stream()`` yields with no caller-driven stepping.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import itertools
+import queue
+import threading
 import time
 from typing import Callable, Dict, Iterator, List, Optional, Sequence, Union
 
@@ -59,6 +73,7 @@ from repro.models.config import ModelConfig
 from repro.serving.batcher import ContinuousBatcher
 from repro.serving.engine import Generator
 from repro.serving.sampling import SamplingParams, request_key
+from repro.serving.scheduler import SchedulerPolicy
 
 Prompt = Sequence[int]
 
@@ -73,6 +88,7 @@ class GenRequest:
     sampling: SamplingParams = SamplingParams()
     stream: Optional[Callable[[int], None]] = None   # per-token callback
     rid: Optional[int] = None                        # assigned by the LLM
+    priority: int = 0           # larger = more important (priority policy)
 
 
 @dataclasses.dataclass
@@ -83,6 +99,9 @@ class RequestOutput:
     prompt: List[int]
     tokens: List[int]
     finish_reason: str          # "length" | "eos"
+    # one entry per token when SamplingParams.logprobs was set:
+    # {"token": id, "logprob": float, "top": {id: logprob, ...}}
+    logprobs: Optional[List[Dict]] = None
 
 
 def _finish_reason(tokens: List[int], eos: Optional[int]) -> str:
@@ -108,6 +127,9 @@ class LLM:
                  n_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
                  retune_hysteresis: Optional[int] = None,
+                 policy: Union[str, SchedulerPolicy, None] = "fcfs",
+                 optimistic: bool = True,
+                 preempt_mode: Optional[str] = None,
                  seed: int = 0):
         if backend is None and params is None:
             raise ValueError("LLM needs params or a backend")
@@ -131,6 +153,9 @@ class LLM:
         self.n_pages = n_pages
         self.kv_dtype = kv_dtype
         self.retune_hysteresis = retune_hysteresis
+        self.policy = policy
+        self.optimistic = optimistic
+        self.preempt_mode = preempt_mode
         self.seed = seed
         self._base_key = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
@@ -150,7 +175,9 @@ class LLM:
                       seed=self.seed, paged=self.paged,
                       page_size=self.page_size, n_pages=self.n_pages,
                       kv_dtype=self.kv_dtype,
-                      retune_hysteresis=self.retune_hysteresis)
+                      retune_hysteresis=self.retune_hysteresis,
+                      policy=self.policy, optimistic=self.optimistic,
+                      preempt_mode=self.preempt_mode)
             if self._backend is None:
                 self._batcher = ContinuousBatcher(self.cfg, self._params,
                                                   **kw)
@@ -217,7 +244,9 @@ class LLM:
             self._batcher.queue or self._batcher.active.any())
         rect = (len({len(r.prompt) for r in reqs}) == 1
                 and len({r.max_new for r in reqs}) == 1
-                and not any(r.stream for r in reqs))
+                and not any(r.stream for r in reqs)
+                # logprob extraction rides the batcher's sampler
+                and not any(r.sampling.logprobs is not None for r in reqs))
         if rect and not busy:
             return self._generate_oneshot(reqs)
         return self._generate_batched(reqs)
@@ -265,13 +294,18 @@ class LLM:
                max_new: Optional[int] = None, *,
                eos: Optional[int] = None,
                sampling: Optional[SamplingParams] = None,
+               priority: Optional[int] = None,
                on_token: Optional[Callable[[int], None]] = None) -> int:
         """Queue one request on the continuous batcher; returns its id.
 
         ``on_token`` (or ``GenRequest.stream``) is called with each new
-        token as scheduler steps deliver it.
+        token as scheduler steps deliver it.  ``priority`` matters to
+        priority-aware scheduler policies (docs/SERVING.md); when given
+        it overrides a ``GenRequest``'s own priority (0 included).
         """
         req = self._as_requests(prompt, max_new, eos, sampling)[0]
+        if priority is not None:
+            req.priority = priority
         return self._submit_req(req, on_token)
 
     def _submit_req(self, req: GenRequest,
@@ -279,7 +313,8 @@ class LLM:
                     ) -> int:
         b = self._ensure_batcher()
         b.submit(req.prompt, req.max_new, req.eos,
-                 sampling=req.sampling, rid=req.rid)
+                 sampling=req.sampling, rid=req.rid,
+                 priority=req.priority)
         self._delivered[req.rid] = 0
         cb = on_token or req.stream
         if cb is not None:
@@ -376,7 +411,9 @@ class LLM:
         """Output of a batcher-scheduled request (complete or partial)."""
         req = self._ensure_batcher().requests[rid]
         return RequestOutput(req.rid, req.prompt, list(req.generated),
-                             _finish_reason(req.generated, req.eos))
+                             _finish_reason(req.generated, req.eos),
+                             logprobs=None if req.logprobs is None
+                             else list(req.logprobs))
 
     def _take_result(self, rid: int) -> RequestOutput:
         """result() + eviction: finished requests leave the scheduler's
@@ -422,6 +459,17 @@ class LLM:
             st["stream"] = be.finish_stats()
         if self._batcher is not None:
             st["retunes"] = self._batcher.retunes
+            sched = self._batcher.scheduler
+            st["scheduler"] = {"policy": sched.policy.name,
+                               "preemptions": sched.preemptions,
+                               "waiting": len(sched.waiting),
+                               "preempted": len(sched.preempted),
+                               # the current queue's worst holdup — the
+                               # starvation signal a fairness/aging
+                               # policy keys off
+                               "max_wait_steps": max(
+                                   (s.wait_steps for s in sched.pending),
+                                   default=0)}
             kv = self._batcher.kv
             if kv is not None:
                 st["paged"] = {"page_size": kv.page_size,
@@ -441,6 +489,247 @@ class LLM:
             self._backend.close()
 
     def __enter__(self) -> "LLM":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+
+# ---------------------------------------------------------------------------
+# AsyncLLM: the event-loop front end
+# ---------------------------------------------------------------------------
+
+_CLOSED = object()          # queue sentinel: no more tokens
+
+
+class AsyncRequest:
+    """Handle for a request submitted to :class:`AsyncLLM`.
+
+    Iterate it to stream tokens as the background loop decodes them
+    (blocking only while the next token is genuinely not ready), or call
+    :meth:`result` to wait for the finished :class:`RequestOutput`.  Both
+    are safe from any thread; the handle outlives the request inside the
+    engine (tokens already queued keep flowing after completion)."""
+
+    def __init__(self, rid: int):
+        self.rid = rid
+        self._q: "queue.Queue" = queue.Queue()
+        self._done = threading.Event()
+        self._output: Optional[RequestOutput] = None
+        self._error: Optional[BaseException] = None
+
+    # called by the AsyncLLM loop thread
+    def _push(self, tok: int) -> None:
+        self._q.put(tok)
+
+    def _finish(self, output: Optional[RequestOutput] = None,
+                error: Optional[BaseException] = None) -> None:
+        self._output, self._error = output, error
+        self._done.set()
+        self._q.put(_CLOSED)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> RequestOutput:
+        """Block until the request finished; the awaitable-style surface.
+
+        Raises the loop's failure (scheduler stall, closed mid-flight)
+        instead of returning a partial output."""
+        if not self._done.wait(timeout):
+            raise TimeoutError(f"request {self.rid} still in flight")
+        if self._error is not None:
+            raise self._error
+        return self._output
+
+    def __iter__(self) -> Iterator[int]:
+        while True:
+            item = self._q.get()
+            if item is _CLOSED:
+                # keep the sentinel so a second iteration terminates too
+                self._q.put(_CLOSED)
+                if self._error is not None:
+                    raise self._error
+                return
+            yield item
+
+
+class AsyncLLM:
+    """Event-loop serving: a background thread drives the scheduler.
+
+    The synchronous :class:`LLM` only makes progress when the caller
+    hand-cranks ``step()``; this front end owns that crank.  ``submit``
+    returns an :class:`AsyncRequest` immediately and the loop thread
+    steps the scheduler whenever requests are in flight — ``stream()``
+    yields tokens with no caller-driven stepping, ``result()`` blocks
+    like an awaitable, and many threads can submit/consume concurrently
+    (the facade is guarded by one lock; decode steps batch work from
+    every submitter).
+
+        with AsyncLLM(cfg, params, policy="priority") as allm:
+            hi = allm.submit(p1, max_new=32, priority=5)
+            for tok in allm.stream(p2, max_new=64):   # no step() anywhere
+                ...
+            out = hi.result()
+
+    Construction forwards every keyword to :class:`LLM` (policies, paged
+    KV, backends, ...), or wraps an existing facade via ``llm=`` —
+    ``close()`` tears down whatever it built.  ``close(drain=True)`` (the
+    default) finishes in-flight requests first; ``close(drain=False)``
+    abandons them, failing their handles with a ``RuntimeError``.  A
+    scheduler failure (e.g. a stalled page pool) fails every in-flight
+    handle and surfaces on the next ``submit``."""
+
+    def __init__(self, cfg: Optional[ModelConfig] = None,
+                 params: Optional[Dict] = None, *,
+                 llm: Optional[LLM] = None, **llm_kwargs):
+        if llm is None:
+            llm = LLM(cfg, params, **llm_kwargs)
+            self._own_llm = True
+        else:
+            if llm_kwargs or cfg is not None or params is not None:
+                raise ValueError("pass either llm= or LLM constructor "
+                                 "arguments, not both")
+            self._own_llm = False
+        self._llm = llm
+        self._lock = threading.RLock()
+        self._work = threading.Condition(self._lock)
+        self._handles: Dict[int, AsyncRequest] = {}
+        self._closed = False
+        self._failure: Optional[BaseException] = None
+        self._busy_s = 0.0          # loop seconds spent inside step()
+        self._tokens_done = 0       # tokens of finished requests
+        self._thread = threading.Thread(target=self._loop,
+                                        name="asyncllm-step", daemon=True)
+        self._thread.start()
+
+    # -- submission -----------------------------------------------------
+    def _register(self, req: GenRequest) -> AsyncRequest:
+        if self._closed:
+            raise RuntimeError("AsyncLLM is closed")
+        if self._failure is not None:
+            raise RuntimeError("AsyncLLM loop failed") from self._failure
+        h = AsyncRequest(-1)
+        if req.stream is None:
+            on_tok = h._push
+        else:
+            # the GenRequest's own per-token callback keeps firing (from
+            # the loop thread) alongside the handle's queue
+            def on_tok(tok, _user=req.stream, _push=h._push):
+                _user(tok)
+                _push(tok)
+        h.rid = self._llm._submit_req(req, on_token=on_tok)
+        self._handles[h.rid] = h
+        return h
+
+    def submit(self, prompt: Union[Prompt, GenRequest],
+               max_new: Optional[int] = None, *,
+               eos: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               priority: Optional[int] = None) -> AsyncRequest:
+        """Queue one request; returns its handle immediately.  The
+        background loop wakes and decodes without further calls."""
+        with self._work:
+            req = self._llm._as_requests(prompt, max_new, eos, sampling)[0]
+            if priority is not None:
+                req.priority = priority
+            h = self._register(req)
+            self._work.notify_all()
+        return h
+
+    def stream(self, prompt: Union[Prompt, GenRequest],
+               max_new: Optional[int] = None, *,
+               eos: Optional[int] = None,
+               sampling: Optional[SamplingParams] = None,
+               priority: Optional[int] = None) -> Iterator[int]:
+        """Submit and iterate tokens as the loop decodes them."""
+        return iter(self.submit(prompt, max_new, eos=eos, sampling=sampling,
+                                priority=priority))
+
+    def generate(self,
+                 prompts: Union[Prompt, Sequence[Prompt],
+                                Sequence[GenRequest]],
+                 max_new: Optional[int] = None, *,
+                 eos: Optional[int] = None,
+                 sampling: Union[SamplingParams,
+                                 Sequence[SamplingParams], None] = None,
+                 timeout: Optional[float] = None) -> List[RequestOutput]:
+        """Blocking batch convenience over the event loop."""
+        with self._work:
+            reqs = self._llm._as_requests(prompts, max_new, eos, sampling)
+            handles = [self._register(r) for r in reqs]
+            self._work.notify_all()
+        return [h.result(timeout) for h in handles]
+
+    # -- the loop -------------------------------------------------------
+    def _loop(self) -> None:
+        while True:
+            with self._work:
+                while not self._handles and not self._closed:
+                    self._work.wait()
+                if not self._handles:          # closed and drained
+                    return
+                t0 = time.perf_counter()
+                try:
+                    self._llm._step_or_stall()
+                except BaseException as e:     # stall, backend death, ...
+                    self._failure = e
+                    for h in self._handles.values():
+                        h._finish(error=e)
+                    self._handles.clear()
+                    continue
+                self._busy_s += time.perf_counter() - t0
+                b = self._llm._batcher
+                fin = [rid for rid in self._handles
+                       if rid in b.requests and b.requests[rid].done]
+                for rid in fin:
+                    out = self._llm._take_result(rid)
+                    self._tokens_done += len(out.tokens)
+                    self._handles.pop(rid)._finish(output=out)
+
+    # -- introspection / lifecycle -------------------------------------
+    @property
+    def llm(self) -> LLM:
+        return self._llm
+
+    def stats(self) -> Dict:
+        with self._lock:
+            st = self._llm.stats()
+            st["in_flight"] = len(self._handles)
+            if self._busy_s > 0:
+                # the loop thread owns the crank, so the facade's
+                # per-drain metrics never fire — report the loop's own
+                st["executor"] = "batcher(async)"
+                st["tokens_per_s"] = self._tokens_done / self._busy_s
+            return st
+
+    def close(self, drain: bool = True,
+              timeout: Optional[float] = None) -> None:
+        """Stop the loop (idempotent).  ``drain=True`` lets in-flight
+        requests finish first; ``drain=False`` abandons them — their
+        handles raise ``RuntimeError`` from ``result()``/iteration.
+        With a ``timeout``, raises ``TimeoutError`` if the drain did not
+        finish in time — and leaves the backend open rather than tearing
+        it down under the still-stepping loop thread."""
+        with self._work:
+            if not drain and self._handles:
+                err = RuntimeError(
+                    "AsyncLLM closed with requests in flight")
+                for h in self._handles.values():
+                    h._finish(error=err)
+                self._handles.clear()
+            self._closed = True
+            self._work.notify_all()
+        self._thread.join(timeout)
+        if self._thread.is_alive():
+            raise TimeoutError(
+                "AsyncLLM close timed out with requests still draining; "
+                "retry close() or close(drain=False)")
+        if self._own_llm:
+            self._llm.close()
+
+    def __enter__(self) -> "AsyncLLM":
         return self
 
     def __exit__(self, *exc) -> None:

@@ -55,7 +55,10 @@ class LinearBackend(Protocol):
     planning backend may execute them under different plans.  Backends
     that re-plan expose ``retune(batch, phase=..., tokens_per_seq=...)``;
     schedulers probe for it with ``hasattr`` (resident backends don't
-    plan, so it is not part of the required protocol).
+    plan, so it is not part of the required protocol).  Backends with a
+    staging pipeline may likewise expose ``prefetch_next_step()`` — the
+    executor calls it between a decode step's math and its host-side
+    sampling so step N+1's weight pins overlap step N's tail.
     """
 
     cache_batch_axis: int
@@ -273,6 +276,7 @@ class HeteGenBackend:
         self._resident_store: Dict[str, jax.Array] = {}
         self._stats_tally = StreamStats()   # closed engines' busy seconds
         self._phase = "decode"
+        self.step_prefetches = 0            # cross-step prefetch nudges
         self.retune(batch)
 
     # -- phase/batch-aware planning ------------------------------------
@@ -380,6 +384,26 @@ class HeteGenBackend:
                ) -> Tuple[Dict, jax.Array]:
         return M.backend_decode(self.cfg, self.shared, token, cache,
                                 linear=self.linear, ops=self._ops)
+
+    def prefetch_next_step(self) -> None:
+        """Drive step N+1's pins while step N's host tail drains.
+
+        The engine's wrap-around prefetch order already points the last
+        module of a decode step at the first module of the next one
+        (:func:`repro.core.param_manager.plan_prefetch_order`), but that
+        wrap prefetch is issued while the last module's own slot is still
+        staged — when the ring is full it silently loses.  The scheduler
+        calls this between a decode step's math and its host-side
+        sampling/bookkeeping: by then every slot has been released, so
+        re-issuing the first-of-each-group prefetch is guaranteed to
+        land, and the pin thread stages the next step concurrently with
+        sampling (ROADMAP decode-overlap item).  Idempotent and
+        non-blocking — modules already staged are left alone.
+        """
+        eng = self.engines.get("decode")
+        if eng is not None:
+            eng.warm_prefetch()
+            self.step_prefetches += 1
 
     # -- stats over all phase engines ----------------------------------
     def reset_stats(self) -> None:

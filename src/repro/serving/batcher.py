@@ -1,48 +1,54 @@
-"""Continuous batching: slot-based request scheduling over a shared cache.
+"""Continuous batching: a pure executor under a pluggable scheduler.
 
 Requests join/leave a fixed pool of ``max_slots`` decode slots without
-stopping the batch:
+stopping the batch.  *Who* occupies those slots is no longer this
+module's business: every admit/preempt/resume decision lives in
+:class:`repro.serving.scheduler.Scheduler` behind the
+:class:`repro.serving.scheduler.SchedulerPolicy` seam (``fcfs`` /
+``priority`` / ``fair_share``), and the batcher merely applies the
+scheduler's per-step :class:`repro.serving.scheduler.StepPlan`:
 
-  * a new request is prefilled alone (batch-1) and its KV written into a
-    free slot of the global cache;
-  * every ``step()`` advances all active slots by one token (inactive
-    slots decode garbage that is masked out — the standard static-shape
-    TPU pattern);
-  * finished requests (max_new reached / eos) free their slot immediately.
+  * **preempt** — save the victim's KV pages to host memory (swap mode)
+    and clear its slot;
+  * **start** — restore saved pages (swap resume) or prefill
+    ``prompt + generated`` through a batch-1 view (fresh admissions and
+    recompute resumes are literally the same code path — a fresh request
+    just has no ``generated`` yet);
+  * **decode** — advance every active slot one token (inactive slots in
+    dense mode decode garbage that is masked out — the standard
+    static-shape TPU pattern; paged mode *compacts* to the active
+    block-table rows instead).
 
 Per-slot sequence lengths are first-class: the model's decode path accepts
 a vector ``len`` and scatters each slot's new K/V at its own position.
 
 The batcher schedules over any :mod:`repro.serving.backends` driver: the
-default is the jitted scan-stacked resident path (today's behavior), but
-``backend=HeteGenBackend(...)`` runs the SAME slot admit/release logic
-over HeteGen-offloaded weights — continuous batching over host-resident
-parameters, with the placement plan tuned for the decode batch
-(= ``max_slots``).  Supported for the dense/moe/vlm transformer families
-(per-slot state for SSM trunks would need per-slot state snapshots; see
-docs/SERVING.md).
+default is the jitted scan-stacked resident path, but
+``backend=HeteGenBackend(...)`` runs the SAME executor over
+HeteGen-offloaded weights.  Between a decode step's math and its host-side
+sampling/bookkeeping the executor nudges the offload engine's pinned ring
+(``backend.prefetch_next_step()``): the ring's wrap-around prefetch order
+already points the last module of step N at the first module of step N+1,
+so the nudge retries any wrap prefetch that found the ring full — step
+N+1's pins run while step N's host work drains (ROADMAP perf item).
 
 Sampling is **per request** (docs/SERVING.md): each submit may carry its
 own :class:`repro.serving.sampling.SamplingParams`, rows of one decode
 batch are sampled under their own parameters (row-vectorized sampler),
 and every request owns a PRNG stream keyed by its id and generated-token
-count — never by batch-row number.  Paged compaction can therefore
-renumber rows freely: paged and dense decode are token-identical even
-under stochastic sampling.
+count — never by batch-row number.  Scheduling (compaction, preemption,
+resume) therefore cannot perturb tokens: paged and dense, pressured and
+unpressured runs are token-identical.  ``SamplingParams.logprobs``
+additionally records each sampled token's log-probability (and top-k
+alternatives) straight out of the sampler's existing sort.
 
 ``paged=True`` swaps the dense per-layer cache for the
-:class:`repro.serving.kv_cache.PagedKVCache` subsystem: admission *maps*
-pages for the request and prefill scatters its KV straight into them
-through a batch-1 block-table view; release *unmaps* them back to the
-free list.  No whole-cache slice is ever copied in or out of the global
-cache, and when the pool runs dry requests simply stay queued until a
-finishing request returns pages.  Decode attends through the paged
-flash-decode kernel (block-table gather on TPU, jnp gather oracle here)
-and *compacts* to the active slots: the pools are global, so selecting
-the active block-table rows shrinks the decode batch to the real
-occupancy instead of computing masked garbage in empty slots.
-``kv_dtype="int8"`` stores q8 pages (int8 + scale pools) for half the
-cache footprint.
+:class:`repro.serving.kv_cache.PagedKVCache` subsystem; with
+``optimistic=True`` (the default) admission maps only the prompt's pages
+and the scheduler grows each running slot one decode position per step,
+so page pressure triggers policy-driven preemption instead of
+head-of-queue blocking (``optimistic=False`` restores the classic
+``prompt + max_new`` reservation).  ``kv_dtype="int8"`` stores q8 pages.
 
 ``retune_hysteresis`` (with a retune-capable backend, i.e. HeteGen)
 re-tunes the decode placement plan when the *executed* decode batch
@@ -50,11 +56,7 @@ drifts from the planned batch by more than the hysteresis margin —
 §4.1's cost model shifts alpha with compute intensity, but rebuilding
 the engine every time one request finishes would thrash; the margin
 makes retunes sticky.  Only paged mode executes occupancy-sized batches
-(compaction), so only paged mode ever re-tunes; the dense cache always
-runs ``max_slots``-wide and its plan correctly stays put.  The *prefill*
-plan is phase-tuned inside the backend itself from observed prompt
-shapes, with its own multiplicative hysteresis — the two phases re-tune
-independently.
+(compaction), so only paged mode ever re-tunes.
 
 The batcher owns backend lifetime when it constructed the backend (or
 when handed one with ``own_backend=True``): ``close()`` — or leaving the
@@ -63,9 +65,8 @@ when handed one with ``own_backend=True``): ``close()`` — or leaving the
 
 from __future__ import annotations
 
-import dataclasses
 import itertools
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Union
 
 import jax
 import jax.numpy as jnp
@@ -73,23 +74,15 @@ import numpy as np
 
 from repro.models.config import ModelConfig
 from repro.serving.backends import ScanResidentBackend
-from repro.serving.kv_cache import PagesExhausted, slot_view
+from repro.serving.kv_cache import slot_view
 from repro.serving.sampling import (SamplerConfig, SamplingParams, greedy,
                                     pack_sampling, request_key, sample_rows,
                                     step_key)
+from repro.serving.scheduler import (RequestState, Scheduler,
+                                     SchedulerPolicy)
 
-
-@dataclasses.dataclass
-class Request:
-    rid: int
-    prompt: List[int]
-    max_new: int
-    eos: Optional[int] = None
-    sampling: SamplingParams = SamplingParams()
-    key: Optional[jax.Array] = None     # request-owned PRNG stream
-    generated: List[int] = dataclasses.field(default_factory=list)
-    done: bool = False
-    slot: Optional[int] = None
+# back-compat: PR 3 exposed the queue entry as batcher.Request
+Request = RequestState
 
 
 class ContinuousBatcher:
@@ -100,7 +93,10 @@ class ContinuousBatcher:
                  n_pages: Optional[int] = None,
                  kv_dtype: Optional[str] = None,
                  retune_hysteresis: Optional[int] = None,
-                 own_backend: Optional[bool] = None):
+                 own_backend: Optional[bool] = None,
+                 policy: Union[str, SchedulerPolicy, None] = "fcfs",
+                 optimistic: bool = True,
+                 preempt_mode: Optional[str] = None):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
@@ -129,14 +125,15 @@ class ContinuousBatcher:
             self.cache = self.kv.init_cache()
         else:
             self.cache = self.backend.init_cache(max_slots, max_len)
+        # the decision seam: admission order, preemption victims, page
+        # growth — everything except device work (docs/SERVING.md)
+        self.scheduler = Scheduler(policy, max_slots, max_len, kv=self.kv,
+                                   optimistic=optimistic,
+                                   preempt_mode=preempt_mode)
         # per-slot lengths (vector 'len' drives per-slot scatter updates)
         self.cache["len"] = jnp.zeros((max_slots,), jnp.int32)
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
-        self.active = np.zeros((max_slots,), bool)
-        self.slot_req: List[Optional[Request]] = [None] * max_slots
-        self.requests: Dict[int, Request] = {}
         self._ids = itertools.count()
-        self.queue: List[Request] = []
         self.retune_hysteresis = retune_hysteresis
         self._plan_batch = max_slots
         self.retunes = 0
@@ -145,26 +142,42 @@ class ContinuousBatcher:
         # does (admit/release), not every step — cache the device arrays
         self._pack_sig: Optional[tuple] = None
         self._packed = None
+        self._packed_lp: Optional[int] = None
+
+    # -- scheduler views the facade and tests read ----------------------
+    @property
+    def requests(self) -> Dict[int, RequestState]:
+        return self.scheduler.requests
+
+    @property
+    def queue(self) -> List[RequestState]:
+        """Everything still wanting a slot (waiting + preempted)."""
+        return self.scheduler.pending
+
+    @property
+    def active(self) -> np.ndarray:
+        return self.scheduler.active_mask()
+
+    @property
+    def policy(self) -> SchedulerPolicy:
+        return self.scheduler.policy
 
     # ------------------------------------------------------------------
     def submit(self, prompt: List[int], max_new: int,
                eos: Optional[int] = None, *,
                sampling: Optional[SamplingParams] = None,
-               rid: Optional[int] = None) -> int:
+               rid: Optional[int] = None,
+               priority: int = 0) -> int:
         """Queue a request.  ``sampling`` defaults to the batcher-wide
-        config; ``rid`` lets an owning scheduler keep one id space."""
+        config; ``rid`` lets an owning facade keep one id space;
+        ``priority`` matters to priority-aware scheduler policies."""
         rid = next(self._ids) if rid is None else rid
-        if rid in self.requests:
-            raise ValueError(f"duplicate request id {rid}")
         sp = self.default_sampling if sampling is None else sampling
-        req = Request(rid, list(prompt), max_new, eos, sampling=sp,
-                      key=request_key(self._base_key, rid, sp))
-        self.requests[rid] = req
-        self.queue.append(req)
+        st = RequestState(rid, list(prompt), max_new, eos, sampling=sp,
+                          key=request_key(self._base_key, rid, sp),
+                          priority=priority)
+        self.scheduler.submit(st)
         return rid
-
-    def _free_slots(self) -> List[int]:
-        return [i for i in range(self.max_slots) if not self.active[i]]
 
     def _sample_slot_rows(self, logits: jax.Array,
                           slots: List[int]) -> jax.Array:
@@ -172,58 +185,94 @@ class ContinuousBatcher:
         ``slots[i]``.  Each occupied slot draws under its request's own
         params with the key for its next token; vacant rows (the dense
         path's masked garbage) sample greedily with a dead key, so they
-        consume no entropy and cannot perturb real requests."""
+        consume no entropy and cannot perturb real requests.  Rows whose
+        request asked for logprobs get their per-token record appended
+        here, straight out of the sampler's existing sort."""
+        slot_req = self.scheduler.slot_req
         params, keys = [], []
         for s in slots:
-            req = self.slot_req[s]
+            req = slot_req[s]
             if req is None:
                 params.append(SamplingParams())
                 keys.append(jnp.zeros((2,), jnp.uint32))
             else:
                 params.append(req.sampling)
                 keys.append(step_key(req.key, len(req.generated)))
-        if all(p.kind == "greedy" for p in params):
+        lp_k = [p.logprobs for p in params if p.logprobs is not None]
+        if not lp_k and all(p.kind == "greedy" for p in params):
             # the default serving config: skip the full-vocab sort the
             # mixed-kind sampler needs (greedy rows never draw entropy,
             # so this is exactly equivalent)
             return greedy(logits)
-        sig = tuple((s, -1 if self.slot_req[s] is None
-                     else self.slot_req[s].rid) for s in slots)
+        sig = tuple((s, -1 if slot_req[s] is None else slot_req[s].rid)
+                    for s in slots)
         if sig != self._pack_sig:
             self._pack_sig = sig
             self._packed = pack_sampling(params)
-        return sample_rows(logits, jnp.stack(keys), self._packed)
+            self._packed_lp = max(lp_k) if lp_k else None
+        if self._packed_lp is None:
+            return sample_rows(logits, jnp.stack(keys), self._packed)
+        toks, lp = sample_rows(logits, jnp.stack(keys), self._packed,
+                               top_logprobs=self._packed_lp)
+        chosen = np.asarray(lp["logprob"])
+        top_ids = np.asarray(lp["top_tokens"])
+        top_lp = np.asarray(lp["top_logprobs"])
+        for i, s in enumerate(slots):
+            req = slot_req[s]
+            if req is None or req.sampling.logprobs is None:
+                continue
+            k = req.sampling.logprobs
+            req.logprobs.append({
+                "token": int(toks[i]),
+                "logprob": float(chosen[i]),
+                "top": {int(t): float(l)
+                        for t, l in zip(top_ids[i, :k], top_lp[i, :k])},
+            })
+        return toks
 
-    def _admit(self) -> None:
-        for slot in self._free_slots():
-            if not self.queue:
-                break
-            if self.paged:
-                # map pages for the whole request up front (prompt +
-                # generated tokens) — all-or-nothing, so when the pool is
-                # dry the request stays queued (FIFO) until a finishing
-                # request unmaps pages
-                need = min(len(self.queue[0].prompt)
-                           + self.queue[0].max_new, self.max_len)
-                try:
-                    self.kv.alloc(slot, need)
-                except PagesExhausted:
-                    break
-            req = self.queue.pop(0)
-            req.slot = slot
-            self.slot_req[slot] = req
-            toks = jnp.asarray([req.prompt], jnp.int32)
-            if self.paged:
-                logits = self._prefill_paged_slot(slot, toks)
-            else:
-                logits = self._prefill_dense_slot(slot, toks)
-            first = self._sample_slot_rows(logits, [slot])
-            self.cache["len"] = self.cache["len"].at[slot].set(
-                len(req.prompt))
-            self.tokens = self.tokens.at[slot].set(first[0])
-            req.generated.append(int(first[0]))
-            self.active[slot] = True
-            self._maybe_finish(req)
+    # -- plan application ----------------------------------------------
+    def _apply_preempt(self, st: RequestState) -> None:
+        """Device side of an eviction: gather the victim's KV pages to
+        host (swap mode — before anything can rewrite them) and clear its
+        slot length.  Recompute mode keeps only the token ids."""
+        if st.swap_block_ids is not None:
+            ids = jnp.asarray(st.swap_block_ids, jnp.int32)
+            st.saved_kv = {k: np.asarray(v[ids])
+                           for k, v in self.cache.items()
+                           if k.startswith("pages_")}
+        self.cache["len"] = self.cache["len"].at[st.slot].set(0)
+        st.slot = None
+
+    def _start(self, st: RequestState) -> None:
+        """Device side of an admission: swap-restore saved pages, or
+        prefill ``prompt + generated`` (fresh and recompute resumes)."""
+        slot = st.slot
+        if st.saved_kv is not None:
+            # token-exact resume: scatter the saved KV bits into the
+            # freshly mapped pages; the pending input token is the last
+            # one generated before eviction
+            ids = jnp.asarray(
+                self.kv.mapped_pages(slot)[:len(st.swap_block_ids)],
+                jnp.int32)
+            for key, saved in st.saved_kv.items():
+                self.cache[key] = self.cache[key].at[ids].set(
+                    jnp.asarray(saved))
+            self.cache["len"] = self.cache["len"].at[slot].set(st.saved_len)
+            self.tokens = self.tokens.at[slot].set(st.generated[-1])
+            st.saved_kv = None
+            st.swap_block_ids = None
+            return
+        toks = jnp.asarray([st.prompt + st.generated], jnp.int32)
+        if self.paged:
+            logits = self._prefill_paged_slot(slot, toks)
+        else:
+            logits = self._prefill_dense_slot(slot, toks)
+        first = self._sample_slot_rows(logits, [slot])
+        self.cache["len"] = self.cache["len"].at[slot].set(
+            toks.shape[1])
+        self.tokens = self.tokens.at[slot].set(first[0])
+        st.generated.append(int(first[0]))
+        self._maybe_finish(st)
 
     def _prefill_dense_slot(self, slot: int, toks: jax.Array) -> jax.Array:
         """Batch-1 prefill into a fresh dense cache, then whole-slice
@@ -252,6 +301,7 @@ class ContinuousBatcher:
         mapped for this slot — admission moves exactly the new tokens,
         never a (1, max_len) cache slice."""
         self.cache["block_tables"] = self.kv.device_block_tables()
+        self.scheduler.tables_dirty = False
         one = slot_view(self.cache, slot)
         one, logits = self.backend.prefill({"tokens": toks}, one)
         for key in one:
@@ -259,33 +309,36 @@ class ContinuousBatcher:
                 self.cache[key] = one[key]
         return logits
 
-    def _maybe_finish(self, req: Request) -> None:
-        if len(req.generated) >= req.max_new or \
-                (req.eos is not None and req.generated
-                 and req.generated[-1] == req.eos):
-            req.done = True
-            if req.slot is not None:
-                self.active[req.slot] = False
-                self.slot_req[req.slot] = None
-                if self.paged:
-                    # unmap: pages go back to the free list (shared
-                    # prefix pages survive via their ref-counts)
-                    self.kv.free(req.slot)
-                    self.cache["block_tables"] = \
-                        self.kv.device_block_tables()
-                self.cache["len"] = self.cache["len"].at[req.slot].set(0)
-                req.slot = None
+    def _maybe_finish(self, st: RequestState) -> None:
+        if len(st.generated) >= st.max_new or \
+                (st.eos is not None and st.generated
+                 and st.generated[-1] == st.eos):
+            slot = st.slot
+            self.scheduler.finish(st)
+            if slot is not None:
+                self.cache["len"] = self.cache["len"].at[slot].set(0)
+                st.slot = None
 
     # ------------------------------------------------------------------
     def step(self) -> int:
-        """Admit waiting requests, advance all active slots one token.
-
-        Returns the number of active slots after the step.
+        """Run one scheduler step: apply the policy's plan (preempt /
+        admit / resume / grow pages), then advance all active slots one
+        token.  Returns the number of active slots after the step.
         """
-        self._admit()
-        if not self.active.any():
+        plan = self.scheduler.plan()
+        for st in plan.preempt:
+            self._apply_preempt(st)
+        for st in plan.start:
+            self._start(st)
+        if self.paged and self.scheduler.tables_dirty:
+            # page growth / release since the last export (admission
+            # prefills re-export on their own)
+            self.cache["block_tables"] = self.kv.device_block_tables()
+            self.scheduler.tables_dirty = False
+        active = self.scheduler.active_mask()
+        if not active.any():
             return 0
-        occ = int(self.active.sum())
+        occ = int(active.sum())
         # the batch a decode step actually executes: paged decode compacts
         # to the active slots (cheap — a block-table row gather), dense
         # decode always runs the full slot width (inactive slots compute
@@ -305,20 +358,31 @@ class ContinuousBatcher:
             self._plan_batch = executed
             self.retunes += 1
         if self.paged and occ < self.max_slots:
-            self._decode_active_slots()
+            self._decode_active_slots(active)
         else:
             self.cache, logits = self.backend.decode(self.tokens,
                                                      self.cache)
+            self._prefetch_next_step()
             self.tokens = self._sample_slot_rows(
                 logits, list(range(self.max_slots)))
         nxt = self.tokens
-        for req in list(self.requests.values()):
-            if req.slot is not None and self.active[req.slot]:
-                req.generated.append(int(nxt[req.slot]))
-                self._maybe_finish(req)
-        return int(self.active.sum())
+        for st in self.scheduler.running():
+            st.generated.append(int(nxt[st.slot]))
+            self._maybe_finish(st)
+        return int(self.scheduler.active_mask().sum())
 
-    def _decode_active_slots(self) -> None:
+    def _prefetch_next_step(self) -> None:
+        """Kick step N+1's pins while step N's host tail (sampling,
+        bookkeeping) drains.  The engine's wrap-around prefetch order
+        already points each step's last module at the next step's first,
+        but that wrap prefetch silently loses when the pinned ring is
+        still full — retrying here, after the step's linears released
+        their slots, lets the pin thread stage the next step's first
+        module of every group concurrently with everything below."""
+        if hasattr(self.backend, "prefetch_next_step"):
+            self.backend.prefetch_next_step()
+
+    def _decode_active_slots(self, active: np.ndarray) -> None:
         """One decode step over the active slots only.
 
         The paged cache makes batch compaction a metadata operation: the
@@ -327,13 +391,14 @@ class ContinuousBatcher:
         real occupancy (what ``retune`` plans for) — inactive slots cost
         nothing and write nothing.  Results scatter back by slot index.
         """
-        slots = np.flatnonzero(self.active)
+        slots = np.flatnonzero(active)
         idx = jnp.asarray(slots)
         sub = {k: v for k, v in self.cache.items()
                if k.startswith("pages_")}
         sub["block_tables"] = self.cache["block_tables"][idx]
         sub["len"] = self.cache["len"][idx]
         sub, logits = self.backend.decode(self.tokens[idx], sub)
+        self._prefetch_next_step()
         for key in sub:
             if key.startswith("pages_"):
                 self.cache[key] = sub[key]

@@ -112,11 +112,25 @@ class PagedKVCache:
     def free_pages(self) -> int:
         return len(self._free)
 
+    @property
+    def usable_pages(self) -> int:
+        """Pool capacity excluding the reserved trash page."""
+        return self.n_pages - 1
+
     def blocks_for(self, n_tokens: int) -> int:
         return max(-(-n_tokens // self.page_size), 0)
 
     def alloc(self, slot: int, n_tokens: int) -> None:
         """Map pages so ``slot`` covers ``n_tokens`` logical positions.
+
+        Growth is incremental — already-mapped pages are kept, only the
+        shortfall is drawn from the free list — which is what makes
+        *optimistic* paging (ROADMAP follow-up, now the scheduler's
+        default) a pure policy change: the scheduler simply calls
+        ``alloc(slot, kv_len + 1)`` every decode step instead of
+        ``alloc(slot, prompt + max_new)`` once at admission, and treats
+        :class:`PagesExhausted` as a preemption event instead of an
+        admission error.
 
         All-or-nothing: raises :class:`PagesExhausted` (mapping nothing)
         when the free list cannot cover the growth, so a failed admission

@@ -111,10 +111,15 @@ class SamplingParams:
     top_k: int = 0
     top_p: float = 1.0
     seed: Optional[int] = None
+    # None = no logprobs; k >= 0 = record each sampled token's logprob
+    # plus its k most likely alternatives (k=0: the chosen token only)
+    logprobs: Optional[int] = None
 
     def __post_init__(self):
         if self.kind not in _KINDS:
             raise ValueError(f"unknown sampler kind {self.kind!r}")
+        if self.logprobs is not None and self.logprobs < 0:
+            raise ValueError("logprobs must be None or >= 0")
 
     @classmethod
     def from_config(cls, cfg: SamplerConfig,
@@ -155,7 +160,8 @@ def pack_sampling(params: Sequence[SamplingParams]) -> Dict[str, jax.Array]:
 
 
 def sample_rows(logits: jax.Array, keys: jax.Array,
-                packed: Dict[str, jax.Array]) -> jax.Array:
+                packed: Dict[str, jax.Array],
+                top_logprobs: Optional[int] = None):
     """Sample one token per row under per-row parameters.  Jit-safe.
 
     ``logits``: (B, V) fp; ``keys``: (B, 2) uint32 stacked PRNG keys (one
@@ -168,6 +174,13 @@ def sample_rows(logits: jax.Array, keys: jax.Array,
     draw is a per-row categorical over the surviving sorted logits with
     that row's own key.  Position 0 always survives, so the filters can
     never empty a row.
+
+    With ``top_logprobs`` (an int >= 0) the same sort also yields the
+    serving-API logprob payload — returns ``(tokens, info)`` where
+    ``info`` holds ``logprob`` (B,) for the sampled token and
+    ``top_tokens`` / ``top_logprobs`` (B, k) alternatives, all under the
+    raw model distribution (argsort order is temperature-invariant, so
+    no second sort is ever needed).
     """
     logits = logits.astype(jnp.float32)
     n_vocab = logits.shape[-1]
@@ -184,6 +197,17 @@ def sample_rows(logits: jax.Array, keys: jax.Array,
     masked = jnp.where(keep, sorted_scaled, -jnp.inf)
     choice = jax.vmap(jax.random.categorical)(keys, masked)
     sampled = jnp.take_along_axis(order, choice[:, None], axis=-1)[:, 0]
-    return jnp.where(packed["kind"] == _KIND_ID["greedy"],
+    toks = jnp.where(packed["kind"] == _KIND_ID["greedy"],
                      jnp.argmax(logits, axis=-1),
                      sampled).astype(jnp.int32)
+    if top_logprobs is None:
+        return toks
+    kk = max(int(top_logprobs), 0)
+    log_z = jax.scipy.special.logsumexp(logits, axis=-1)
+    chosen = jnp.take_along_axis(logits, toks[:, None], axis=-1)[:, 0] \
+        - log_z
+    sorted_raw = jnp.take_along_axis(logits, order[:, :kk], axis=-1)
+    info = {"logprob": chosen,
+            "top_tokens": order[:, :kk],
+            "top_logprobs": sorted_raw - log_z[:, None]}
+    return toks, info

@@ -1,0 +1,459 @@
+"""Scheduling as an API: admission/preemption/resume policies over requests.
+
+PR 1-3 grew the serving stack an executor at a time, but scheduling stayed
+implicit: the batcher admitted FCFS, reserved every page a request could
+ever want at admission, and nothing could be evicted.  FlexGen's lesson
+(PAPERS.md) is that *policy* — who runs, who waits, who gets evicted —
+dominates offloaded throughput long before kernels do, so this module
+makes it a first-class seam:
+
+  * :class:`RequestState` — one request's full scheduling state: prompt,
+    budget, sampling stream, priority, generated tokens, status
+    (waiting / running / preempted / finished), and — when preempted with
+    ``preempt_mode="swap"`` — its host-saved KV pages.
+  * :class:`SchedulerPolicy` — the pluggable decision surface: admission
+    order, sacrifice order, and which running victims an incoming request
+    may preempt.  Three implementations ship: :class:`FCFSPolicy`,
+    :class:`PriorityPolicy`, :class:`FairSharePolicy` (registry:
+    :func:`get_policy`).
+  * :class:`Scheduler` — owns the request queues, the slot table, and all
+    page *accounting* (`PagedKVCache` alloc/free), and emits a per-step
+    :class:`StepPlan`.  The :class:`repro.serving.batcher.ContinuousBatcher`
+    shrinks to a pure executor: it applies the plan (save / restore /
+    prefill), runs the decode step, and reports tokens back.
+
+Optimistic paging (ROADMAP paged follow-up): with ``optimistic=True``
+(the default for paged serving) admission maps only the pages the prompt
+needs *now* — ``prompt + 1`` positions instead of ``prompt + max_new`` —
+and every step grows each running slot by exactly the next decode
+position.  The pool therefore admits far more concurrent requests than
+worst-case reservation would, and *page pressure* becomes a scheduling
+event rather than an admission error: when ``alloc`` raises
+:class:`PagesExhausted`, the policy picks victims, their pages are
+released, and they re-enter the admission queue.
+
+Preemption is loss-free and token-exact in both modes:
+
+  * ``preempt_mode="swap"`` (paged default) — the victim's mapped pages
+    are gathered to host memory (the natural direction for a HeteGen
+    deployment: host RAM is the big pool) and scattered back into freshly
+    mapped pages on resume.  KV bits are preserved exactly, so the resumed
+    request continues bit-identically.
+  * ``preempt_mode="recompute"`` (dense default) — the victim keeps only
+    its token ids; resume re-prefills ``prompt + generated`` in one pass.
+    Teacher-forced prefill reproduces the decode-path KV and logits
+    exactly on this backend (tests/test_scheduler.py), and sampling draws
+    from request-owned PRNG streams keyed by generated-token count
+    (PR 3), so resumed requests are token-identical either way.
+
+Starvation/thrash guards: a growth victim may be the growing request
+itself (it simply waits for co-tenants to release pages), but when a
+request is *alone* and still cannot grow, no future step can help — the
+scheduler raises instead of flapping.  ``FairSharePolicy`` only allows
+preemption after a victim has generated ``quantum`` tokens since its last
+(re)admission, so every preemption cycle makes at least ``quantum``
+tokens of progress.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, List, Optional, Protocol, Union, runtime_checkable
+
+import jax
+import numpy as np
+
+from repro.serving.kv_cache import PagedKVCache, PagesExhausted
+from repro.serving.sampling import SamplingParams
+
+WAITING = "waiting"
+RUNNING = "running"
+PREEMPTED = "preempted"
+FINISHED = "finished"
+
+
+@dataclasses.dataclass
+class RequestState:
+    """One request's complete scheduling state (the queue's unit)."""
+
+    rid: int
+    prompt: List[int]
+    max_new: int
+    eos: Optional[int] = None
+    sampling: SamplingParams = SamplingParams()
+    key: Optional[jax.Array] = None      # request-owned PRNG stream (PR 3)
+    priority: int = 0                    # larger = more important
+    arrival: int = 0                     # monotonic submission index
+    generated: List[int] = dataclasses.field(default_factory=list)
+    logprobs: Optional[List[Dict]] = None  # per-token, when requested
+    status: str = WAITING
+    slot: Optional[int] = None
+    preemptions: int = 0                 # times this request was evicted
+    resumed_at: int = 0                  # len(generated) at last admission
+    wait_steps: int = 0                  # steps spent waiting/preempted
+    # swap-mode preemption state: which pages to save (recorded at the
+    # planning step, before they return to the free list) and the host
+    # copy the executor gathers before anything overwrites them
+    swap_block_ids: Optional[List[int]] = None
+    saved_len: int = 0
+    saved_kv: Optional[Dict[str, np.ndarray]] = None
+
+    @property
+    def done(self) -> bool:
+        return self.status == FINISHED
+
+    @property
+    def kv_len(self) -> int:
+        """KV positions materialized while running: the prompt plus every
+        generated token except the newest (still the pending input)."""
+        return len(self.prompt) + len(self.generated) - 1
+
+    @property
+    def slice_served(self) -> int:
+        """Tokens generated since the last (re)admission."""
+        return len(self.generated) - self.resumed_at
+
+
+@dataclasses.dataclass
+class StepPlan:
+    """What the executor must do before this step's decode.
+
+    ``preempt`` entries still carry their old ``slot`` so the executor can
+    save their KV (swap mode) and clear the slot's length — their pages
+    and slots are already released in the scheduler's accounting.
+    ``start`` entries are already assigned a slot with pages mapped; the
+    executor restores saved KV (``saved_kv`` set) or prefills
+    ``prompt + generated`` (fresh admissions and recompute resumes — for
+    a fresh request ``generated`` is empty, so the two are one code
+    path)."""
+
+    preempt: List[RequestState] = dataclasses.field(default_factory=list)
+    start: List[RequestState] = dataclasses.field(default_factory=list)
+
+
+@runtime_checkable
+class SchedulerPolicy(Protocol):
+    """The pluggable scheduling surface.
+
+    All three methods are pure functions of request state — policies hold
+    no queues and mutate nothing, which is what lets the scheduler replay
+    them every step against whatever the current queues are.
+    """
+
+    name: str
+
+    def admit_order(self, pending: List[RequestState]
+                    ) -> List[RequestState]:
+        """Order the admission queue (waiting + preempted), most
+        deserving first.  Admission is head-of-line: when the head cannot
+        be placed, nothing behind it jumps the queue."""
+        ...
+
+    def preempt_order(self, running: List[RequestState]
+                      ) -> List[RequestState]:
+        """Sacrifice order over the running set, first victim first."""
+        ...
+
+    def may_preempt(self, incoming: RequestState,
+                    victim: RequestState) -> bool:
+        """May ``incoming`` (a pending request) evict ``victim`` to get
+        admitted?  Page *growth* of already-running requests does not
+        consult this — growth always may preempt (the alternative is a
+        wedged step); this gate exists so admission cannot churn."""
+        ...
+
+
+class FCFSPolicy:
+    """Arrival order; admission never preempts.  Page growth sacrifices
+    the newest-arrived running request first (it has the least sunk
+    work), exactly vLLM's recompute-preemption default."""
+
+    name = "fcfs"
+
+    def admit_order(self, pending):
+        return sorted(pending, key=lambda s: s.arrival)
+
+    def preempt_order(self, running):
+        return sorted(running, key=lambda s: -s.arrival)
+
+    def may_preempt(self, incoming, victim):
+        return False
+
+
+class PriorityPolicy:
+    """Strict priorities: higher ``priority`` admits first and may evict
+    any strictly lower-priority running request (strictness is the
+    anti-thrash guarantee — equal priorities never preempt each other).
+    Ties break FCFS."""
+
+    name = "priority"
+
+    def admit_order(self, pending):
+        return sorted(pending, key=lambda s: (-s.priority, s.arrival))
+
+    def preempt_order(self, running):
+        return sorted(running, key=lambda s: (s.priority, -s.arrival))
+
+    def may_preempt(self, incoming, victim):
+        return incoming.priority > victim.priority
+
+
+class FairSharePolicy:
+    """Round-robin over service: least-served requests admit first, the
+    most-served running request is sacrificed first, and a running
+    request becomes evictable once it has generated ``quantum`` tokens
+    since its last (re)admission.  Starvation bound: with any waiting
+    request, no slot holder runs more than ``quantum`` tokens before
+    yielding, so a waiter starts within ``quantum`` steps of reaching the
+    head of the queue — and every preemption cycle ships at least
+    ``quantum`` tokens, so slicing can never live-lock."""
+
+    name = "fair_share"
+
+    def __init__(self, quantum: int = 8):
+        self.quantum = max(int(quantum), 1)
+
+    def admit_order(self, pending):
+        return sorted(pending, key=lambda s: (len(s.generated), s.arrival))
+
+    def preempt_order(self, running):
+        return sorted(running,
+                      key=lambda s: (-len(s.generated), -s.arrival))
+
+    def may_preempt(self, incoming, victim):
+        return victim.slice_served >= self.quantum \
+            and len(incoming.generated) < len(victim.generated) \
+            + self.quantum
+
+    def __repr__(self):
+        return f"FairSharePolicy(quantum={self.quantum})"
+
+
+POLICIES = {
+    "fcfs": FCFSPolicy,
+    "priority": PriorityPolicy,
+    "fair_share": FairSharePolicy,
+}
+
+
+def get_policy(policy: Union[str, SchedulerPolicy, None]) -> SchedulerPolicy:
+    """Resolve a policy name (registry) or pass a policy object through."""
+    if policy is None:
+        return FCFSPolicy()
+    if isinstance(policy, str):
+        try:
+            return POLICIES[policy]()
+        except KeyError:
+            raise ValueError(f"unknown scheduler policy {policy!r}; "
+                             f"known: {sorted(POLICIES)}") from None
+    return policy
+
+
+class Scheduler:
+    """Owns who runs: queues, the slot table, and page accounting.
+
+    The executor calls :meth:`plan` once per step and applies the
+    returned :class:`StepPlan` (saves, then restores/prefills) before
+    decoding; everything device-side stays in the executor, everything
+    decision-side lives here.  ``kv`` is the page *allocator* — this
+    class calls ``alloc``/``free``/``mapped_pages`` (host metadata only)
+    and flips :attr:`tables_dirty` so the executor knows to re-export the
+    device block tables."""
+
+    def __init__(self, policy: Union[str, SchedulerPolicy, None],
+                 max_slots: int, max_len: int, *,
+                 kv: Optional[PagedKVCache] = None,
+                 optimistic: bool = True,
+                 preempt_mode: Optional[str] = None):
+        self.policy = get_policy(policy)
+        self.max_slots = max_slots
+        self.max_len = max_len
+        self.kv = kv
+        self.optimistic = bool(optimistic) and kv is not None
+        if preempt_mode is None:
+            preempt_mode = "swap" if kv is not None else "recompute"
+        if preempt_mode not in ("swap", "recompute"):
+            raise ValueError(f"unknown preempt_mode {preempt_mode!r}")
+        if preempt_mode == "swap" and kv is None:
+            raise ValueError("preempt_mode='swap' needs a paged cache")
+        self.preempt_mode = preempt_mode
+        self.requests: Dict[int, RequestState] = {}
+        self.waiting: List[RequestState] = []
+        self.preempted: List[RequestState] = []
+        self.slot_req: List[Optional[RequestState]] = [None] * max_slots
+        self.preemptions = 0           # total eviction events
+        self.tables_dirty = False      # block tables changed since export
+        self._arrivals = 0
+
+    # -- queue views ----------------------------------------------------
+    @property
+    def pending(self) -> List[RequestState]:
+        """Everything that wants a slot: never-run plus preempted."""
+        return self.waiting + self.preempted
+
+    def running(self) -> List[RequestState]:
+        return [st for st in self.slot_req if st is not None]
+
+    def active_mask(self) -> np.ndarray:
+        return np.asarray([st is not None for st in self.slot_req], bool)
+
+    # -- intake / completion -------------------------------------------
+    def submit(self, st: RequestState) -> None:
+        if st.rid in self.requests:
+            raise ValueError(f"duplicate request id {st.rid}")
+        st.arrival = self._arrivals
+        self._arrivals += 1
+        st.status = WAITING
+        if st.sampling.logprobs is not None and st.logprobs is None:
+            st.logprobs = []
+        self.requests[st.rid] = st
+        self.waiting.append(st)
+
+    def finish(self, st: RequestState) -> None:
+        """Retire a finished request: release its slot and pages."""
+        st.status = FINISHED
+        if st.slot is not None:
+            if self.kv is not None:
+                self.kv.free(st.slot)
+                self.tables_dirty = True
+            self.slot_req[st.slot] = None
+
+    # -- the per-step plan ---------------------------------------------
+    def plan(self) -> StepPlan:
+        """Decide this step's preemptions, admissions, and page growth.
+
+        All accounting (slots, pages) is committed here; the executor
+        then performs the device work in plan order (saves before
+        restores/prefills, so swapped KV is read before its old pages
+        can be rewritten)."""
+        out = StepPlan()
+        if self.optimistic:
+            # growth first: running requests reserve their next decode
+            # position, most-protected first so pressure lands on the
+            # requests the policy would sacrifice anyway
+            for st in reversed(self.policy.preempt_order(self.running())):
+                if st.status == RUNNING:
+                    self._grow(st, out)
+        for st in self.policy.admit_order(list(self.pending)):
+            # a request preempted in THIS plan keeps its turn for next
+            # step — resuming it immediately would just thrash
+            if st in out.preempt:
+                continue
+            if not self._try_admit(st, out):
+                break                      # head-of-line: no queue jumping
+        for st in self.pending:
+            st.wait_steps += 1
+        return out
+
+    # -- internals ------------------------------------------------------
+    def _preempt(self, victim: RequestState, out: StepPlan) -> None:
+        victim.status = PREEMPTED
+        victim.preemptions += 1
+        self.preemptions += 1
+        if self.kv is not None:
+            if self.preempt_mode == "swap":
+                n_blocks = self.kv.blocks_for(victim.kv_len)
+                victim.swap_block_ids = \
+                    self.kv.mapped_pages(victim.slot)[:n_blocks]
+                victim.saved_len = victim.kv_len
+            self.kv.free(victim.slot)
+            self.tables_dirty = True
+        # the slot is free for reuse from this moment; the state keeps
+        # victim.slot so the executor can save/clear it, and drops it there
+        self.slot_req[victim.slot] = None
+        self.preempted.append(victim)
+        out.preempt.append(victim)
+
+    def _grow(self, st: RequestState, out: StepPlan) -> bool:
+        """Map the page covering ``st``'s next decode position, evicting
+        victims (possibly ``st`` itself) under page pressure."""
+        target = min(st.kv_len + 1, self.max_len)
+        while True:
+            try:
+                self.kv.alloc(st.slot, target)
+                self.tables_dirty = True
+                return True
+            except PagesExhausted:
+                pass
+            cands = [r for r in self.running() if r.status == RUNNING]
+            victims = self.policy.preempt_order(cands)
+            v = victims[0]             # cands always contains st itself
+            if v is st and len(cands) == 1:
+                # alone and still short: every usable page is already
+                # ours, so no later step can ever satisfy this request
+                raise RuntimeError(
+                    f"scheduler stalled: request {st.rid} needs "
+                    f"{self.kv.blocks_for(target)} pages but the pool "
+                    f"holds {self.kv.usable_pages}")
+            self._preempt(v, out)
+            if v is st:
+                return False           # sit out; resume when pages free
+
+    def _admit_need_tokens(self, st: RequestState) -> int:
+        """KV positions an admission must map up front."""
+        if not self.optimistic:
+            # classic reservation: everything the request could ever want
+            # (max_new is the request's total budget, resumes included)
+            return min(len(st.prompt) + st.max_new, self.max_len)
+        if st.swap_block_ids is not None:
+            restored = st.saved_len
+        else:
+            restored = len(st.prompt) + len(st.generated)
+        # +1: a started request joins this same step's decode
+        return min(restored + 1, self.max_len)
+
+    def _free_slot(self) -> Optional[int]:
+        for i, occ in enumerate(self.slot_req):
+            if occ is None:
+                return i
+        return None
+
+    def _try_admit(self, st: RequestState, out: StepPlan) -> bool:
+        need_blocks = 0 if self.kv is None \
+            else self.kv.blocks_for(self._admit_need_tokens(st))
+        slot = self._free_slot()
+        avail = None if self.kv is None else self.kv.free_pages
+        victims: List[RequestState] = []
+        if slot is None or (avail is not None and avail < need_blocks):
+            # plan the minimal policy-sanctioned eviction set first, so a
+            # doomed admission preempts nobody; requests started earlier
+            # in THIS plan are never victims — they have not prefilled
+            # yet, and appearing in both start and preempt would hand the
+            # executor a contradiction
+            cands = [v for v in self.policy.preempt_order(self.running())
+                     if v.status == RUNNING and v not in out.start
+                     and self.policy.may_preempt(st, v)]
+            have_slot = slot is not None
+            for v in cands:
+                if have_slot and (avail is None or avail >= need_blocks):
+                    break
+                victims.append(v)
+                have_slot = True
+                if avail is not None:
+                    avail += len(self.kv.mapped_pages(v.slot))
+            if not have_slot or (avail is not None
+                                 and avail < need_blocks):
+                return False
+        for v in victims:
+            self._preempt(v, out)
+        if slot is None:
+            slot = victims[0].slot
+        if self.kv is not None and need_blocks:
+            try:
+                self.kv.alloc(slot, self._admit_need_tokens(st))
+            except PagesExhausted:
+                # shared (forked) pages can make a victim's mapped count
+                # an over-estimate of what freeing reclaims
+                return False
+            self.tables_dirty = True
+        if st in self.waiting:
+            self.waiting.remove(st)
+        if st in self.preempted:
+            self.preempted.remove(st)
+        st.slot = slot
+        st.status = RUNNING
+        st.resumed_at = len(st.generated)
+        st.wait_steps = 0
+        self.slot_req[slot] = st
+        out.start.append(st)
+        return True

@@ -61,6 +61,59 @@ def test_sample_rows_mixed_kinds_honored(rng):
     assert len(seen4) > len(seen3)  # ...and unrestricted explores more
 
 
+def test_sample_rows_logprobs_from_same_sort(rng):
+    """top_logprobs rides the sampler's existing descending sort: chosen
+    logprob is the raw log-softmax at the sampled token, alternatives are
+    the k highest-logit tokens, and greedy rows' chosen == top-1."""
+    logits = jnp.asarray(rng.standard_normal((3, 32)) * 2, jnp.float32)
+    packed = pack_sampling([SamplingParams(),
+                            SamplingParams(kind="temperature",
+                                           temperature=2.0),
+                            SamplingParams(kind="topk", top_k=4)])
+    keys = jnp.stack([jax.random.PRNGKey(r) for r in range(3)])
+    toks, info = sample_rows(logits, keys, packed, top_logprobs=3)
+    ref_lp = np.asarray(jax.nn.log_softmax(logits, axis=-1))
+    for r in range(3):
+        assert info["logprob"][r] == pytest.approx(
+            ref_lp[r, int(toks[r])], abs=1e-5)
+        want_top = np.argsort(-np.asarray(logits[r]))[:3]
+        assert np.array_equal(np.asarray(info["top_tokens"][r]), want_top)
+        assert np.allclose(np.asarray(info["top_logprobs"][r]),
+                           ref_lp[r, want_top], atol=1e-5)
+    assert int(toks[0]) == int(info["top_tokens"][0, 0])   # greedy row
+    # plain call shape is unchanged
+    assert sample_rows(logits, keys, packed).shape == (3,)
+
+
+def test_facade_logprobs_in_request_output(setup, rng):
+    """SamplingParams.logprobs threads batcher -> RequestState ->
+    RequestOutput: one aligned entry per generated token, trimmed to the
+    request's own k, and mixed logprob/no-logprob batches coexist."""
+    cfg, params = setup
+    p = [list(rng.integers(0, cfg.vocab_size, n)) for n in (6, 6)]
+    with LLM(cfg, params, max_slots=2, max_len=32, seed=0) as llm:
+        plain = llm.generate([p[0]], max_new=4)[0]
+        r0 = llm.submit(p[0], 4, sampling=SamplingParams(logprobs=2))
+        r1 = llm.submit(p[1], 4)                 # no logprobs requested
+        outs = llm.drain()
+    lp = outs[r0].logprobs
+    assert outs[r0].tokens == plain.tokens       # recording changes nothing
+    assert outs[r1].logprobs is None
+    assert len(lp) == 4
+    for e, t in zip(lp, outs[r0].tokens):
+        assert e["token"] == t and len(e["top"]) == 2
+        # greedy: the sampled token IS the top-1 alternative
+        assert e["logprob"] == pytest.approx(max(e["top"].values()))
+        assert e["logprob"] <= 0.0 + 1e-6
+    # a rectangular generate() with logprobs still runs (via the batcher)
+    with LLM(cfg, params, max_slots=2, max_len=32, seed=0) as llm:
+        outs = llm.generate(p, max_new=3,
+                            sampling=SamplingParams(logprobs=0))
+        assert llm.last_executor == "batcher"
+        assert all(len(o.logprobs) == 3 and not o.logprobs[0]["top"]
+                   for o in outs)
+
+
 def test_sample_rows_row_independent(rng):
     """A row's draw depends only on its own logits and key — the property
     that makes paged compaction safe under stochastic sampling."""

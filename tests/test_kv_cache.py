@@ -157,14 +157,17 @@ def test_admission_is_map_only(tiny_setup, rng, monkeypatch):
 # ---------------------------------------------------------------------------
 
 def test_pages_exhausted_queues_until_release(tiny_setup, rng):
-    """A pool too small for two concurrent requests serializes them: the
-    second stays queued (its slot empty) until the first releases."""
+    """Classic reservation (optimistic=False): a pool too small for two
+    concurrent requests serializes them — the second stays queued (its
+    slot empty) until the first releases.  The optimistic default would
+    instead admit both and preempt under pressure
+    (tests/test_scheduler.py)."""
     cfg, params = tiny_setup
     prompts = [list(rng.integers(0, cfg.vocab_size, 9)) for _ in range(2)]
     # 19 tokens -> 3 pages of 8 each; 4 usable pages fit only one request
     b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
                           max_slots=2, max_len=32, paged=True, page_size=8,
-                          n_pages=5)
+                          n_pages=5, optimistic=False)
     r0 = b.submit(prompts[0], 10)
     r1 = b.submit(prompts[1], 10)
     b.step()

@@ -1,0 +1,459 @@
+"""The scheduler seam (docs/SERVING.md): pluggable admission/preemption
+policies, optimistic paging with token-exact preempt/resume, the
+AsyncLLM event loop, and the cross-step prefetch overlap."""
+import threading
+
+import jax
+import pytest
+
+from repro.configs import get_config
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.api import LLM, AsyncLLM
+from repro.serving.backends import HeteGenBackend, ResidentBackend
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.sampling import SamplingParams
+from repro.serving.scheduler import (FairSharePolicy, FCFSPolicy,
+                                     PriorityPolicy, RequestState,
+                                     get_policy)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _batcher(cfg, params, **kw):
+    kw.setdefault("max_slots", 2)
+    kw.setdefault("max_len", 48)
+    return ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                             own_backend=True, **kw)
+
+
+def _reference(cfg, params, submits, max_len=48):
+    """Run the same (rid, prompt, max_new, sampling) set with slots and
+    pages to spare: the unpressured baseline every scheduling decision
+    must be invisible against."""
+    b = _batcher(cfg, params, max_slots=len(submits), max_len=max_len)
+    for rid, p, n, sp in submits:
+        b.submit(p, n, sampling=sp, rid=rid)
+    out = b.run_until_done()
+    b.close()
+    return out
+
+
+# ---------------------------------------------------------------------------
+# policies as pure functions
+# ---------------------------------------------------------------------------
+
+def _st(rid, *, priority=0, arrival=0, generated=0, resumed_at=0):
+    st = RequestState(rid, [1, 2], 8, priority=priority, arrival=arrival)
+    st.generated = list(range(generated))
+    st.resumed_at = resumed_at
+    return st
+
+
+def test_policy_registry():
+    assert isinstance(get_policy("fcfs"), FCFSPolicy)
+    assert isinstance(get_policy("priority"), PriorityPolicy)
+    assert isinstance(get_policy("fair_share"), FairSharePolicy)
+    p = FairSharePolicy(quantum=3)
+    assert get_policy(p) is p
+    assert get_policy(None).name == "fcfs"
+    with pytest.raises(ValueError, match="unknown scheduler policy"):
+        get_policy("lifo")
+
+
+def test_policy_orderings():
+    a = _st(0, arrival=0, priority=1, generated=4)
+    b = _st(1, arrival=1, priority=5, generated=0)
+    c = _st(2, arrival=2, priority=1, generated=9)
+    fcfs, prio = FCFSPolicy(), PriorityPolicy()
+    fair = FairSharePolicy(quantum=2)
+    assert [s.rid for s in fcfs.admit_order([c, b, a])] == [0, 1, 2]
+    assert [s.rid for s in fcfs.preempt_order([a, b, c])] == [2, 1, 0]
+    assert not fcfs.may_preempt(b, a)
+    assert [s.rid for s in prio.admit_order([c, a, b])] == [1, 0, 2]
+    # lowest priority, newest first, goes to the wall first
+    assert [s.rid for s in prio.preempt_order([a, b, c])] == [2, 0, 1]
+    assert prio.may_preempt(b, a) and not prio.may_preempt(a, b)
+    assert not prio.may_preempt(a, c)          # equal never preempts
+    # fair share: least served admits first, most served is sacrificed
+    assert [s.rid for s in fair.admit_order([c, a, b])] == [1, 0, 2]
+    assert fair.preempt_order([a, b, c])[0].rid == 2
+    # a victim is evictable only after its quantum elapsed
+    assert fair.may_preempt(b, c)              # c served 9 since resume
+    c2 = _st(2, generated=9, resumed_at=8)     # just resumed: 1 token
+    assert not fair.may_preempt(b, c2)
+
+
+def test_preempt_mode_validation(setup):
+    cfg, params = setup
+    with pytest.raises(ValueError, match="preempt_mode"):
+        _batcher(cfg, params, preempt_mode="magic")
+    with pytest.raises(ValueError, match="swap"):
+        _batcher(cfg, params, preempt_mode="swap")   # dense has no pages
+
+
+# ---------------------------------------------------------------------------
+# optimistic paging
+# ---------------------------------------------------------------------------
+
+def test_optimistic_admits_past_worst_case(setup, rng):
+    """The point of per-step reservation: a pool that worst-case
+    reservation serializes (see test_kv_cache's optimistic=False twin)
+    runs both requests concurrently, and the outputs still match the
+    unpressured dense run token for token."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 9)) for _ in range(2)]
+    b = _batcher(cfg, params, max_len=32, paged=True, page_size=8,
+                 n_pages=5)
+    r0 = b.submit(prompts[0], 10)
+    r1 = b.submit(prompts[1], 10)
+    b.step()
+    assert b.active.sum() == 2          # conservative mode admits 1
+    out = b.run_until_done()
+    b.close()
+    ref = _reference(cfg, params,
+                     [(r0, prompts[0], 10, None), (r1, prompts[1], 10, None)],
+                     max_len=32)
+    assert out == ref
+
+
+def test_growth_stall_raises_not_spins(setup, rng):
+    """A lone request that outgrows the whole pool can never finish: the
+    scheduler raises instead of preempt/resume-flapping forever."""
+    cfg, params = setup
+    b = _batcher(cfg, params, max_len=64, paged=True, page_size=8,
+                 n_pages=3)
+    b.submit(list(rng.integers(0, cfg.vocab_size, 9)), 20)
+    with pytest.raises(RuntimeError, match="stalled"):
+        b.run_until_done()
+    b.close()
+
+
+# ---------------------------------------------------------------------------
+# preemption / resume
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("preempt_mode", ["swap", "recompute"])
+def test_priority_preempts_and_resumes_token_identical(setup, rng,
+                                                       preempt_mode):
+    """The acceptance scenario: page pressure + priority policy.  The
+    late high-priority request evicts a low-priority tenant and finishes
+    first; the victims resume (host-swapped pages or recompute) and every
+    request matches its unpressured run bit for bit — stochastic
+    samplers included."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 6)) for _ in range(3)]
+    sps = [SamplingParams(),
+           SamplingParams(kind="topp", top_p=0.9, temperature=1.4, seed=7),
+           SamplingParams(kind="topk", top_k=8, seed=9)]
+    b = _batcher(cfg, params, max_len=32, paged=True, page_size=8,
+                 n_pages=5, policy="priority", preempt_mode=preempt_mode)
+    finish_order = []
+
+    def pump():
+        b.step()
+        for st in b.requests.values():
+            if st.done and st.rid not in finish_order:
+                finish_order.append(st.rid)
+
+    lo0 = b.submit(prompts[0], 16, sampling=sps[0], priority=0)
+    lo1 = b.submit(prompts[1], 16, sampling=sps[1], priority=0)
+    for _ in range(3):
+        pump()
+    hi = b.submit(prompts[2], 4, sampling=sps[2], priority=5)
+    for _ in range(200):
+        if not b.queue and not b.active.any():
+            break
+        pump()
+    out = {rid: st.generated for rid, st in b.requests.items()}
+    assert b.scheduler.preemptions >= 1
+    assert any(st.preemptions for st in b.requests.values())
+    assert finish_order[0] == hi        # priority jumped the line
+    assert b.kv.free_pages == b.kv.usable_pages    # nothing leaked
+    b.close()
+    ref = _reference(cfg, params,
+                     [(lo0, prompts[0], 16, sps[0]),
+                      (lo1, prompts[1], 16, sps[1]),
+                      (hi, prompts[2], 4, sps[2])], max_len=32)
+    assert out == ref
+
+
+def test_dense_slot_preemption_recompute(setup, rng):
+    """Preemption is not a paged-only feature: with every slot occupied,
+    a higher-priority request evicts a dense tenant (recompute resume)
+    and tokens still match the unpressured run."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 5)) for _ in range(2)]
+    b = _batcher(cfg, params, max_slots=1, policy="priority")
+    lo = b.submit(prompts[0], 10)
+    b.step()
+    hi = b.submit(prompts[1], 3, priority=2)
+    out = b.run_until_done()
+    assert b.scheduler.preemptions == 1
+    assert b.requests[lo].preemptions == 1
+    b.close()
+    ref = _reference(cfg, params, [(lo, prompts[0], 10, None),
+                                   (hi, prompts[1], 3, None)])
+    assert out == ref
+
+
+def test_fcfs_growth_preempts_newest(setup, rng):
+    """Under pure page pressure (no priorities anywhere) the FCFS policy
+    sacrifices the newest arrival, serializes through the crunch, and
+    still completes everything token-identically."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 6)) for _ in range(2)]
+    b = _batcher(cfg, params, max_len=32, paged=True, page_size=8,
+                 n_pages=5)
+    r0 = b.submit(prompts[0], 14)
+    r1 = b.submit(prompts[1], 14)
+    out = b.run_until_done()
+    assert b.scheduler.preemptions >= 1
+    assert b.requests[r0].preemptions == 0     # the elder is protected
+    assert b.requests[r1].preemptions >= 1
+    b.close()
+    ref = _reference(cfg, params, [(r0, prompts[0], 14, None),
+                                   (r1, prompts[1], 14, None)], max_len=32)
+    assert out == ref
+
+
+def test_fair_share_starvation_bound(setup, rng):
+    """One slot, three long requests: the quantum bounds how long anyone
+    waits.  Every request starts within (n-1) * (quantum + 1) steps, the
+    slot round-robins, and slicing never changes tokens."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 4)) for _ in range(3)]
+    b = _batcher(cfg, params, max_slots=1, max_len=64,
+                 policy=FairSharePolicy(quantum=3))
+    rids = [b.submit(p, 9) for p in prompts]
+    started, steps = {}, 0
+    while (b.queue or b.active.any()) and steps < 300:
+        b.step()
+        steps += 1
+        for st in b.requests.values():
+            if st.generated and st.rid not in started:
+                started[st.rid] = steps
+    out = {rid: st.generated for rid, st in b.requests.items()}
+    assert set(started) == set(rids)
+    assert max(started.values()) <= 2 * 4 + 1   # (n-1) * (quantum+1) + 1
+    assert b.scheduler.preemptions >= 2         # the slot actually rotated
+    assert all(st.preemptions for st in b.requests.values()
+               if st.rid != rids[-1])
+    b.close()
+    ref = _reference(cfg, params,
+                     [(r, p, 9, None) for r, p in zip(rids, prompts)],
+                     max_len=64)
+    assert out == ref
+
+
+def test_paged_offload_preemption_full_stack(setup, rng):
+    """The whole tower at once: HeteGen offloaded weights + paged KV +
+    priority preemption + swap resume, equal to the unpressured resident
+    dense run."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (6, 9)]
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+    b = ContinuousBatcher(cfg, backend=hb, own_backend=True, max_slots=2,
+                          max_len=32, paged=True, page_size=8, n_pages=4,
+                          policy="priority")
+    lo = b.submit(prompts[0], 12)
+    for _ in range(5):
+        b.step()        # lo holds 2 of the 3 pages when hi arrives
+    hi = b.submit(prompts[1], 3, priority=4)   # needs 2 pages up front
+    out = b.run_until_done()
+    preempted = b.scheduler.preemptions
+    b.close()
+    ref = _reference(cfg, params, [(lo, prompts[0], 12, None),
+                                   (hi, prompts[1], 3, None)], max_len=32)
+    assert out == ref
+    assert preempted >= 1
+
+
+def test_custom_policy_cannot_evict_same_plan_start(setup, rng):
+    """A pathological policy whose may_preempt always consents must not
+    hand the executor a request that is both started and preempted in
+    one plan — same-plan starts are never victim candidates."""
+    cfg, params = setup
+
+    class EvictAnything(FCFSPolicy):
+        name = "evict_anything"
+
+        def may_preempt(self, incoming, victim):
+            return True
+
+    prompts = [list(rng.integers(0, cfg.vocab_size, 4)) for _ in range(2)]
+    b = _batcher(cfg, params, max_slots=1, policy=EvictAnything())
+    r0 = b.submit(prompts[0], 4)
+    r1 = b.submit(prompts[1], 4)
+    out = b.run_until_done()        # crashed before the candidate filter
+    assert sorted(len(v) for v in out.values()) == [4, 4]
+    b.close()
+    ref = _reference(cfg, params, [(r0, prompts[0], 4, None),
+                                   (r1, prompts[1], 4, None)])
+    assert out == ref
+
+
+def test_submit_priority_zero_overrides_request(setup, rng):
+    """An explicit priority=0 demotes a prebuilt GenRequest; omitting it
+    keeps the request's own priority."""
+    from repro.serving.api import GenRequest
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 4))
+    with LLM(cfg, params, max_slots=2, max_len=32,
+             policy="priority") as llm:
+        kept = llm.submit(GenRequest(p, 2, priority=7))
+        demoted = llm.submit(GenRequest(p, 2, priority=7), priority=0)
+        assert llm._batcher.requests[kept].priority == 7
+        assert llm._batcher.requests[demoted].priority == 0
+        llm.drain()
+
+
+# ---------------------------------------------------------------------------
+# AsyncLLM
+# ---------------------------------------------------------------------------
+
+def test_async_llm_streams_without_step(setup, rng):
+    """The acceptance clause: AsyncLLM.stream() yields every token with
+    no caller-driven step() anywhere, token-identical to the synchronous
+    facade."""
+    cfg, params = setup
+    p = [list(rng.integers(0, cfg.vocab_size, n)) for n in (6, 4)]
+    with LLM(cfg, params, max_slots=2, max_len=32, seed=0) as llm:
+        r0 = llm.submit(p[0], 5)
+        r1 = llm.submit(p[1], 5)
+        ref = llm.drain()
+        want = [ref[r0].tokens, ref[r1].tokens]
+    with AsyncLLM(cfg, params, max_slots=2, max_len=32, seed=0) as allm:
+        h = allm.submit(p[0], 5)
+        got = list(allm.stream(p[1], 5))
+        assert got == want[1]
+        assert h.result(60).tokens == want[0]
+        assert h.done
+
+
+def test_async_llm_honors_gen_request_stream_callback(setup, rng):
+    """A GenRequest's own per-token callback fires on the async front
+    end too, alongside the handle's token queue."""
+    from repro.serving.api import GenRequest
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 5))
+    got = []
+    with AsyncLLM(cfg, params, max_slots=2, max_len=32, seed=0) as allm:
+        h = allm.submit(GenRequest(p, 4, stream=got.append))
+        out = h.result(60)
+    assert got == out.tokens and len(got) == 4
+
+
+def test_async_llm_concurrent_submitters(setup, rng):
+    """Many threads share one event loop; every handle resolves to the
+    same tokens the facade produces for that rid."""
+    cfg, params = setup
+    p = [list(rng.integers(0, cfg.vocab_size, 3 + n)) for n in range(4)]
+    with LLM(cfg, params, max_slots=2, max_len=32, seed=0) as llm:
+        rids = [llm.submit(pi, 4) for pi in p]
+        ref = llm.drain()
+        want = {r: ref[r].tokens for r in rids}
+    results = {}
+    with AsyncLLM(cfg, params, max_slots=2, max_len=32, seed=0) as allm:
+        def worker(pi):
+            h = allm.submit(pi, 4)
+            results[h.rid] = h.result(120).tokens
+        ts = [threading.Thread(target=worker, args=(pi,)) for pi in p]
+        for t in ts:
+            t.start()
+        for t in ts:
+            t.join()
+    # rids are assigned under the facade lock in submission order per
+    # thread scheduling; compare as multisets of token streams
+    assert sorted(results.values()) == sorted(want.values())
+
+
+def test_async_llm_close_semantics(setup, rng):
+    """close() drains by default; close(drain=False) abandons in-flight
+    requests — their handles raise, new submits refuse, and iteration
+    terminates instead of hanging."""
+    cfg, params = setup
+    p = list(rng.integers(0, cfg.vocab_size, 5))
+    # drain=True: the default close finishes in-flight work
+    allm = AsyncLLM(cfg, params, max_slots=1, max_len=64, seed=0)
+    h = allm.submit(p, 6)
+    allm.close()
+    assert h.done and len(h.result().tokens) == 6
+    allm.close()                                   # idempotent
+    # drain=False: abandoned handles fail fast, iterators terminate
+    allm = AsyncLLM(cfg, params, max_slots=1, max_len=64, seed=0)
+    h2 = allm.submit(p, 50)
+    it = iter(h2)
+    allm.close(drain=False)
+    with pytest.raises(RuntimeError, match="in flight"):
+        h2.result()
+    with pytest.raises(RuntimeError, match="in flight"):
+        list(it)
+    with pytest.raises(RuntimeError, match="closed"):
+        allm.submit(p, 2)
+
+
+def test_async_llm_surfaces_scheduler_stall(setup, rng):
+    """A stalled pool fails the in-flight handles instead of wedging the
+    loop thread."""
+    cfg, params = setup
+    with AsyncLLM(cfg, params, paged=True, page_size=8, n_pages=3,
+                  max_slots=2, max_len=64, seed=0) as allm:
+        h = allm.submit(list(rng.integers(0, cfg.vocab_size, 9)), 30)
+        with pytest.raises(RuntimeError, match="stalled"):
+            h.result(120)
+        with pytest.raises(RuntimeError, match="loop failed"):
+            allm.submit([1, 2, 3], 2)
+
+
+def test_async_llm_priority_jumps_queue(setup, rng):
+    """The event loop composes with scheduling policy: a high-priority
+    submit overtakes earlier long requests (by queue-jumping or by
+    preempting, depending on how far the loop got)."""
+    cfg, params = setup
+    p = [list(rng.integers(0, cfg.vocab_size, 5)) for _ in range(3)]
+    with AsyncLLM(cfg, params, max_slots=1, max_len=64, seed=0,
+                  policy="priority") as allm:
+        hs = [allm.submit(p[0], 20), allm.submit(p[1], 20)]
+        hi = allm.submit(p[2], 3, priority=9)
+        out = hi.result(300)
+        # 40 low-priority tokens cannot all be done when the 3-token
+        # high-priority request returns: it overtook at least one
+        assert not all(h.done for h in hs)
+        assert len(out.tokens) == 3
+        for h in hs:
+            assert len(h.result(300).tokens) == 20
+
+
+# ---------------------------------------------------------------------------
+# cross-step prefetch overlap
+# ---------------------------------------------------------------------------
+
+def test_decode_step_prefetch_overlap(setup, rng):
+    """Between a decode step's math and its sampling, the executor
+    re-drives the engine's wrap-around prefetch ring: the next step's
+    first module of every group is staged while the host tail drains."""
+    cfg, params = setup
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+    b = ContinuousBatcher(cfg, backend=hb, own_backend=True, max_slots=2,
+                          max_len=32)
+    b.submit(list(rng.integers(0, cfg.vocab_size, 5)), 4)
+    b.submit(list(rng.integers(0, cfg.vocab_size, 7)), 4)
+    steps = 0
+    while b.queue or b.active.any():
+        b.step()
+        steps += 1
+        eng = hb.engines["decode"]
+        if eng.manager is not None and (b.queue or b.active.any()):
+            # mid-serve, after the nudge: every group ring holds a staged
+            # (or staging) module for the NEXT step even though no linear
+            # is currently executing
+            for ring in eng.manager.rings.values():
+                assert any(s.name is not None for s in ring.slots)
+    assert hb.step_prefetches == steps
+    b.close()

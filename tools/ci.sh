@@ -109,4 +109,60 @@ hb.close()
 print("paged smoke OK:", [pout[p] for p in pids])
 EOF
 
+echo "== smoke: scheduler policies + preemption + AsyncLLM (tiny config) =="
+python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.api import AsyncLLM, LLM
+from repro.serving.backends import ResidentBackend
+from repro.serving.batcher import ContinuousBatcher
+
+cfg = get_config("tiny")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (6, 6, 5)]
+
+# page-tight priority scheduling: the late high-priority request preempts
+# a low-priority tenant (optimistic paging + host-swap resume) ...
+b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                      own_backend=True, max_slots=2, max_len=32,
+                      paged=True, page_size=8, n_pages=5, policy="priority")
+lo = [b.submit(p, 12) for p in prompts[:2]]
+for _ in range(3):
+    b.step()
+hi = b.submit(prompts[2], 3, priority=5)
+done_order = []
+while b.queue or b.active.any():
+    b.step()
+    done_order += [r.rid for r in b.requests.values()
+                   if r.done and r.rid not in done_order]
+out = {rid: r.generated for rid, r in b.requests.items()}
+assert done_order[0] == hi, done_order
+n_preempt = b.scheduler.preemptions
+assert n_preempt >= 1
+assert b.kv.free_pages == b.kv.usable_pages, "pages leaked"
+b.close()
+
+# ... and every request still matches its unpressured run token-for-token
+ref = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                        own_backend=True, max_slots=3, max_len=32)
+for rid, (p, n) in zip(lo + [hi], [(prompts[0], 12), (prompts[1], 12),
+                                   (prompts[2], 3)]):
+    ref.submit(p, n, rid=rid)
+assert ref.run_until_done() == out, "preempt/resume changed tokens"
+ref.close()
+
+# AsyncLLM: the event loop owns step(); stream() just yields
+with LLM(cfg, params, max_slots=2, max_len=32, seed=0) as llm:
+    want = [o.tokens for o in llm.generate([prompts[0]], max_new=4)]
+with AsyncLLM(cfg, params, max_slots=2, max_len=32, seed=0) as allm:
+    got = list(allm.stream(prompts[0], 4))
+assert got == want[0], (got, want)
+print("scheduler smoke OK: finish order", done_order,
+      "preemptions", n_preempt, "async stream", got)
+EOF
+
 echo "CI OK"
