@@ -1,7 +1,6 @@
 """Real threaded-engine measurement on this host: per-stream busy seconds
 for a HeteGen-offloaded OPT-125M decode (mechanism demo; the container is
 CPU-only so absolute numbers are not A10 numbers)."""
-from repro.benchmarks_shim import *  # noqa
 
 
 def run():

@@ -1,7 +1,6 @@
 """Kernel-level microbenchmarks: ref (XLA-compiled) wall time per call +
 theoretical bytes/flops per kernel shape (the Pallas kernels themselves
 are TPU-target; interpret mode is not a timing proxy)."""
-from repro.benchmarks_shim import *  # noqa
 
 
 def run():
@@ -65,4 +64,25 @@ def run():
     timeit("decode_paged_1024",
            lambda *t: ref.paged_decode_attention(*t),
            q, kp, vp, bt, lens, flops=flops)
+
+    # paged prefill: the ref oracle IS the gather fallback the Pallas
+    # kernel deleted (materialize every mapped page densely, then attend).
+    # Whole-shot at kv_offset 0 computes exactly dense causal flash, so
+    # the row pair prices the per-layer page gather the kernel's
+    # scalar-prefetch index maps avoid on TPU; the chunk row adds the
+    # mid-prompt shape chunked admission runs every step.
+    qf = jnp.asarray(rng.standard_normal((b, hq, s, d)), jnp.float32)
+    pf_flops = 2 * b * hq * s * s * d   # causal: half the rectangle, x4/2
+    timeit("prefill_dense_1024",
+           lambda *t: ref.flash_attention(*t, causal=True),
+           qf, kd, vd, flops=pf_flops)
+    timeit("prefill_paged_gather_1024",
+           lambda *t: ref.paged_prefill_attention(*t),
+           qf, kp, vp, bt, jnp.zeros((b,), jnp.int32), flops=pf_flops)
+    cs = 128                            # chunk_tokens of a mid-prompt chunk
+    qc = qf[:, :, -cs:]
+    offs = jnp.full((b,), s - cs, jnp.int32)
+    timeit("prefill_chunk_paged_gather_128",
+           lambda *t: ref.paged_prefill_attention(*t),
+           qc, kp, vp, bt, offs, flops=4 * b * hq * cs * s * d)
     return rows

@@ -5,7 +5,6 @@ linear, expressed as parameter bytes per second (the paper's convention:
 Reported for the paper's A10+Xeon rig (hardware model) AND measured on
 this host's CPU (real wall-clock GEMV) for calibration.
 """
-from repro.benchmarks_shim import *  # noqa
 
 
 def run():

@@ -1,6 +1,5 @@
 """Paper Fig. 2 — OPT-30B memory breakdown (batch 1, seq 512): linears
 dominate (>97%), motivating linear-only offload."""
-from repro.benchmarks_shim import *  # noqa
 
 
 def run():

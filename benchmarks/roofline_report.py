@@ -1,6 +1,5 @@
 """Roofline summary from the dry-run records (one row per single-pod cell:
 the three terms + dominant bound)."""
-from repro.benchmarks_shim import *  # noqa
 
 
 def run():

@@ -2,7 +2,6 @@
 (OPT-13B): CPU 97.8%, I/O 96.9%, Pin 72.4%, GPU 0.1% in the paper.
 Simulated on the A10 rig + really measured on this host's threaded engine.
 """
-from repro.benchmarks_shim import *  # noqa
 
 
 def run():

@@ -1,7 +1,6 @@
 """Paper Table 3 — ablations, relative decode throughput (paper: all=100%,
 no-hybrid 77.7%, no-async-manager 94.9%, no-alpha-benchmark 92.8%,
 no-module-scheduler 32.1%)."""
-from repro.benchmarks_shim import *  # noqa
 
 
 def run():

@@ -20,6 +20,7 @@ from repro.kernels import decode_attention as _dec
 from repro.kernels import flash_attention as _fa
 from repro.kernels import hete_matmul as _mm
 from repro.kernels import paged_attention as _paged
+from repro.kernels import paged_prefill as _paged_pf
 from repro.kernels import q8_matmul as _q8
 from repro.kernels import ref as _ref
 from repro.kernels import rmsnorm as _rn
@@ -99,6 +100,20 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
     return _paged.paged_decode_attention(
         q, k_pages, v_pages, block_tables, kv_len,
         k_scale=k_scale, v_scale=v_scale, softcap=softcap,
+        interpret=(m == "interpret"), **kw)
+
+
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, kv_offset, *,
+                            k_scale=None, v_scale=None, softcap=None,
+                            window=None, **kw):
+    m = _mode()
+    if m == "ref":
+        return _ref.paged_prefill_attention(
+            q, k_pages, v_pages, block_tables, kv_offset,
+            k_scale=k_scale, v_scale=v_scale, softcap=softcap, window=window)
+    return _paged_pf.paged_prefill_attention(
+        q, k_pages, v_pages, block_tables, kv_offset,
+        k_scale=k_scale, v_scale=v_scale, softcap=softcap, window=window,
         interpret=(m == "interpret"), **kw)
 
 

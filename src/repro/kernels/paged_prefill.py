@@ -1,0 +1,203 @@
+"""Paged flash-prefill: chunk attention through a block table.
+
+The chunked-prefill counterpart of :mod:`repro.kernels.paged_attention`:
+a query chunk of ``S`` tokens starting at logical position ``kv_offset``
+attends over everything already written to the slot's pages — all
+previously prefilled chunks plus the causal triangle of the chunk itself
+— without ever materializing the paged KV contiguously.  The grid is
+(batch*q_heads, q_blocks, kv_blocks) with kv innermost exactly as in
+:mod:`repro.kernels.flash_attention`; the K/V BlockSpec index maps
+dereference the block table (a scalar-prefetch operand) so each kv step
+DMAs one *physical* page, replacing the dense ``gather_pages`` copy the
+old fallback paid per layer.
+
+Mask layout: with per-batch ``kv_offset`` (the second scalar-prefetch
+operand next to the block table), query row r of the chunk sits at
+absolute position ``q_pos = kv_offset[b] + r`` while kv position is the
+page-local ``k_pos = kj * page_size + column``.  The causal mask
+``k_pos <= q_pos`` alone also covers the cache tail: the chunk's own K/V
+are written before attention, so ``kv_len = kv_offset + S`` and every
+position ``>= kv_len`` is above the last row's diagonal.  Pages past the
+written range may be unmapped (the allocator's trash page) — they are
+causally masked, contributing exact zeros to the online softmax, which
+keeps the result bitwise independent of the chunking.  Sliding windows
+add ``k_pos > q_pos - window``; fully-window-masked early pages are
+harmless because their (m = -inf, p = 1) contribution is annihilated by
+``alpha = 0`` at the first in-window page, and every row keeps at least
+its own diagonal position in-window.
+
+The q8 variant mirrors the decode kernel's: int8 pages plus
+per-(page, head, token) scale pages, dequantized in VMEM.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1.0e30
+
+
+def _prefill_kernel(offs_ref, bt_ref, q_ref, k_ref, v_ref, o_ref,
+                    m_ref, l_ref, acc_ref, *,
+                    scale, n_kv, page_size, block_q, hq, softcap, window):
+    _prefill_body(offs_ref, bt_ref, q_ref, k_ref, v_ref, None, None, o_ref,
+                  m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                  page_size=page_size, block_q=block_q, hq=hq,
+                  softcap=softcap, window=window)
+
+
+def _prefill_kernel_q8(offs_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                       o_ref, m_ref, l_ref, acc_ref, *,
+                       scale, n_kv, page_size, block_q, hq, softcap, window):
+    _prefill_body(offs_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, scale=scale, n_kv=n_kv,
+                  page_size=page_size, block_q=block_q, hq=hq,
+                  softcap=softcap, window=window)
+
+
+def _prefill_body(offs_ref, bt_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref,
+                  o_ref, m_ref, l_ref, acc_ref, *,
+                  scale, n_kv, page_size, block_q, hq, softcap, window):
+    bh = pl.program_id(0)
+    qi = pl.program_id(1)
+    kj = pl.program_id(2)
+
+    @pl.when(kj == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    off = offs_ref[bh // hq]
+    q_pos = off + qi * block_q + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, page_size), 0)
+    k_pos = kj * page_size + jax.lax.broadcasted_iota(
+        jnp.int32, (block_q, page_size), 1)
+
+    def body():
+        q = q_ref[0].astype(jnp.float32) * scale          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)               # (ps, d)
+        if ks_ref is not None:
+            k = k * ks_ref[0, 0].astype(jnp.float32)[:, None]
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        if softcap is not None:
+            s = softcap * jnp.tanh(s / softcap)
+        mask = k_pos <= q_pos
+        if window is not None:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)                   # (bq, ps)
+
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * alpha + jnp.sum(p, axis=-1, keepdims=True)
+        v = v_ref[0, 0]
+        if vs_ref is not None:
+            v = v.astype(jnp.float32) \
+                * vs_ref[0, 0].astype(jnp.float32)[:, None]
+        acc_ref[...] = acc_ref[...] * alpha + jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    # skip kv pages entirely above the q block's last diagonal — the
+    # bound is traced (it depends on the prefetched kv_offset), which
+    # pl.when handles fine
+    @pl.when(kj * page_size <= off + qi * block_q + block_q - 1)
+    def _():
+        body()
+
+    @pl.when(kj == n_kv - 1)
+    def _finish():
+        l = jnp.where(l_ref[...] == 0.0, 1.0, l_ref[...])
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def paged_prefill_attention(q: jax.Array, k_pages: jax.Array,
+                            v_pages: jax.Array, block_tables: jax.Array,
+                            kv_offset: jax.Array, *,
+                            k_scale: Optional[jax.Array] = None,
+                            v_scale: Optional[jax.Array] = None,
+                            softcap: Optional[float] = None,
+                            window: Optional[int] = None,
+                            block_q: int = 128,
+                            interpret: bool = False) -> jax.Array:
+    """q (B, Hq, S, D); k/v_pages (P, Hkv, page_size, D); block_tables
+    (B, n_blocks) int32; kv_offset (B,) int32 -> (B, Hq, S, D).
+
+    Query row r of batch b sits at absolute position ``kv_offset[b] + r``
+    and attends causally over logical kv positions [0, kv_offset[b] + r]
+    read through the block table.  The chunk's own K/V must already be
+    written to the pages (kv_len == kv_offset + S); table entries past
+    that range may point anywhere valid (e.g. the trash page).  With
+    ``k_scale``/``v_scale`` (P, Hkv, page_size) the pages are int8 and
+    dequantized per page inside VMEM.
+    """
+    b, hq, s, d = q.shape
+    _, hkv, ps, _ = k_pages.shape
+    nb = block_tables.shape[1]
+    group = hq // hkv
+    scale = 1.0 / math.sqrt(d)
+    q8 = k_scale is not None
+
+    def _round_up(x, m):
+        return (x + m - 1) // m * m
+
+    bq = min(block_q, _round_up(s, 8))
+    s_pad = _round_up(s, bq)
+    qf = q.reshape(b * hq, s, d)
+    if s_pad != s:
+        # pad rows run at positions past the chunk; their output is
+        # garbage sliced off below (the l==0 guard keeps them finite)
+        qf = jnp.pad(qf, ((0, 0), (0, s_pad - s), (0, 0)))
+
+    def kv_index(h, i, j, offs, bt):
+        return (bt[h // hq, j], (h % hq) // group, 0, 0)
+
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda h, i, j, offs, bt: (h, i, 0)),
+        pl.BlockSpec((1, 1, ps, d), kv_index),
+        pl.BlockSpec((1, 1, ps, d), kv_index),
+    ]
+    operands = [kv_offset.astype(jnp.int32), block_tables.astype(jnp.int32),
+                qf, k_pages, v_pages]
+    if q8:
+        def sc_index(h, i, j, offs, bt):
+            return (bt[h // hq, j], (h % hq) // group, 0)
+        in_specs += [pl.BlockSpec((1, 1, ps), sc_index),
+                     pl.BlockSpec((1, 1, ps), sc_index)]
+        operands += [k_scale, v_scale]
+        kern = _prefill_kernel_q8
+    else:
+        kern = _prefill_kernel
+    kernel = functools.partial(kern, scale=scale, n_kv=nb, page_size=ps,
+                               block_q=bq, hq=hq, softcap=softcap,
+                               window=window)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(b * hq, s_pad // bq, nb),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, bq, d),
+                               lambda h, i, j, offs, bt: (h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, d), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((b * hq, s_pad, d), q.dtype),
+        interpret=interpret,
+    )(*operands)
+    return out[:, :s].reshape(b, hq, s, d)

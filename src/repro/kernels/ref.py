@@ -125,6 +125,46 @@ def paged_decode_attention(q, k_pages, v_pages, block_tables, kv_len, *,
     return out.astype(q.dtype)
 
 
+def paged_prefill_attention(q, k_pages, v_pages, block_tables, kv_offset, *,
+                            k_scale=None, v_scale=None, softcap=None,
+                            window=None):
+    """q (B,Hq,S,D); k/v_pages (P,Hkv,ps,D); block_tables (B,nb);
+    kv_offset (B,).
+
+    Chunk prefill over a paged cache: query row r of batch b sits at
+    absolute position ``kv_offset[b] + r`` and attends causally over
+    logical kv positions [0, kv_offset[b] + r].  Gathers physical pages
+    into a contiguous cache and applies the masked softmax directly —
+    positions above the causal diagonal (which includes everything past
+    ``kv_offset + S``) never reach the softmax, so trash-page contents
+    are irrelevant.
+    """
+    b, hq, s, d = q.shape
+    k = gather_pages(k_pages, block_tables)
+    v = gather_pages(v_pages, block_tables)
+    if k_scale is not None:
+        k = k.astype(jnp.float32) \
+            * gather_page_scales(k_scale, block_tables)[..., None]
+        v = v.astype(jnp.float32) \
+            * gather_page_scales(v_scale, block_tables)[..., None]
+    hkv, t = k.shape[1], k.shape[2]
+    g = hq // hkv
+    qf = q.reshape(b, hkv, g, s, d).astype(jnp.float32)
+    sc = jnp.einsum("bkgsd,bktd->bkgst", qf, k.astype(jnp.float32))
+    sc = sc / math.sqrt(d)
+    if softcap is not None:
+        sc = softcap * jnp.tanh(sc / softcap)
+    qpos = kv_offset[:, None] + jnp.arange(s)[None, :]     # (B, s)
+    kpos = jnp.arange(t)
+    ok = kpos[None, None, :] <= qpos[:, :, None]           # (B, s, t)
+    if window is not None:
+        ok &= kpos[None, None, :] > qpos[:, :, None] - window
+    sc = jnp.where(ok[:, None, None], sc, -1e30)
+    p = jax.nn.softmax(sc, axis=-1)
+    o = jnp.einsum("bkgst,bktd->bkgsd", p, v.astype(jnp.float32))
+    return o.reshape(b, hq, s, d).astype(q.dtype)
+
+
 def rmsnorm(x, scale, *, eps=1e-6, plus_one=False):
     xf = x.astype(jnp.float32)
     var = jnp.mean(xf * xf, axis=-1, keepdims=True)

@@ -62,6 +62,13 @@ def main() -> None:
                     "(no caller-driven step())")
     ap.add_argument("--n-pages", type=int, default=None,
                     help="shrink the paged pool to provoke preemption")
+    ap.add_argument("--chunk-tokens", type=int, default=None,
+                    help="chunked prefill: admit long prompts at most "
+                    "this many tokens per step so a long admission "
+                    "cannot stall decode tenants")
+    ap.add_argument("--no-prefix-dedupe", action="store_true",
+                    help="disable admission-time page-aligned prompt "
+                    "prefix sharing (paged mode only)")
     ap.add_argument("--sampler", choices=("greedy", "temperature", "topk",
                                           "topp"), default="greedy")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -121,7 +128,9 @@ def main() -> None:
     llm_kw = dict(sampling=sampling, max_slots=slots,
                   max_len=args.prompt_len + args.max_new + 8,
                   paged=args.paged, page_size=args.page_size,
-                  n_pages=args.n_pages, policy=args.policy)
+                  n_pages=args.n_pages, policy=args.policy,
+                  chunk_tokens=args.chunk_tokens,
+                  prefix_dedupe=False if args.no_prefix_dedupe else None)
     # give the priority policy something to schedule: alternate priorities
     prio = (lambda i: i % 2) if args.policy == "priority" else (lambda i: 0)
 
@@ -164,7 +173,10 @@ def main() -> None:
     if "scheduler" in st:
         sc = st["scheduler"]
         print(f"scheduler: policy={sc['policy']} "
-              f"preemptions={sc['preemptions']}")
+              f"preemptions={sc['preemptions']} "
+              f"chunks={sc['chunks_planned']} "
+              f"dedupe_hits={sc['dedupe_hits']} "
+              f"(+{sc['dedupe_tokens']} tokens shared)")
     if "phase_alpha" in st:
         al = st["phase_alpha"]
         print("phase plans: " + "  ".join(

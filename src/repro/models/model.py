@@ -877,37 +877,27 @@ def _paged_write_q8(pages, scale_pages, new, block_tables, cur_len):
 def _paged_attend(cfg, q, k_pages, v_pages, block_tables, q_positions,
                   kv_len, window, k_scale=None, v_scale=None):
     """Attention over a paged cache.  Decode (s == 1, no window) runs the
-    paged flash-decode kernel — K/V are read through the block table at
-    HBM rate, never materialized contiguously.  Prefill (and windowed
-    layers, which the decode kernel does not mask) takes the gather
-    fallback: pages are assembled into a (B, Hkv, T, D) view and attended
-    with the shared masked-attention math — fine for the compute-bound
-    phase."""
-    from repro.kernels import ref as R
+    paged flash-decode kernel; everything else — prefill chunks starting
+    at any offset, and windowed layers at any width — runs the paged
+    flash-prefill kernel.  Both read K/V through the block table at HBM
+    rate: the cache is never gathered into a dense (B, Hkv, T, D) buffer.
+    """
+    from repro.kernels import ops as K
 
     b, s = q.shape[:2]
     lens = jnp.broadcast_to(jnp.asarray(kv_len, jnp.int32), (b,))
     if s == 1 and window is None:
-        from repro.kernels import ops as K
         out = K.paged_decode_attention(q[:, 0], k_pages, v_pages,
                                        block_tables, lens,
                                        k_scale=k_scale, v_scale=v_scale,
                                        softcap=cfg.attn_softcap)
         return out[:, None]
-    k_buf = R.gather_pages(k_pages, block_tables)
-    v_buf = R.gather_pages(v_pages, block_tables)
-    if k_scale is not None:
-        # dequantize in fp32, exactly as the paged kernel and its oracle
-        # do — prefill and decode must read the same KV values
-        k_buf = k_buf.astype(jnp.float32) \
-            * R.gather_page_scales(k_scale, block_tables)[..., None]
-        v_buf = v_buf.astype(jnp.float32) \
-            * R.gather_page_scales(v_scale, block_tables)[..., None]
-    kvpos = jnp.arange(k_buf.shape[2])
-    return L.attention(q, k_buf, v_buf, q_positions=q_positions,
-                       kv_positions=kvpos[None], kv_len=lens, causal=True,
-                       window=window, attn_softcap=cfg.attn_softcap,
-                       kv_format="bhtd")
+    offs = q_positions[:, 0].astype(jnp.int32)             # (B,)
+    out = K.paged_prefill_attention(jnp.swapaxes(q, 1, 2), k_pages, v_pages,
+                                    block_tables, offs,
+                                    k_scale=k_scale, v_scale=v_scale,
+                                    softcap=cfg.attn_softcap, window=window)
+    return jnp.swapaxes(out, 1, 2)
 
 
 def _update_kv(buf, new, cur_len, *, layout: str = "bthd"):

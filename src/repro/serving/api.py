@@ -130,6 +130,8 @@ class LLM:
                  policy: Union[str, SchedulerPolicy, None] = "fcfs",
                  optimistic: bool = True,
                  preempt_mode: Optional[str] = None,
+                 chunk_tokens: Optional[int] = None,
+                 prefix_dedupe: Optional[bool] = None,
                  seed: int = 0):
         if backend is None and params is None:
             raise ValueError("LLM needs params or a backend")
@@ -156,6 +158,8 @@ class LLM:
         self.policy = policy
         self.optimistic = optimistic
         self.preempt_mode = preempt_mode
+        self.chunk_tokens = chunk_tokens
+        self.prefix_dedupe = prefix_dedupe
         self.seed = seed
         self._base_key = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
@@ -177,7 +181,9 @@ class LLM:
                       kv_dtype=self.kv_dtype,
                       retune_hysteresis=self.retune_hysteresis,
                       policy=self.policy, optimistic=self.optimistic,
-                      preempt_mode=self.preempt_mode)
+                      preempt_mode=self.preempt_mode,
+                      chunk_tokens=self.chunk_tokens,
+                      prefix_dedupe=self.prefix_dedupe)
             if self._backend is None:
                 self._batcher = ContinuousBatcher(self.cfg, self._params,
                                                   **kw)
@@ -241,7 +247,7 @@ class LLM:
         if not reqs:
             return []
         busy = self._batcher is not None and (
-            self._batcher.queue or self._batcher.active.any())
+            self._batcher.queue or self._batcher.scheduler.resident())
         rect = (len({len(r.prompt) for r in reqs}) == 1
                 and len({r.max_new for r in reqs}) == 1
                 and not any(r.stream for r in reqs)
@@ -335,13 +341,16 @@ class LLM:
     def _step_or_stall(self) -> int:
         """One scheduler step that refuses to spin: an idle scheduler
         whose admission makes no progress can never make any (a queued
-        request wants more pages than the whole pool holds)."""
+        request wants more pages than the whole pool holds).  A resident
+        slot mid-chunked-prefill counts as progress even though it is not
+        decoding yet (step() legitimately returns 0 active slots then)."""
         b = self._batcher
-        idle_before = not b.active.any()
+        idle_before = not b.active.any() and not b.scheduler.resident()
         queued_before = len(b.queue)
         n = self.step()
         if n == 0 and b.queue and idle_before \
-                and len(b.queue) == queued_before:
+                and len(b.queue) == queued_before \
+                and not b.scheduler.resident():
             raise RuntimeError("scheduler stalled with queued requests")
         return n
 
@@ -394,7 +403,7 @@ class LLM:
         before = sum(len(r.generated) for r in b.requests.values())
         steps = 0
         for _ in range(max_steps):
-            if not b.queue and not b.active.any():
+            if not b.queue and not b.scheduler.resident():
                 break
             self._step_or_stall()
             steps += 1
@@ -464,6 +473,9 @@ class LLM:
                                "preemptions": sched.preemptions,
                                "waiting": len(sched.waiting),
                                "preempted": len(sched.preempted),
+                               "chunks_planned": sched.chunks_planned,
+                               "dedupe_hits": sched.dedupe_hits,
+                               "dedupe_tokens": sched.dedupe_tokens,
                                # the current queue's worst holdup — the
                                # starvation signal a fairness/aging
                                # policy keys off

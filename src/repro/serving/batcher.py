@@ -78,8 +78,8 @@ from repro.serving.kv_cache import slot_view
 from repro.serving.sampling import (SamplerConfig, SamplingParams, greedy,
                                     pack_sampling, request_key, sample_rows,
                                     step_key)
-from repro.serving.scheduler import (RequestState, Scheduler,
-                                     SchedulerPolicy)
+from repro.serving.scheduler import (PREFILLING, RequestState, RUNNING,
+                                     Scheduler, SchedulerPolicy)
 
 # back-compat: PR 3 exposed the queue entry as batcher.Request
 Request = RequestState
@@ -96,7 +96,9 @@ class ContinuousBatcher:
                  own_backend: Optional[bool] = None,
                  policy: Union[str, SchedulerPolicy, None] = "fcfs",
                  optimistic: bool = True,
-                 preempt_mode: Optional[str] = None):
+                 preempt_mode: Optional[str] = None,
+                 chunk_tokens: Optional[int] = None,
+                 prefix_dedupe: Optional[bool] = None):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
@@ -129,9 +131,16 @@ class ContinuousBatcher:
         # growth — everything except device work (docs/SERVING.md)
         self.scheduler = Scheduler(policy, max_slots, max_len, kv=self.kv,
                                    optimistic=optimistic,
-                                   preempt_mode=preempt_mode)
+                                   preempt_mode=preempt_mode,
+                                   chunk_tokens=chunk_tokens,
+                                   prefix_dedupe=prefix_dedupe)
         # per-slot lengths (vector 'len' drives per-slot scatter updates)
         self.cache["len"] = jnp.zeros((max_slots,), jnp.int32)
+        # dense chunked prefill accumulates each slot's KV in a private
+        # batch-1 cache (merged into the global cache only on the final
+        # chunk, so full-width decode's masked garbage writes can never
+        # land inside a half-prefilled slot row)
+        self._pending_dense: Dict[int, Dict] = {}
         self.tokens = jnp.zeros((max_slots,), jnp.int32)
         self._ids = itertools.count()
         self.retune_hysteresis = retune_hysteresis
@@ -192,7 +201,10 @@ class ContinuousBatcher:
         params, keys = [], []
         for s in slots:
             req = slot_req[s]
-            if req is None:
+            # a mid-prefill slot's decode row is masked garbage exactly
+            # like a vacant one — its real first token is sampled by the
+            # final chunk, after the status flips to running
+            if req is None or req.status == PREFILLING:
                 params.append(SamplingParams())
                 keys.append(jnp.zeros((2,), jnp.uint32))
             else:
@@ -204,7 +216,9 @@ class ContinuousBatcher:
             # mixed-kind sampler needs (greedy rows never draw entropy,
             # so this is exactly equivalent)
             return greedy(logits)
-        sig = tuple((s, -1 if slot_req[s] is None else slot_req[s].rid)
+        sig = tuple((s, -1 if slot_req[s] is None
+                     or slot_req[s].status == PREFILLING
+                     else slot_req[s].rid)
                     for s in slots)
         if sig != self._pack_sig:
             self._pack_sig = sig
@@ -240,6 +254,7 @@ class ContinuousBatcher:
             st.saved_kv = {k: np.asarray(v[ids])
                            for k, v in self.cache.items()
                            if k.startswith("pages_")}
+        self._pending_dense.pop(st.slot, None)
         self.cache["len"] = self.cache["len"].at[st.slot].set(0)
         st.slot = None
 
@@ -309,6 +324,103 @@ class ContinuousBatcher:
                 self.cache[key] = one[key]
         return logits
 
+    def _start_batch(self, sts: List[RequestState]) -> None:
+        """Admit several same-length fresh requests in ONE prefill call
+        instead of a batch-1 Python loop.  Attention rows are independent,
+        so the batched call is token-identical to per-slot admission —
+        it just amortizes the weight streaming (the whole point on an
+        offload backend, where prefill cost is dominated by moving
+        weights over the PCIe link once per call)."""
+        slots = [st.slot for st in sts]
+        toks = jnp.asarray([st.prompt + st.generated for st in sts],
+                           jnp.int32)
+        n = toks.shape[1]
+        if self.paged:
+            self.cache["block_tables"] = self.kv.device_block_tables()
+            self.scheduler.tables_dirty = False
+            view = {k: v for k, v in self.cache.items()
+                    if k.startswith("pages_")}
+            view["block_tables"] = self.cache["block_tables"][
+                jnp.asarray(slots)]
+            view["len"] = jnp.zeros((), jnp.int32)
+            view, logits = self.backend.prefill({"tokens": toks}, view)
+            for key in view:
+                if key.startswith("pages_"):
+                    self.cache[key] = view[key]
+        else:
+            axis = self.backend.cache_batch_axis
+            grp = self.backend.init_cache(len(sts), self.max_len)
+            grp, logits = self.backend.prefill({"tokens": toks}, grp)
+            for key in self.cache:
+                if key == "len":
+                    continue
+                glob = self.cache[key]
+                if glob.ndim == 0 or glob.shape == ():
+                    continue
+                for i, slot in enumerate(slots):
+                    row = jax.lax.dynamic_slice_in_dim(grp[key], i, 1,
+                                                       axis=axis)
+                    glob = jax.lax.dynamic_update_slice_in_dim(
+                        glob, row.astype(glob.dtype), slot, axis=axis)
+                self.cache[key] = glob
+        firsts = self._sample_slot_rows(logits, slots)
+        for i, st in enumerate(sts):
+            self.cache["len"] = self.cache["len"].at[st.slot].set(n)
+            self.tokens = self.tokens.at[st.slot].set(firsts[i])
+            st.generated.append(int(firsts[i]))
+            self._maybe_finish(st)
+
+    def _prefill_chunk(self, st: RequestState) -> None:
+        """Advance one chunk of a chunked prefill: run tokens
+        ``[prefill_cursor, prefill_target)`` through ``backend.prefill``
+        at the right KV offset.  Intermediate chunks only write KV; the
+        final chunk samples the request's first token and flips it to
+        running, so the slot joins this same step's decode — exactly
+        :meth:`_start`'s semantics, just spread over several steps."""
+        slot = st.slot
+        start, end = st.prefill_cursor, st.prefill_target
+        seq = st.prompt + st.generated
+        n = len(seq)
+        toks = jnp.asarray([seq[start:end]], jnp.int32)
+        if self.paged:
+            self.cache["block_tables"] = self.kv.device_block_tables()
+            self.scheduler.tables_dirty = False
+            one = slot_view(self.cache, slot, length=start)
+            one, logits = self.backend.prefill({"tokens": toks}, one)
+            for key in one:
+                if key.startswith("pages_"):
+                    self.cache[key] = one[key]
+        else:
+            one_cache = self._pending_dense.get(slot)
+            if one_cache is None:
+                one_cache = self.backend.init_cache(1, self.max_len)
+            one_cache, logits = self.backend.prefill({"tokens": toks},
+                                                     one_cache)
+            self._pending_dense[slot] = one_cache
+        st.prefill_cursor = end
+        if end < n:
+            return
+        # final chunk — merge the private dense cache into the slot row
+        # (paged chunks scattered straight into the slot's pages)
+        if not self.paged:
+            one_cache = self._pending_dense.pop(slot)
+            axis = self.backend.cache_batch_axis
+            for key in self.cache:
+                if key == "len":
+                    continue
+                glob = self.cache[key]
+                if glob.ndim == 0 or glob.shape == ():
+                    continue
+                self.cache[key] = jax.lax.dynamic_update_slice_in_dim(
+                    glob, one_cache[key].astype(glob.dtype), slot,
+                    axis=axis)
+        st.status = RUNNING            # before sampling: the row is real
+        first = self._sample_slot_rows(logits, [slot])
+        self.cache["len"] = self.cache["len"].at[slot].set(n)
+        self.tokens = self.tokens.at[slot].set(first[0])
+        st.generated.append(int(first[0]))
+        self._maybe_finish(st)
+
     def _maybe_finish(self, st: RequestState) -> None:
         if len(st.generated) >= st.max_new or \
                 (st.eos is not None and st.generated
@@ -328,8 +440,22 @@ class ContinuousBatcher:
         plan = self.scheduler.plan()
         for st in plan.preempt:
             self._apply_preempt(st)
+        # group same-length fresh admissions into one prefill call; swap
+        # restores and odd lengths keep the batch-1 path
+        fresh: Dict[int, List[RequestState]] = {}
         for st in plan.start:
-            self._start(st)
+            if st.saved_kv is not None:
+                self._start(st)
+            else:
+                fresh.setdefault(
+                    len(st.prompt) + len(st.generated), []).append(st)
+        for sts in fresh.values():
+            if len(sts) == 1:
+                self._start(sts[0])
+            else:
+                self._start_batch(sts)
+        for st in plan.prefill:
+            self._prefill_chunk(st)
         if self.paged and self.scheduler.tables_dirty:
             # page growth / release since the last export (admission
             # prefills re-export on their own)
@@ -408,7 +534,9 @@ class ContinuousBatcher:
 
     def run_until_done(self, max_steps: int = 10_000) -> Dict[int, List[int]]:
         for _ in range(max_steps):
-            if not self.queue and not self.active.any():
+            # resident() (not active) — a slot mid-chunked-prefill is not
+            # decoding yet but still owes work
+            if not self.queue and not self.scheduler.resident():
                 break
             self.step()
         return {rid: r.generated for rid, r in self.requests.items()}

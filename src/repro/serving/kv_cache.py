@@ -163,28 +163,45 @@ class PagedKVCache:
         self._tables[slot, :] = TRASH_PAGE
         self._n_blocks[slot] = 0
 
-    def fork(self, cache: Dict, src_slot: int, dst_slot: int,
-             n_tokens: int) -> Dict:
-        """Alias ``src_slot``'s first ``n_tokens`` into ``dst_slot``.
-
-        Fully-covered pages are shared by reference (ref-count bump, no
-        data movement); the trailing partial page — the only one a future
-        append could write into — is deep-copied into a fresh page, so no
-        copy-on-write machinery is needed on the decode path.  Returns
-        the cache dict (with the partial-page copies applied).
-        """
+    def fork_aligned(self, src_slot: int, dst_slot: int,
+                     n_tokens: int) -> None:
+        """Alias ``src_slot``'s first ``n_tokens`` (a multiple of
+        ``page_size``) into ``dst_slot`` by reference — pure metadata:
+        ref-count bumps and table writes, no page data moves.  This is
+        the admission-time prefix-dedupe primitive: page-aligned shared
+        prefixes are immutable (prefill only ever appends past them), so
+        aliasing is always safe without copy-on-write."""
         if self._n_blocks[dst_slot]:
             raise ValueError(f"dst slot {dst_slot} still holds pages")
         n_full, partial = divmod(n_tokens, self.page_size)
-        if n_full + (1 if partial else 0) > int(self._n_blocks[src_slot]):
+        if partial:
+            raise ValueError(
+                f"fork_aligned needs page-aligned n_tokens, got {n_tokens}")
+        if n_full > int(self._n_blocks[src_slot]):
             raise ValueError("fork extends past src slot's mapped pages")
-        if partial and not self._free:
-            raise PagesExhausted("no free page for the partial prefix page")
         for j in range(n_full):
             pid = int(self._tables[src_slot, j])
             self._ref[pid] += 1
             self._tables[dst_slot, j] = pid
         self._n_blocks[dst_slot] = n_full
+
+    def fork(self, cache: Dict, src_slot: int, dst_slot: int,
+             n_tokens: int) -> Dict:
+        """Alias ``src_slot``'s first ``n_tokens`` into ``dst_slot``.
+
+        Fully-covered pages are shared by reference (via
+        :meth:`fork_aligned` — ref-count bump, no data movement); the
+        trailing partial page — the only one a future append could write
+        into — is deep-copied into a fresh page, so no copy-on-write
+        machinery is needed on the decode path.  Returns the cache dict
+        (with the partial-page copies applied).
+        """
+        n_full, partial = divmod(n_tokens, self.page_size)
+        if n_full + (1 if partial else 0) > int(self._n_blocks[src_slot]):
+            raise ValueError("fork extends past src slot's mapped pages")
+        if partial and not self._free:
+            raise PagesExhausted("no free page for the partial prefix page")
+        self.fork_aligned(src_slot, dst_slot, n_full * self.page_size)
         if partial:
             src_pid = int(self._tables[src_slot, n_full])
             dst_pid = self._free.pop()
@@ -205,12 +222,14 @@ class PagedKVCache:
         return int(self._ref[page_id])
 
 
-def slot_view(cache: Dict, slot: int) -> Dict:
+def slot_view(cache: Dict, slot: int, length: int = 0) -> Dict:
     """A batch-1 view of a paged cache for admission prefill: the pools
     are shared (writes scatter into the slot's mapped pages), only the
-    block-table row and length are sliced — no buffer copies."""
+    block-table row and length are sliced — no buffer copies.
+    ``length`` is the slot's already-materialized KV length (non-zero when
+    continuing a chunked prefill mid-prompt)."""
     one = {k: v for k, v in cache.items()
            if k.startswith("pages_")}
     one["block_tables"] = cache["block_tables"][slot:slot + 1]
-    one["len"] = jnp.zeros((), jnp.int32)
+    one["len"] = jnp.asarray(length, jnp.int32).reshape(())
     return one

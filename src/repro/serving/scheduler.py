@@ -58,6 +58,7 @@ tokens of progress.
 from __future__ import annotations
 
 import dataclasses
+import hashlib
 from typing import Dict, List, Optional, Protocol, Union, runtime_checkable
 
 import jax
@@ -68,6 +69,7 @@ from repro.serving.sampling import SamplingParams
 
 WAITING = "waiting"
 RUNNING = "running"
+PREFILLING = "prefilling"
 PREEMPTED = "preempted"
 FINISHED = "finished"
 
@@ -97,6 +99,17 @@ class RequestState:
     swap_block_ids: Optional[List[int]] = None
     saved_len: int = 0
     saved_kv: Optional[Dict[str, np.ndarray]] = None
+    # chunked-prefill state (status == PREFILLING): tokens of
+    # prompt + generated already written to KV, and the end the current
+    # plan's chunk must reach (set by Scheduler.plan, consumed by the
+    # executor which advances the cursor after prefilling)
+    prefill_cursor: int = 0
+    prefill_target: int = 0
+    # prefix-dedupe state: cumulative hashes of the prompt's full pages
+    # (computed at submit) and how many tokens were forked from a shared
+    # prefix at admission instead of prefilled
+    prefix_hashes: Optional[List[bytes]] = None
+    forked_len: int = 0
 
     @property
     def done(self) -> bool:
@@ -125,10 +138,18 @@ class StepPlan:
     executor restores saved KV (``saved_kv`` set) or prefills
     ``prompt + generated`` (fresh admissions and recompute resumes — for
     a fresh request ``generated`` is empty, so the two are one code
-    path)."""
+    path).
+
+    ``prefill`` entries are chunked admissions (status ``prefilling``):
+    the executor prefills tokens ``[prefill_cursor, prefill_target)``
+    into the slot's already-mapped pages and advances the cursor; on the
+    final chunk (target == prompt + generated) it samples the first
+    token and flips the request to ``running`` so the slot joins that
+    same step's decode."""
 
     preempt: List[RequestState] = dataclasses.field(default_factory=list)
     start: List[RequestState] = dataclasses.field(default_factory=list)
+    prefill: List[RequestState] = dataclasses.field(default_factory=list)
 
 
 @runtime_checkable
@@ -249,6 +270,20 @@ def get_policy(policy: Union[str, SchedulerPolicy, None]) -> SchedulerPolicy:
     return policy
 
 
+def _prefix_hashes(prompt: List[int], page_size: int) -> List[bytes]:
+    """Cumulative digests of the prompt's *full* pages: entry j covers
+    tokens [0, (j+1)*page_size).  Chained, so equal j-th entries imply the
+    whole prefix matches — one comparison finds the longest shared
+    page-aligned prefix at admission."""
+    out: List[bytes] = []
+    h = hashlib.sha256()
+    for j in range(len(prompt) // page_size):
+        page = prompt[j * page_size:(j + 1) * page_size]
+        h.update(np.asarray(page, np.int64).tobytes())
+        out.append(h.digest())
+    return out
+
+
 class Scheduler:
     """Owns who runs: queues, the slot table, and page accounting.
 
@@ -264,7 +299,9 @@ class Scheduler:
                  max_slots: int, max_len: int, *,
                  kv: Optional[PagedKVCache] = None,
                  optimistic: bool = True,
-                 preempt_mode: Optional[str] = None):
+                 preempt_mode: Optional[str] = None,
+                 chunk_tokens: Optional[int] = None,
+                 prefix_dedupe: Optional[bool] = None):
         self.policy = get_policy(policy)
         self.max_slots = max_slots
         self.max_len = max_len
@@ -277,11 +314,20 @@ class Scheduler:
         if preempt_mode == "swap" and kv is None:
             raise ValueError("preempt_mode='swap' needs a paged cache")
         self.preempt_mode = preempt_mode
+        if chunk_tokens is not None and chunk_tokens < 1:
+            raise ValueError(f"chunk_tokens must be >= 1, got {chunk_tokens}")
+        self.chunk_tokens = chunk_tokens
+        # prefix dedupe needs page-aliasing: default on for paged serving
+        self.prefix_dedupe = (kv is not None if prefix_dedupe is None
+                              else bool(prefix_dedupe) and kv is not None)
         self.requests: Dict[int, RequestState] = {}
         self.waiting: List[RequestState] = []
         self.preempted: List[RequestState] = []
         self.slot_req: List[Optional[RequestState]] = [None] * max_slots
         self.preemptions = 0           # total eviction events
+        self.chunks_planned = 0        # chunked-prefill chunks emitted
+        self.dedupe_hits = 0           # admissions that forked a prefix
+        self.dedupe_tokens = 0         # prompt tokens never re-prefilled
         self.tables_dirty = False      # block tables changed since export
         self._arrivals = 0
 
@@ -292,10 +338,22 @@ class Scheduler:
         return self.waiting + self.preempted
 
     def running(self) -> List[RequestState]:
+        """Slots decoding this step (excludes mid-prefill slots)."""
+        return [st for st in self.slot_req
+                if st is not None and st.status == RUNNING]
+
+    def prefilling(self) -> List[RequestState]:
+        """Slots mid-chunked-prefill: they hold pages but do not decode."""
+        return [st for st in self.slot_req
+                if st is not None and st.status == PREFILLING]
+
+    def resident(self) -> List[RequestState]:
+        """Every slot holder — running plus prefilling."""
         return [st for st in self.slot_req if st is not None]
 
     def active_mask(self) -> np.ndarray:
-        return np.asarray([st is not None for st in self.slot_req], bool)
+        return np.asarray([st is not None and st.status == RUNNING
+                           for st in self.slot_req], bool)
 
     # -- intake / completion -------------------------------------------
     def submit(self, st: RequestState) -> None:
@@ -306,6 +364,8 @@ class Scheduler:
         st.status = WAITING
         if st.sampling.logprobs is not None and st.logprobs is None:
             st.logprobs = []
+        if self.prefix_dedupe and st.prefix_hashes is None:
+            st.prefix_hashes = _prefix_hashes(st.prompt, self.kv.page_size)
         self.requests[st.rid] = st
         self.waiting.append(st)
 
@@ -334,6 +394,11 @@ class Scheduler:
             for st in reversed(self.policy.preempt_order(self.running())):
                 if st.status == RUNNING:
                     self._grow(st, out)
+        # advance in-flight chunked prefills before admitting anything new:
+        # a half-prefilled slot that stops getting chunks is pure waste
+        for st in self.prefilling():
+            if st.status == PREFILLING and st not in out.preempt:
+                self._plan_chunk(st, out)
         for st in self.policy.admit_order(list(self.pending)):
             # a request preempted in THIS plan keeps its turn for next
             # step — resuming it immediately would just thrash
@@ -347,11 +412,17 @@ class Scheduler:
 
     # -- internals ------------------------------------------------------
     def _preempt(self, victim: RequestState, out: StepPlan) -> None:
+        # a mid-prefill victim has sampled nothing: recompute semantics
+        # are exact and free of swap bookkeeping — drop the pages, reset
+        # the cursor, re-prefill (chunked again) on re-admission
+        mid_prefill = victim.status == PREFILLING
         victim.status = PREEMPTED
         victim.preemptions += 1
         self.preemptions += 1
+        victim.prefill_cursor = 0
+        victim.forked_len = 0
         if self.kv is not None:
-            if self.preempt_mode == "swap":
+            if self.preempt_mode == "swap" and not mid_prefill:
                 n_blocks = self.kv.blocks_for(victim.kv_len)
                 victim.swap_block_ids = \
                     self.kv.mapped_pages(victim.slot)[:n_blocks]
@@ -367,7 +438,14 @@ class Scheduler:
     def _grow(self, st: RequestState, out: StepPlan) -> bool:
         """Map the page covering ``st``'s next decode position, evicting
         victims (possibly ``st`` itself) under page pressure."""
-        target = min(st.kv_len + 1, self.max_len)
+        return self._grow_to(st, min(st.kv_len + 1, self.max_len), out)
+
+    def _grow_to(self, st: RequestState, target: int,
+                 out: StepPlan) -> bool:
+        """Map pages so ``st`` covers ``target`` positions, evicting
+        victims (possibly ``st`` itself) under page pressure.  Candidates
+        are every slot holder — a mid-prefill slot's pages are as
+        reclaimable (by recompute) as a decoding slot's."""
         while True:
             try:
                 self.kv.alloc(st.slot, target)
@@ -375,7 +453,7 @@ class Scheduler:
                 return True
             except PagesExhausted:
                 pass
-            cands = [r for r in self.running() if r.status == RUNNING]
+            cands = self.resident()
             victims = self.policy.preempt_order(cands)
             v = victims[0]             # cands always contains st itself
             if v is st and len(cands) == 1:
@@ -389,18 +467,72 @@ class Scheduler:
             if v is st:
                 return False           # sit out; resume when pages free
 
-    def _admit_need_tokens(self, st: RequestState) -> int:
+    def _chunk_end(self, st: RequestState) -> int:
+        """Where the next prefill chunk stops: cursor + chunk_tokens,
+        capped at the full prompt + generated (recompute resumes replay
+        generated tokens through the same chunked path)."""
+        n = len(st.prompt) + len(st.generated)
+        if self.chunk_tokens is None:
+            return n                   # dedupe tail: one chunk to the end
+        return min(st.prefill_cursor + self.chunk_tokens, n)
+
+    def _plan_chunk(self, st: RequestState, out: StepPlan) -> None:
+        """Emit the next chunk of an in-flight chunked prefill.  The
+        final chunk maps one extra position (the slot joins that step's
+        decode, mirroring :meth:`_admit_need_tokens`'s +1)."""
+        end = self._chunk_end(st)
+        n = len(st.prompt) + len(st.generated)
+        if self.optimistic:
+            target = min(end + 1, self.max_len) if end == n else end
+            if not self._grow_to(st, target, out):
+                return                 # self-preempted under pressure
+        st.prefill_target = end
+        self.chunks_planned += 1
+        out.prefill.append(st)
+
+    def _admit_need_tokens(self, st: RequestState, shared_len: int,
+                           chunked: bool) -> int:
         """KV positions an admission must map up front."""
         if not self.optimistic:
             # classic reservation: everything the request could ever want
             # (max_new is the request's total budget, resumes included)
             return min(len(st.prompt) + st.max_new, self.max_len)
         if st.swap_block_ids is not None:
-            restored = st.saved_len
-        else:
-            restored = len(st.prompt) + len(st.generated)
+            # +1: a restored request joins this same step's decode
+            return min(st.saved_len + 1, self.max_len)
+        if chunked:
+            # first chunk only; later chunks grow step by step
+            return min(shared_len + self.chunk_tokens, self.max_len)
+        n = len(st.prompt) + len(st.generated)
         # +1: a started request joins this same step's decode
-        return min(restored + 1, self.max_len)
+        return min(n + 1, self.max_len)
+
+    def _dedupe_probe(self, st: RequestState):
+        """Longest page-aligned prompt prefix already materialized in a
+        resident slot: returns (shared tokens, source request).  Only
+        *full* pages are shared (aliasing needs immutability) and at
+        least one tail token is always left to prefill, so the admission
+        produces first-token logits."""
+        if not self.prefix_dedupe or st.swap_block_ids is not None \
+                or not st.prefix_hashes:
+            return 0, None
+        ps = self.kv.page_size
+        n = len(st.prompt) + len(st.generated)
+        best_j, best_src = 0, None
+        for src in self.resident():
+            if not src.prefix_hashes:
+                continue
+            limit = len(src.prefix_hashes)
+            if src.status == PREFILLING:
+                # only pages the cursor has fully written are shareable
+                limit = min(limit, src.prefill_cursor // ps)
+            limit = min(limit, len(st.prefix_hashes), (n - 1) // ps)
+            for j in range(limit, best_j, -1):
+                # chained digests: one equality implies the whole prefix
+                if st.prefix_hashes[j - 1] == src.prefix_hashes[j - 1]:
+                    best_j, best_src = j, src
+                    break
+        return best_j * ps, best_src
 
     def _free_slot(self) -> Optional[int]:
         for i, occ in enumerate(self.slot_req):
@@ -409,8 +541,19 @@ class Scheduler:
         return None
 
     def _try_admit(self, st: RequestState, out: StepPlan) -> bool:
+        n = len(st.prompt) + len(st.generated)
+        shared_len, src = self._dedupe_probe(st)
+        chunked = (self.chunk_tokens is not None
+                   and st.swap_block_ids is None
+                   and n - shared_len > self.chunk_tokens)
+        # any admission that does not land fully-materialized goes through
+        # the prefilling state: chunked prompts, and dedupe hits (which
+        # prefill only the tail past the forked prefix)
+        prefilling = chunked or shared_len > 0
+        need_tokens = self._admit_need_tokens(st, shared_len, chunked)
         need_blocks = 0 if self.kv is None \
-            else self.kv.blocks_for(self._admit_need_tokens(st))
+            else self.kv.blocks_for(need_tokens) \
+            - self.kv.blocks_for(shared_len)
         slot = self._free_slot()
         avail = None if self.kv is None else self.kv.free_pages
         victims: List[RequestState] = []
@@ -419,9 +562,11 @@ class Scheduler:
             # doomed admission preempts nobody; requests started earlier
             # in THIS plan are never victims — they have not prefilled
             # yet, and appearing in both start and preempt would hand the
-            # executor a contradiction
+            # executor a contradiction.  The dedupe source is spared too:
+            # evicting it would free the pages we are about to alias.
             cands = [v for v in self.policy.preempt_order(self.running())
                      if v.status == RUNNING and v not in out.start
+                     and v is not src
                      and self.policy.may_preempt(st, v)]
             have_slot = slot is not None
             for v in cands:
@@ -438,12 +583,17 @@ class Scheduler:
             self._preempt(v, out)
         if slot is None:
             slot = victims[0].slot
-        if self.kv is not None and need_blocks:
+        if self.kv is not None:
+            if shared_len:
+                self.kv.fork_aligned(src.slot, slot, shared_len)
+                self.tables_dirty = True
             try:
-                self.kv.alloc(slot, self._admit_need_tokens(st))
+                self.kv.alloc(slot, need_tokens)
             except PagesExhausted:
                 # shared (forked) pages can make a victim's mapped count
                 # an over-estimate of what freeing reclaims
+                if shared_len:
+                    self.kv.free(slot)   # undo the fork's aliases
                 return False
             self.tables_dirty = True
         if st in self.waiting:
@@ -451,9 +601,18 @@ class Scheduler:
         if st in self.preempted:
             self.preempted.remove(st)
         st.slot = slot
-        st.status = RUNNING
         st.resumed_at = len(st.generated)
         st.wait_steps = 0
         self.slot_req[slot] = st
-        out.start.append(st)
+        if prefilling:
+            st.status = PREFILLING
+            st.prefill_cursor = shared_len
+            st.forked_len = shared_len
+            if shared_len:
+                self.dedupe_hits += 1
+                self.dedupe_tokens += shared_len
+            self._plan_chunk(st, out)  # first chunk rides this same plan
+        else:
+            st.status = RUNNING
+            out.start.append(st)
         return True

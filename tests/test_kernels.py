@@ -175,6 +175,104 @@ def test_paged_decode_attention_q8(rng):
     np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
 
 
+@pytest.mark.parametrize("hq,hkv", [(4, 2), (8, 1), (4, 4)])
+def test_paged_prefill_attention(rng, hq, hkv):
+    """Whole-shot paged prefill (kv_offset 0) == paged oracle == dense
+    causal flash attention: block-table indirection changes layout only."""
+    b, s, d, ps = 2, 128, 64, 16
+    q = _rand(rng, (b, hq, s, d))
+    k = _rand(rng, (b, hkv, s, d))
+    v = _rand(rng, (b, hkv, s, d))
+    kp, vp, bt = _paged_pool(rng, k, v, ps)
+    offs = jnp.zeros((b,), jnp.int32)
+    want_dense = ref.flash_attention(q, k, v, causal=True)
+    want = ref.paged_prefill_attention(q, kp, vp, bt, offs)
+    got = ops.paged_prefill_attention(q, kp, vp, bt, offs, block_q=32)
+    np.testing.assert_allclose(want, want_dense, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_attention_chunk_offsets(rng):
+    """A chunk starting mid-sequence (per-row kv_offset, non-dividing
+    length) attends to every previously-written page plus its own causal
+    triangle — matching rows [off, off+s) of dense full-sequence flash."""
+    b, hq, hkv, t, d, ps, s = 2, 4, 2, 160, 32, 16, 37
+    q_full = _rand(rng, (b, hq, t, d))
+    k = _rand(rng, (b, hkv, t, d))
+    v = _rand(rng, (b, hkv, t, d))
+    kp, vp, bt = _paged_pool(rng, k, v, ps)
+    offs = jnp.asarray([40, 103], jnp.int32)     # page-unaligned second row
+    q = jnp.stack([q_full[i, :, int(o):int(o) + s]
+                   for i, o in enumerate(offs)])
+    full = ref.flash_attention(q_full, k, v, causal=True)
+    want_rows = jnp.stack([full[i, :, int(o):int(o) + s]
+                           for i, o in enumerate(offs)])
+    want = ref.paged_prefill_attention(q, kp, vp, bt, offs)
+    got = ops.paged_prefill_attention(q, kp, vp, bt, offs, block_q=32)
+    np.testing.assert_allclose(want, want_rows, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_attention_trash_tail(rng):
+    """Pages past the chunk's last position hold garbage (the trash page
+    and never-written pool rows) — the causal mask must exclude them, so
+    corrupting them cannot change the output."""
+    b, hq, hkv, t, d, ps, s = 1, 4, 2, 128, 32, 16, 21
+    q = _rand(rng, (b, hq, s, d))
+    k = _rand(rng, (b, hkv, t, d))
+    v = _rand(rng, (b, hkv, t, d))
+    kp, vp, bt = _paged_pool(rng, k, v, ps)
+    offs = jnp.asarray([30], jnp.int32)
+    base = ops.paged_prefill_attention(q, kp, vp, bt, offs, block_q=32)
+    # poison everything past kv_len = off + s
+    end_page = -(-int(offs[0] + s) // ps)
+    poison_ids = np.asarray(bt)[0, end_page:]
+    kp2 = np.array(kp)
+    vp2 = np.array(vp)
+    kp2[poison_ids] = np.nan
+    vp2[poison_ids] = np.nan
+    got = ops.paged_prefill_attention(q, jnp.asarray(kp2), jnp.asarray(vp2),
+                                      bt, offs, block_q=32)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(base))
+
+
+@pytest.mark.parametrize("window,softcap", [(24, None), (None, 20.0)])
+def test_paged_prefill_attention_window_softcap(rng, window, softcap):
+    b, hq, hkv, t, d, ps, s = 2, 4, 2, 128, 32, 16, 32
+    q = _rand(rng, (b, hq, s, d))
+    k = _rand(rng, (b, hkv, t, d))
+    v = _rand(rng, (b, hkv, t, d))
+    kp, vp, bt = _paged_pool(rng, k, v, ps)
+    offs = jnp.asarray([0, 77], jnp.int32)
+    got = ops.paged_prefill_attention(q, kp, vp, bt, offs, window=window,
+                                      softcap=softcap, block_q=32)
+    want = ref.paged_prefill_attention(q, kp, vp, bt, offs, window=window,
+                                       softcap=softcap)
+    np.testing.assert_allclose(got, want, rtol=2e-5, atol=2e-5)
+
+
+def test_paged_prefill_attention_q8(rng):
+    """int8 pages with per-(page, head, token) scales dequantize in the
+    kernel body exactly as the q8 oracle does after gathering."""
+    b, hq, hkv, t, d, ps, s = 2, 4, 2, 128, 32, 16, 19
+    n_pages = 1 + b * (t // ps)
+    q = _rand(rng, (b, hq, s, d))
+    k8 = jnp.asarray(rng.integers(-127, 127, (n_pages, hkv, ps, d)),
+                     jnp.int8)
+    v8 = jnp.asarray(rng.integers(-127, 127, (n_pages, hkv, ps, d)),
+                     jnp.int8)
+    ks = jnp.abs(_rand(rng, (n_pages, hkv, ps))) * 0.01
+    vs = jnp.abs(_rand(rng, (n_pages, hkv, ps))) * 0.01
+    bt = jnp.asarray(rng.permutation(np.arange(1, n_pages)).reshape(b, -1),
+                     jnp.int32)
+    offs = jnp.asarray([16, 55], jnp.int32)
+    got = ops.paged_prefill_attention(q, k8, v8, bt, offs,
+                                      k_scale=ks, v_scale=vs, block_q=32)
+    want = ref.paged_prefill_attention(q, k8, v8, bt, offs,
+                                       k_scale=ks, v_scale=vs)
+    np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
 @pytest.mark.parametrize("shape", [(4, 128), (2, 33, 128), (3, 5, 7, 256)])
 @pytest.mark.parametrize("plus_one", [False, True])
 def test_rmsnorm(rng, shape, plus_one):

@@ -457,3 +457,138 @@ def test_decode_step_prefetch_overlap(setup, rng):
                 assert any(s.name is not None for s in ring.slots)
     assert hb.step_prefetches == steps
     b.close()
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("paged", [False, True])
+@pytest.mark.parametrize("chunk", [1, 5, 8, 64])
+def test_chunked_prefill_token_identity(setup, rng, paged, chunk):
+    """Chunked prefill is invisible in the tokens: the same requests run
+    whole-shot and in chunks (dividing and non-dividing sizes, greedy and
+    stochastic samplers) produce bit-identical outputs — chunking only
+    reorders WHEN prompt KV is written, never what it contains."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, n)) for n in (13, 7)]
+    sps = [SamplingParams(),
+           SamplingParams(kind="topp", top_p=0.9, temperature=1.3, seed=3)]
+    b = _batcher(cfg, params, paged=paged, chunk_tokens=chunk)
+    rids = [b.submit(p, 6, sampling=sp) for p, sp in zip(prompts, sps)]
+    out = b.run_until_done()
+    # only prompts longer than the chunk go through the chunked path
+    assert b.scheduler.chunks_planned == sum(
+        -(-len(p) // chunk) for p in prompts if len(p) > chunk)
+    if paged:
+        assert b.kv.free_pages == b.kv.usable_pages
+    b.close()
+    ref = _reference(cfg, params,
+                     [(r, p, 6, sp)
+                      for r, p, sp in zip(rids, prompts, sps)])
+    assert out == ref
+
+
+@pytest.mark.parametrize("paged", [False, True])
+def test_chunked_admission_never_stalls_decode_tenant(setup, rng, paged):
+    """The tentpole scenario: while a long prompt admits in chunks, a
+    running decode tenant advances one token on EVERY step — a whole-shot
+    admission would have processed the full prompt inside one step
+    instead of interleaving."""
+    cfg, params = setup
+    b = _batcher(cfg, params, paged=paged, chunk_tokens=4, max_len=64)
+    # tenant prompt <= chunk: admits whole-shot, decoding from step one
+    tenant = b.submit(list(rng.integers(0, cfg.vocab_size, 4)), 30)
+    b.step()                                   # tenant admitted + decoding
+    long = b.submit(list(rng.integers(0, cfg.vocab_size, 33)), 4)
+    chunk_steps = 0
+    while b.requests[long].status != "running":
+        before = len(b.requests[tenant].generated)
+        b.step()
+        chunk_steps += 1
+        assert len(b.requests[tenant].generated) == before + 1
+    assert chunk_steps >= 33 // 4              # the admission interleaved
+    out = b.run_until_done()
+    b.close()
+    ref = _reference(cfg, params,
+                     [(tenant, b.requests[tenant].prompt, 30, None),
+                      (long, b.requests[long].prompt, 4, None)],
+                     max_len=64)
+    assert out == ref
+
+
+def test_chunked_prefill_preempt_resume_token_identical(setup, rng):
+    """A mid-prefill victim holds no sampled tokens, so recompute resume
+    restarts its chunked prefill from the cursor's zero — and still
+    matches the unpressured run bit for bit."""
+    cfg, params = setup
+    b = _batcher(cfg, params, paged=True, page_size=8, n_pages=7,
+                 max_len=56, chunk_tokens=4, policy="priority",
+                 prefix_dedupe=False)
+    lo = b.submit(list(rng.integers(0, cfg.vocab_size, 25)), 4, priority=0)
+    b.step()                                   # lo starts chunking
+    assert b.requests[lo].status == "prefilling"
+    hi = b.submit(list(rng.integers(0, cfg.vocab_size, 25)), 4, priority=5)
+    out = b.run_until_done()
+    assert b.requests[lo].preemptions >= 1     # evicted mid-prefill
+    assert b.kv.free_pages == b.kv.usable_pages
+    b.close()
+    ref = _reference(cfg, params,
+                     [(lo, b.requests[lo].prompt, 4, None),
+                      (hi, b.requests[hi].prompt, 4, None)], max_len=56)
+    assert out == ref
+
+
+def test_prefix_dedupe_forks_shared_pages(setup, rng):
+    """Admission-time prefix dedupe: a prompt sharing a page-aligned
+    prefix with a resident request forks those pages (metadata only,
+    ref-count bump) and prefills only the tail — tokens identical to the
+    dedupe-off run, and the pool drains completely at the end."""
+    cfg, params = setup
+    shared = list(rng.integers(0, cfg.vocab_size, 20))
+    tails = [[1, 2, 3], [4, 5]]
+
+    def run(dedupe):
+        b = _batcher(cfg, params, paged=True, page_size=8, max_len=48,
+                     chunk_tokens=8, prefix_dedupe=dedupe)
+        b.submit(shared + tails[0], 12, rid=0)
+        for _ in range(4):
+            b.step()                  # materialize the first prompt
+        b.submit(shared + tails[1], 12, rid=1)
+        out = b.run_until_done()
+        hits, toks = b.scheduler.dedupe_hits, b.scheduler.dedupe_tokens
+        assert b.kv.free_pages == b.kv.usable_pages
+        b.close()
+        return out, hits, toks
+
+    out_on, hits, toks = run(True)
+    out_off, no_hits, _ = run(False)
+    assert out_on == out_off
+    assert hits == 1 and toks == 16   # two full 8-token pages shared
+    assert no_hits == 0
+
+
+def test_batched_admission_one_prefill_call(setup, rng, monkeypatch):
+    """Same-length fresh admissions in one plan run as ONE batched
+    prefill call, not a batch-1 loop — and the tokens cannot tell."""
+    cfg, params = setup
+    prompts = [list(rng.integers(0, cfg.vocab_size, 9)) for _ in range(3)]
+    sps = [SamplingParams(),
+           SamplingParams(kind="topk", top_k=8, seed=11),
+           SamplingParams()]
+    for paged in (False, True):
+        b = _batcher(cfg, params, max_slots=3, paged=paged)
+        calls = []
+        orig = b._start_batch
+        monkeypatch.setattr(
+            b, "_start_batch",
+            lambda sts: (calls.append(len(sts)), orig(sts))[1])
+        rids = [b.submit(p, 5, sampling=sp)
+                for p, sp in zip(prompts, sps)]
+        out = b.run_until_done()
+        b.close()
+        assert calls == [3]           # one call admitted all three
+        ref = _reference(cfg, params,
+                         [(r, p, 5, sp)
+                          for r, p, sp in zip(rids, prompts, sps)])
+        assert out == ref
