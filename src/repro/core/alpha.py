@@ -35,6 +35,7 @@ import dataclasses
 from typing import Optional
 
 DEFAULT_PREFILL_TOKENS = 128   # prompt-length prior when none was observed
+DEFAULT_VERIFY_TOKENS = 8      # draft-run prior (k + 1) when none observed
 
 
 def alpha_analytic(v_cpu: float, v_gpu: float, v_com: float) -> float:
@@ -65,11 +66,17 @@ def resolve_phase_tokens(phase: str,
     """Per-sequence tokens of one step for a serving phase — THE place
     the phase -> intensity rule lives (alpha law and policy builder both
     call it): 1 for decode, the prompt length for prefill
-    (:data:`DEFAULT_PREFILL_TOKENS` when unobserved)."""
-    if phase not in ("prefill", "decode"):
+    (:data:`DEFAULT_PREFILL_TOKENS` when unobserved), and the draft run
+    length k + 1 for the speculative "verify" phase
+    (:data:`DEFAULT_VERIFY_TOKENS` when unobserved) — verification scores
+    batch x (k + 1) positions against one weight stream, so alpha tuning
+    must see it as the prefill-like workload it is, not as decode."""
+    if phase not in ("prefill", "decode", "verify"):
         raise ValueError(f"unknown phase {phase!r}")
     if tokens_per_seq is None:
-        tokens_per_seq = DEFAULT_PREFILL_TOKENS if phase == "prefill" else 1
+        tokens_per_seq = {"prefill": DEFAULT_PREFILL_TOKENS,
+                          "verify": DEFAULT_VERIFY_TOKENS,
+                          "decode": 1}[phase]
     return max(int(tokens_per_seq), 1)
 
 

@@ -24,7 +24,10 @@ optimistic-paging preemption.  ``--paged`` swaps the batch modes to the
 paged KV cache; ``--sampler`` picks the per-request sampling (requests
 carry their own :class:`repro.serving.sampling.SamplingParams`, so paged
 and dense decode stay token-identical even stochastically); ``--stream``
-prints the first request's tokens as they decode.
+prints the first request's tokens as they decode.  ``--spec
+ngram|model`` turns on heterogeneous speculative decoding (CPU-side
+drafting, batched GPU verification — docs/SERVING.md) with ``--spec-k``
+draft tokens per step and ``--spec-adaptive`` per-request k control.
 
     PYTHONPATH=src python -m repro.launch.serve --arch opt-125m \\
         --mode offload --budget-frac 0.25 --requests 4
@@ -69,6 +72,14 @@ def main() -> None:
     ap.add_argument("--no-prefix-dedupe", action="store_true",
                     help="disable admission-time page-aligned prompt "
                     "prefix sharing (paged mode only)")
+    ap.add_argument("--spec", choices=("ngram", "model"), default=None,
+                    help="speculative decoding: CPU-side drafting "
+                    "(prompt-lookup ngrams or a draft model) with "
+                    "batched verification on the target")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="draft tokens proposed per speculative step")
+    ap.add_argument("--spec-adaptive", action="store_true",
+                    help="adapt k per request from acceptance history")
     ap.add_argument("--sampler", choices=("greedy", "temperature", "topk",
                                           "topp"), default="greedy")
     ap.add_argument("--temperature", type=float, default=1.0)
@@ -103,8 +114,15 @@ def main() -> None:
         cfg = reduced(cfg)
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
-    prompts = [list(rng.integers(0, cfg.vocab_size, args.prompt_len))
-               for _ in range(args.requests)]
+    if args.spec is not None:
+        # repetitive prompts give the prompt-lookup drafter something to
+        # look up (real text has this structure; random tokens do not)
+        motif = [list(rng.integers(0, cfg.vocab_size, 4))
+                 for _ in range(args.requests)]
+        prompts = [(m * args.prompt_len)[:args.prompt_len] for m in motif]
+    else:
+        prompts = [list(rng.integers(0, cfg.vocab_size, args.prompt_len))
+                   for _ in range(args.requests)]
     sampling = SamplingParams(
         kind=args.sampler, temperature=args.temperature,
         top_k=40 if args.sampler == "topk" else 0,
@@ -125,12 +143,23 @@ def main() -> None:
                                  batch=slots,
                                  budget_bytes=args.budget_frac * total)
 
+    spec = None
+    if args.spec is not None:
+        from repro.serving.speculative import (ModelDrafter, NgramDrafter,
+                                               SpecConfig)
+        drafter = NgramDrafter() if args.spec == "ngram" else \
+            ModelDrafter(cfg, params,
+                         max_len=args.prompt_len + args.max_new + 8)
+        spec = SpecConfig(drafter=drafter, k=args.spec_k,
+                          adaptive=args.spec_adaptive)
+
     llm_kw = dict(sampling=sampling, max_slots=slots,
                   max_len=args.prompt_len + args.max_new + 8,
                   paged=args.paged, page_size=args.page_size,
                   n_pages=args.n_pages, policy=args.policy,
                   chunk_tokens=args.chunk_tokens,
-                  prefix_dedupe=False if args.no_prefix_dedupe else None)
+                  prefix_dedupe=False if args.no_prefix_dedupe else None,
+                  spec=spec)
     # give the priority policy something to schedule: alternate priorities
     prio = (lambda i: i % 2) if args.policy == "priority" else (lambda i: 0)
 
@@ -191,6 +220,12 @@ def main() -> None:
         print(f"paged KV: page_size={pg['page_size']} "
               f"pool={pg['pool_pages']} pages, "
               f"{pg['mapped_pages']} still mapped")
+    if "spec" in st:
+        sp = st["spec"]
+        print(f"speculative: drafter={args.spec} k={args.spec_k} "
+              f"drafted={sp['drafted']} accepted={sp['accepted']} "
+              f"rolled_back={sp['rolled_back']} "
+              f"(acceptance {sp['acceptance_rate']:.2f})")
 
 
 if __name__ == "__main__":

@@ -774,10 +774,19 @@ def _legacy_cache_scan() -> bool:
     return _os.environ.get("REPRO_LEGACY_CACHE_SCAN", "0") == "1"
 
 
+def _scatter_pos(cur_len, b, s):
+    """(B, s) write positions for a per-slot length vector: row i writes
+    ``cur_len[i] + [0, s)``.  Paired with ``mode="drop"`` scatters so a
+    padded row (speculative verify pads ragged drafts to one width) whose
+    tail would run past the buffer writes nothing there."""
+    return (jnp.asarray(cur_len, jnp.int32)[:, None]
+            + jnp.arange(s, dtype=jnp.int32)[None])
+
+
 def _stack_write(stack, new, li, cur_len, *, layout: str = "bthd"):
     """Write ``new`` (B, s, ...) into a stacked cache at layer ``li``,
-    position ``cur_len`` (scalar, or (B,) vector for per-slot continuous
-    batching with s == 1).
+    position ``cur_len`` (scalar, or a (B,) per-slot vector — continuous
+    batching decode at s == 1, speculative verify at s > 1).
 
     layout "bthd": stack (L, B, T, ...) — MLA latents/rope keys.
     layout "bhtd": stack (L, B, H, T, D) — KV stacks in attention-native
@@ -785,22 +794,27 @@ def _stack_write(stack, new, li, cur_len, *, layout: str = "bthd"):
     cl = jnp.asarray(cur_len)
     zero = jnp.int32(0)
     if layout == "bhtd":
-        new = jnp.swapaxes(new, 1, 2)          # (B,H,s,D)
         if cl.ndim == 0:
+            new = jnp.swapaxes(new, 1, 2)      # (B,H,s,D)
             start = (jnp.asarray(li, jnp.int32), zero, zero,
                      cl.astype(jnp.int32), zero)
             return jax.lax.dynamic_update_slice(
                 stack, new[None].astype(stack.dtype), start)
-        b = stack.shape[1]
-        return stack.at[li, jnp.arange(b), :, cl].set(
-            new[:, :, 0].astype(stack.dtype))
+        b, s = new.shape[:2]
+        pos = _scatter_pos(cl, b, s)
+        # non-contiguous advanced indices: broadcast (B, s) dims lead, so
+        # the slice's H lands after them — the value is (B, s, H, D) as-is
+        return stack.at[li, jnp.arange(b)[:, None], :, pos].set(
+            new.astype(stack.dtype), mode="drop")
     if cl.ndim == 0:
         start = (jnp.asarray(li, jnp.int32), zero, cl.astype(jnp.int32)) \
             + (zero,) * (stack.ndim - 3)
         return jax.lax.dynamic_update_slice(
             stack, new[None].astype(stack.dtype), start)
-    b = stack.shape[1]
-    return stack.at[li, jnp.arange(b), cl].set(new[:, 0].astype(stack.dtype))
+    b, s = new.shape[:2]
+    pos = _scatter_pos(cl, b, s)
+    return stack.at[li, jnp.arange(b)[:, None], pos].set(
+        new.astype(stack.dtype), mode="drop")
 
 
 
@@ -818,16 +832,17 @@ def _stack_write_q8(stack, scale_stack, new, li, cur_len):
     stack = _stack_write(stack, q, li, cur_len, layout="bhtd")
     # scales: (L,B,H,T): write m (B,s,H) -> (B,H,s)
     cl = jnp.asarray(cur_len)
-    ms = jnp.swapaxes(m, 1, 2)
     if cl.ndim == 0:
         zero = jnp.int32(0)
+        ms = jnp.swapaxes(m, 1, 2)
         start = (jnp.asarray(li, jnp.int32), zero, zero, cl.astype(jnp.int32))
         scale_stack = jax.lax.dynamic_update_slice(
             scale_stack, ms[None].astype(scale_stack.dtype), start)
     else:
-        b = scale_stack.shape[1]
-        scale_stack = scale_stack.at[li, jnp.arange(b), :, cl].set(
-            ms[:, :, 0].astype(scale_stack.dtype))
+        b, s = m.shape[:2]
+        pos = _scatter_pos(cl, b, s)
+        scale_stack = scale_stack.at[li, jnp.arange(b)[:, None], :, pos].set(
+            m.astype(scale_stack.dtype), mode="drop")
     return stack, scale_stack
 
 
@@ -838,7 +853,10 @@ def _stack_layer(stack, li):
 def _paged_positions(block_tables, new, cur_len, page_size):
     """(page, offset) scatter coordinates for writing ``new`` (B, s, ...)
     into a page pool through ``block_tables`` (B, nb) at ``cur_len``
-    (scalar, or (B,) per-slot vector with s == 1)."""
+    (scalar, or a (B,) per-slot vector — decode at s == 1, speculative
+    verify at s > 1).  Per-slot positions past the table's last block
+    (a verify batch's padded rows near ``max_len``) are redirected to the
+    trash page instead of clamping into a real one."""
     b, s = new.shape[:2]
     cl = jnp.asarray(cur_len, jnp.int32)
     if cl.ndim == 0:
@@ -846,8 +864,13 @@ def _paged_positions(block_tables, new, cur_len, page_size):
         page = block_tables[:, pos // page_size]            # (B, s)
         off = jnp.broadcast_to((pos % page_size)[None], (b, s))
     else:
-        page = block_tables[jnp.arange(b), cl // page_size][:, None]
-        off = (cl % page_size)[:, None]                     # (B, 1)
+        pos = _scatter_pos(cl, b, s)                        # (B, s)
+        blk = pos // page_size
+        nb = block_tables.shape[1]
+        page = jnp.take_along_axis(block_tables,
+                                   jnp.minimum(blk, nb - 1), axis=1)
+        page = jnp.where(blk < nb, page, 0)                 # trash page
+        off = pos % page_size
     return page, off
 
 
@@ -906,22 +929,25 @@ def _update_kv(buf, new, cur_len, *, layout: str = "bthd"):
     ``layout`` "bthd": buf (B,T,H,D), seq axis 1 (offload runtime / MLA
     latents (B,T,R)).  "bhtd": buf (B,H,T,D), seq axis 2 (stacked KV).
     Scalar ``cur_len``: contiguous dynamic_update_slice; vector (B,):
-    per-slot scatter (continuous batching, s == 1).
+    per-slot scatter (continuous-batching decode at s == 1, speculative
+    verify at s > 1 — per-slot tails past the buffer are dropped).
     """
     cl = jnp.asarray(cur_len)
-    if layout == "bhtd":
-        new = jnp.swapaxes(new, 1, 2)          # (B,H,s,D)
-        axis = 2
-    else:
-        axis = 1
     if cl.ndim == 0:
+        if layout == "bhtd":
+            new = jnp.swapaxes(new, 1, 2)      # (B,H,s,D)
+            axis = 2
+        else:
+            axis = 1
         return jax.lax.dynamic_update_slice_in_dim(
             buf, new.astype(buf.dtype), cl, axis=axis)
-    b = buf.shape[0]
+    b, s = new.shape[:2]
+    pos = _scatter_pos(cl, b, s)
+    rows = jnp.arange(b)[:, None]
     if layout == "bhtd":
-        return buf.at[jnp.arange(b), :, cl].set(
-            new[:, :, 0].astype(buf.dtype))
-    return buf.at[jnp.arange(b), cl].set(new[:, 0].astype(buf.dtype))
+        # broadcast advanced dims lead: value stays (B, s, H, D) as-is
+        return buf.at[rows, :, pos].set(new.astype(buf.dtype), mode="drop")
+    return buf.at[rows, pos].set(new.astype(buf.dtype), mode="drop")
 
 
 def _positions_from(cur_len, b, s):
@@ -1090,8 +1116,14 @@ def _encdec_decoder(cfg, params, x, positions, enc, rules, *, cache,
 
 
 def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
-            rules: ShardingRules = NO_RULES) -> Tuple[Dict, jax.Array]:
-    """Process the prompt, fill the cache, return (cache, last_logits)."""
+            rules: ShardingRules = NO_RULES,
+            all_logits: bool = False) -> Tuple[Dict, jax.Array]:
+    """Process the prompt, fill the cache, return (cache, last_logits).
+
+    ``all_logits=True`` returns logits for EVERY position, (B, S, V)
+    instead of (B, V) — the speculative-verify shape, where one
+    prefill-shaped pass must score each draft position's next-token
+    distribution."""
     if cfg.embeds_input and "embeds" in batch:
         x = batch["embeds"].astype(_dtype(cfg))
         b, s = x.shape[:2]
@@ -1123,9 +1155,10 @@ def prefill(cfg: ModelConfig, params: Dict, batch: Dict, cache: Dict,
                                         rules=rules)
         new_cache.update(outs)
     new_cache["len"] = cur_len + s
-    x = L.apply_norm(cfg, params["final_norm"], x[:, -1:])
+    x = L.apply_norm(cfg, params["final_norm"],
+                     x if all_logits else x[:, -1:])
     logits = lm_logits(cfg, params, x, rules)
-    return new_cache, logits[:, 0]
+    return new_cache, (logits if all_logits else logits[:, 0])
 
 
 def decode_step(cfg: ModelConfig, params: Dict, token: jax.Array,
@@ -1273,12 +1306,14 @@ def init_backend_cache(cfg: ModelConfig, batch: int, max_len: int) -> Dict:
 
 
 def backend_prefill(cfg: ModelConfig, shared: Dict, batch: Dict, cache: Dict,
-                    *, linear, ops: Optional[Dict] = None
-                    ) -> Tuple[Dict, jax.Array]:
+                    *, linear, ops: Optional[Dict] = None,
+                    all_logits: bool = False) -> Tuple[Dict, jax.Array]:
     """Prompt/step processing through the shared layer math with all
     linears routed through ``linear(x, "blk{l}.{name}")``.  Mirrors
     :func:`prefill` for the dense GQA families.  ``ops`` carries the
     pre-jitted device pieces for eager drivers (:func:`make_backend_ops`).
+    ``all_logits=True`` returns (B, S, V) per-position logits — the
+    speculative-verify shape.
 
     A cache holding "pages_k{l}"/"pages_v{l}" pools plus "block_tables"
     (from :class:`repro.serving.kv_cache.PagedKVCache`) switches every
@@ -1321,12 +1356,12 @@ def backend_prefill(cfg: ModelConfig, shared: Dict, batch: Dict, cache: Dict,
             new_cache[f"k{l}"], new_cache[f"v{l}"] = kv
     new_cache["len"] = cur_len + s
     norm = ops.get("norm") or (lambda pp, h: L.apply_norm(cfg, pp, h))
-    x = norm(shared["final_norm"], x[:, -1:])
+    x = norm(shared["final_norm"], x if all_logits else x[:, -1:])
     if "logits" in ops:
         logits = ops["logits"](shared, x)
     else:
         logits = lm_logits(cfg, shared, x)
-    return new_cache, logits[:, 0]
+    return new_cache, (logits if all_logits else logits[:, 0])
 
 
 def backend_decode(cfg: ModelConfig, shared: Dict, token: jax.Array,

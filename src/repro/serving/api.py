@@ -74,6 +74,8 @@ from repro.serving.batcher import ContinuousBatcher
 from repro.serving.engine import Generator
 from repro.serving.sampling import SamplingParams, request_key
 from repro.serving.scheduler import SchedulerPolicy
+from repro.serving.speculative import SpecConfig
+from repro.serving.tokenizer import StreamDecoder, Tokenizer
 
 Prompt = Sequence[int]
 
@@ -102,6 +104,7 @@ class RequestOutput:
     # one entry per token when SamplingParams.logprobs was set:
     # {"token": id, "logprob": float, "top": {id: logprob, ...}}
     logprobs: Optional[List[Dict]] = None
+    text: Optional[str] = None  # decoded tokens when the LLM has a tokenizer
 
 
 def _finish_reason(tokens: List[int], eos: Optional[int]) -> str:
@@ -132,6 +135,8 @@ class LLM:
                  preempt_mode: Optional[str] = None,
                  chunk_tokens: Optional[int] = None,
                  prefix_dedupe: Optional[bool] = None,
+                 spec: Optional[SpecConfig] = None,
+                 tokenizer: Optional[Tokenizer] = None,
                  seed: int = 0):
         if backend is None and params is None:
             raise ValueError("LLM needs params or a backend")
@@ -160,6 +165,8 @@ class LLM:
         self.preempt_mode = preempt_mode
         self.chunk_tokens = chunk_tokens
         self.prefix_dedupe = prefix_dedupe
+        self.spec = spec
+        self.tokenizer = tokenizer
         self.seed = seed
         self._base_key = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
@@ -183,7 +190,8 @@ class LLM:
                       policy=self.policy, optimistic=self.optimistic,
                       preempt_mode=self.preempt_mode,
                       chunk_tokens=self.chunk_tokens,
-                      prefix_dedupe=self.prefix_dedupe)
+                      prefix_dedupe=self.prefix_dedupe,
+                      spec=self.spec)
             if self._backend is None:
                 self._batcher = ContinuousBatcher(self.cfg, self._params,
                                                   **kw)
@@ -204,12 +212,28 @@ class LLM:
         return self._generator
 
     # -- request normalization -----------------------------------------
+    def _encode(self, text: str) -> List[int]:
+        if self.tokenizer is None:
+            raise ValueError("text prompts need a tokenizer "
+                             "(LLM(..., tokenizer=ByteTokenizer()))")
+        return list(self.tokenizer.encode(text))
+
+    def _decode(self, tokens: Sequence[int]) -> Optional[str]:
+        return None if self.tokenizer is None \
+            else self.tokenizer.decode(tokens)
+
+    def _default_eos(self, eos: Optional[int]) -> Optional[int]:
+        if eos is None and self.tokenizer is not None:
+            return self.tokenizer.eos_id
+        return eos
+
     def _as_requests(self, prompts, max_new, eos, sampling
                      ) -> List[GenRequest]:
-        if isinstance(prompts, GenRequest):
+        if isinstance(prompts, (GenRequest, str)):
             prompts = [prompts]
         elif prompts and isinstance(prompts[0], (int, np.integer)):
             prompts = [prompts]          # a single raw token sequence
+        eos = self._default_eos(eos)
         reqs: List[GenRequest] = []
         for i, p in enumerate(prompts):
             if isinstance(p, GenRequest):
@@ -219,8 +243,9 @@ class LLM:
                     raise ValueError("max_new is required for raw prompts")
                 sp = sampling[i] if isinstance(sampling, (list, tuple)) \
                     else (sampling or self.sampling)
-                req = GenRequest(list(int(t) for t in p), max_new,
-                                 eos=eos, sampling=sp)
+                toks = self._encode(p) if isinstance(p, str) \
+                    else list(int(t) for t in p)
+                req = GenRequest(toks, max_new, eos=eos, sampling=sp)
             if req.rid is None:
                 req.rid = next(self._ids)
             reqs.append(req)
@@ -252,7 +277,10 @@ class LLM:
                 and len({r.max_new for r in reqs}) == 1
                 and not any(r.stream for r in reqs)
                 # logprob extraction rides the batcher's sampler
-                and not any(r.sampling.logprobs is not None for r in reqs))
+                and not any(r.sampling.logprobs is not None for r in reqs)
+                # speculative decoding is a batcher feature (draft →
+                # verify → rollback lives in its step loop)
+                and self.spec is None)
         if rect and not busy:
             return self._generate_oneshot(reqs)
         return self._generate_batched(reqs)
@@ -275,7 +303,8 @@ class LLM:
             if req.eos is not None and req.eos in row:
                 row = row[:row.index(req.eos) + 1]
             outs.append(RequestOutput(req.rid, req.prompt, list(row),
-                                      _finish_reason(row, req.eos)))
+                                      _finish_reason(row, req.eos),
+                                      text=self._decode(row)))
         return outs
 
     def _generate_batched(self, reqs: List[GenRequest]
@@ -390,6 +419,32 @@ class LLM:
             if req.done:
                 self._take_result(rid)  # evict: fully delivered by yield
 
+    def stream_text(self, prompt: Union[str, Prompt, GenRequest],
+                    max_new: Optional[int] = None, *,
+                    eos: Optional[int] = None,
+                    sampling: Optional[SamplingParams] = None
+                    ) -> Iterator[str]:
+        """:meth:`stream`, decoded: yields text chunks as tokens land.
+
+        Multi-byte characters that straddle token boundaries are held
+        back until complete (empty chunks are skipped), so the
+        concatenation of the yields is exactly ``decode(tokens)`` minus
+        a trailing eos byte."""
+        if self.tokenizer is None:
+            raise ValueError("stream_text needs a tokenizer")
+        dec = StreamDecoder(self.tokenizer)
+        eos = self._default_eos(eos)
+        for tok in self.stream(prompt, max_new, eos=eos,
+                               sampling=sampling):
+            if eos is not None and tok == eos:
+                break
+            chunk = dec.push(tok)
+            if chunk:
+                yield chunk
+        tail = dec.flush()
+        if tail:
+            yield tail
+
     def drain(self, max_steps: int = 100_000) -> Dict[int, RequestOutput]:
         """Run the batcher until every submitted request finishes.
 
@@ -419,10 +474,15 @@ class LLM:
     def result(self, rid: int) -> RequestOutput:
         """Output of a batcher-scheduled request (complete or partial)."""
         req = self._ensure_batcher().requests[rid]
+        # the scheduler records why it finished a request; fall back to
+        # inference for partial results (still running = "length" so far)
+        reason = getattr(req, "finish_reason", None) \
+            or _finish_reason(req.generated, req.eos)
         return RequestOutput(req.rid, req.prompt, list(req.generated),
-                             _finish_reason(req.generated, req.eos),
+                             reason,
                              logprobs=None if req.logprobs is None
-                             else list(req.logprobs))
+                             else list(req.logprobs),
+                             text=self._decode(req.generated))
 
     def _take_result(self, rid: int) -> RequestOutput:
         """result() + eviction: finished requests leave the scheduler's
@@ -488,6 +548,12 @@ class LLM:
                                "pool_pages": kv.n_pages - 1,
                                "mapped_pages": kv.n_pages - 1
                                - kv.free_pages}
+            if self._batcher.spec is not None:
+                spec = self._batcher.spec_stats.as_dict()
+                spec["per_request"] = {
+                    rid: s.as_dict()
+                    for rid, s in self._batcher.spec_by_req.items()}
+                st["spec"] = spec
         return st
 
     def close(self) -> None:

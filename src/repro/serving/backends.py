@@ -59,6 +59,12 @@ class LinearBackend(Protocol):
     staging pipeline may likewise expose ``prefetch_next_step()`` — the
     executor calls it between a decode step's math and its host-side
     sampling so step N+1's weight pins overlap step N's tail.
+
+    Backends may also expose ``verify(batch, cache)`` — a prefill-shaped
+    step that returns logits for **all** positions (B, S, V) instead of
+    just the last, the scoring pass of speculative decoding.  The batcher
+    probes for it with ``hasattr``; backends without it cannot serve
+    speculative requests.
     """
 
     cache_batch_axis: int
@@ -145,11 +151,17 @@ class ResidentBackend:
             return M.backend_decode(cfg, shared, token, cache,
                                     linear=_linear_from(weights, biases))
 
-        # the cache is donated in BOTH steps: callers never reuse the
+        def _verify(shared, weights, biases, batch, cache):
+            return M.backend_prefill(cfg, shared, batch, cache,
+                                     linear=_linear_from(weights, biases),
+                                     all_logits=True)
+
+        # the cache is donated in ALL steps: callers never reuse the
         # input cache, and for paged admission donation lets the page
         # pools update in place instead of copying every pool per admit
         self._prefill = jax.jit(_prefill, donate_argnums=(4,))
         self._decode = jax.jit(_decode, donate_argnums=(4,))
+        self._verify = jax.jit(_verify, donate_argnums=(4,))
 
     # -- LinearBackend surface -----------------------------------------
     def linear(self, x: jax.Array, name: str) -> jax.Array:
@@ -173,6 +185,12 @@ class ResidentBackend:
                ) -> Tuple[Dict, jax.Array]:
         return self._decode(self.shared, self.weights, self.biases,
                             token, cache)
+
+    def verify(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
+        """Score all positions of a draft run: (B, S) tokens in, logits
+        (B, S, V) out — one prefill-shaped step replaces S decode steps."""
+        return self._verify(self.shared, self.weights, self.biases,
+                            batch, cache)
 
     def close(self) -> None:
         pass
@@ -200,8 +218,12 @@ class ScanResidentBackend:
         def _decode(params, token, cache):
             return M.decode_step(cfg, params, token, cache)
 
+        def _verify(params, batch, cache):
+            return M.prefill(cfg, params, batch, cache, all_logits=True)
+
         self._prefill_fn = jax.jit(_prefill)
         self._decode_fn = jax.jit(_decode, donate_argnums=(2,))
+        self._verify_fn = jax.jit(_verify, donate_argnums=(2,))
 
     def init_cache(self, batch: int, max_len: int) -> Dict:
         return M.init_cache(self.cfg, batch, max_len)
@@ -217,6 +239,9 @@ class ScanResidentBackend:
     def decode(self, token: jax.Array, cache: Dict
                ) -> Tuple[Dict, jax.Array]:
         return self._decode_fn(self.params, token, cache)
+
+    def verify(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
+        return self._verify_fn(self.params, batch, cache)
 
     def close(self) -> None:
         pass
@@ -351,6 +376,23 @@ class HeteGenBackend:
                 return
         self.retune(batch, phase="prefill", tokens_per_seq=seq)
 
+    def _ensure_verify_plan(self, batch: int, seq: int) -> None:
+        """Tune the verify plan to the observed draft-run shape.
+
+        Verification is its own phase, NOT a reuse of the prefill plan:
+        admission prefills run at intensity batch x prompt_len (hundreds
+        of tokens) while verify runs at batch x (k + 1) (a handful), and
+        sharing one plan would make the hysteresis thrash between the two
+        regimes on every interleaved step.  Same multiplicative guard so
+        adaptive-k wobble does not rebuild the engine."""
+        cur = self.policies.get("verify")
+        intensity = max(batch, 1) * max(seq, 1)
+        if cur is not None:
+            f = self.prefill_retune_factor
+            if cur.intensity / f <= intensity <= cur.intensity * f:
+                return
+        self.retune(batch, phase="verify", tokens_per_seq=seq)
+
     # -- LinearBackend surface -----------------------------------------
     def linear(self, x: jax.Array, name: str) -> jax.Array:
         eng = self.engines.get(self._phase) or self.engines["decode"]
@@ -384,6 +426,22 @@ class HeteGenBackend:
                ) -> Tuple[Dict, jax.Array]:
         return M.backend_decode(self.cfg, self.shared, token, cache,
                                 linear=self.linear, ops=self._ops)
+
+    def verify(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
+        """Speculative scoring pass under the "verify" phase plan —
+        intensity batch x (k + 1), the prefill-like regime where alpha
+        pushes toward the accelerator even though the step advances the
+        decode frontier."""
+        if self.phase_plans:
+            b, s = batch["tokens"].shape
+            self._ensure_verify_plan(b, s)
+            self._phase = "verify"
+        try:
+            return M.backend_prefill(self.cfg, self.shared, batch, cache,
+                                     linear=self.linear, ops=self._ops,
+                                     all_logits=True)
+        finally:
+            self._phase = "decode"
 
     def prefetch_next_step(self) -> None:
         """Drive step N+1's pins while step N's host tail drains.

@@ -80,6 +80,8 @@ from repro.serving.sampling import (SamplerConfig, SamplingParams, greedy,
                                     step_key)
 from repro.serving.scheduler import (PREFILLING, RequestState, RUNNING,
                                      Scheduler, SchedulerPolicy)
+from repro.serving.speculative import (AdaptiveK, SpecConfig, SpecStats,
+                                       accept_row, logprob_record)
 
 # back-compat: PR 3 exposed the queue entry as batcher.Request
 Request = RequestState
@@ -98,7 +100,8 @@ class ContinuousBatcher:
                  optimistic: bool = True,
                  preempt_mode: Optional[str] = None,
                  chunk_tokens: Optional[int] = None,
-                 prefix_dedupe: Optional[bool] = None):
+                 prefix_dedupe: Optional[bool] = None,
+                 spec: Optional[SpecConfig] = None):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
@@ -146,6 +149,20 @@ class ContinuousBatcher:
         self.retune_hysteresis = retune_hysteresis
         self._plan_batch = max_slots
         self.retunes = 0
+        # speculative decoding: CPU-side drafting + batched verification
+        # (docs/SERVING.md).  The batcher owns the drafter's lifetime.
+        self.spec = spec
+        self.spec_stats = SpecStats()
+        self.spec_by_req: Dict[int, SpecStats] = {}
+        self._adaptive: Optional[AdaptiveK] = None
+        if spec is not None:
+            if not hasattr(self.backend, "verify"):
+                raise ValueError(
+                    "speculative decoding needs a backend exposing "
+                    "verify(batch, cache); "
+                    f"{type(self.backend).__name__} does not")
+            if spec.adaptive:
+                self._adaptive = AdaptiveK(spec.k, spec.k_min, spec.k_max)
         self._closed = False
         # packed sampling params change only when slot->request assignment
         # does (admit/release), not every step — cache the device arrays
@@ -422,22 +439,41 @@ class ContinuousBatcher:
         self._maybe_finish(st)
 
     def _maybe_finish(self, st: RequestState) -> None:
-        if len(st.generated) >= st.max_new or \
-                (st.eos is not None and st.generated
-                 and st.generated[-1] == st.eos):
+        hit_eos = (st.eos is not None and st.generated
+                   and st.generated[-1] == st.eos)
+        if hit_eos or len(st.generated) >= st.max_new:
+            st.finish_reason = "eos" if hit_eos else "length"
             slot = st.slot
             self.scheduler.finish(st)
             if slot is not None:
                 self.cache["len"] = self.cache["len"].at[slot].set(0)
                 st.slot = None
+            if self.spec is not None:
+                self.spec.drafter.release(st.rid)
+                if self._adaptive is not None:
+                    self._adaptive.release(st.rid)
 
     # ------------------------------------------------------------------
     def step(self) -> int:
         """Run one scheduler step: apply the policy's plan (preempt /
         admit / resume / grow pages), then advance all active slots one
         token.  Returns the number of active slots after the step.
+
+        With speculative decoding configured, drafting happens host-side
+        BEFORE the plan (the scheduler needs each request's ``k_eff + 1``
+        advance to reserve the whole draft run's pages up front), and the
+        decode step becomes a verify step that can advance a slot several
+        tokens; proposals for slots the plan preempts are simply dropped
+        (no entropy was consumed, and deterministic drafters re-propose
+        identically on resume — mid-speculation preemption stays
+        token-identical).
         """
-        plan = self.scheduler.plan()
+        proposals = self._draft_proposals() if self.spec is not None \
+            else None
+        advances = None
+        if proposals:
+            advances = {rid: len(d) + 1 for rid, d in proposals.items()}
+        plan = self.scheduler.plan(advances)
         for st in plan.preempt:
             self._apply_preempt(st)
         # group same-length fresh admissions into one prefill call; swap
@@ -483,6 +519,17 @@ class ContinuousBatcher:
             self.backend.retune(executed, phase="decode")
             self._plan_batch = executed
             self.retunes += 1
+        if proposals:
+            # drop proposals whose request the plan preempted or that
+            # lost their slot — then run draft + undrafted rows through
+            # one verify step (an undrafted row's bonus draw IS the
+            # baseline decode draw, so mixing costs nothing)
+            proposals = {rid: d for rid, d in proposals.items()
+                         if d and rid in self.requests
+                         and self.requests[rid].status == RUNNING}
+        if proposals:
+            self._spec_step(proposals, active)
+            return int(self.scheduler.active_mask().sum())
         if self.paged and occ < self.max_slots:
             self._decode_active_slots(active)
         else:
@@ -496,6 +543,111 @@ class ContinuousBatcher:
             st.generated.append(int(nxt[st.slot]))
             self._maybe_finish(st)
         return int(self.scheduler.active_mask().sum())
+
+    def _draft_proposals(self) -> Dict[int, List[int]]:
+        """Host-side drafting over the running slots, capped per request
+        so a fully-accepted run can never overshoot ``max_new`` (the
+        bonus token needs headroom of 1) or ``max_len`` (the run's KV
+        must fit: ``kv_len + k + 1 <= max_len``)."""
+        out: Dict[int, List[int]] = {}
+        for st in self.scheduler.running():
+            k = self._adaptive.k_for(st.rid) if self._adaptive is not None \
+                else self.spec.k
+            k = min(k, st.max_new - len(st.generated) - 1,
+                    self.max_len - st.kv_len - 1)
+            if k <= 0:
+                continue
+            d = self.spec.drafter.propose(st.rid, st.prompt + st.generated,
+                                          k)
+            if d:
+                out[st.rid] = [int(t) for t in d[:k]]
+        return out
+
+    def _spec_step(self, proposals: Dict[int, List[int]],
+                   active: np.ndarray) -> None:
+        """Draft -> verify -> accept -> rollback, as one step.
+
+        Every running slot joins the verify batch — drafted rows carry
+        ``[pending] + drafts``, undrafted rows just their pending token —
+        padded to the widest run.  One ``backend.verify`` call scores all
+        rows at their own ``kv_len`` (the paged-prefill kernel's
+        per-batch ``kv_offset``); acceptance runs host-side per row under
+        the request's own sampling params and PRNG stream; rejected
+        drafts roll back as metadata (``PagedKVCache.truncate`` /
+        a dense length reset — stale KV past the new length is masked
+        and overwritten before it could ever be attended, the same
+        argument that makes chunked prefill exact)."""
+        slot_req = self.scheduler.slot_req
+        slots = [int(s) for s in np.flatnonzero(active)]
+        drafts = {s: proposals.get(slot_req[s].rid, []) for s in slots}
+        width = max(len(d) for d in drafts.values()) + 1
+
+        def row_tokens(s: int) -> List[int]:
+            st = slot_req[s]
+            d = drafts[s]
+            return [st.generated[-1]] + d + [0] * (width - 1 - len(d))
+
+        if self.paged:
+            idx = jnp.asarray(slots)
+            toks = jnp.asarray([row_tokens(s) for s in slots], jnp.int32)
+            sub = {k: v for k, v in self.cache.items()
+                   if k.startswith("pages_")}
+            sub["block_tables"] = self.cache["block_tables"][idx]
+            sub["len"] = self.cache["len"][idx]
+            sub, logits = self.backend.verify({"tokens": toks}, sub)
+            self._prefetch_next_step()
+            for key in sub:
+                if key.startswith("pages_"):
+                    self.cache[key] = sub[key]
+            row_of = {s: i for i, s in enumerate(slots)}
+        else:
+            # dense runs full width (static shapes); garbage rows of
+            # vacant/prefilling slots are masked and their cache rows are
+            # wholly overwritten at admission, exactly like plain decode.
+            # Keep their lengths: verify bumps every row's len by the
+            # padded width, but the real new lengths are only known after
+            # acceptance — restore, then set per-slot below.
+            lens_before = np.asarray(self.cache["len"])
+            toks = jnp.asarray(
+                [row_tokens(s) if active[s] else [0] * width
+                 for s in range(self.max_slots)], jnp.int32)
+            self.cache, logits = self.backend.verify({"tokens": toks},
+                                                     self.cache)
+            self._prefetch_next_step()
+            self.cache["len"] = jnp.asarray(lens_before)
+            row_of = {s: s for s in slots}
+
+        lg = np.asarray(logits, np.float32)     # (rows, width, V)
+        for s in slots:
+            st = slot_req[s]
+            m = len(drafts[s])
+            rows = lg[row_of[s], :m + 1]
+            emitted = accept_row(rows, drafts[s], st.sampling, st.key,
+                                 len(st.generated))
+            n_full = len(emitted) - 1            # drafts accepted, pre-cut
+            if st.eos is not None and st.eos in emitted:
+                emitted = emitted[:emitted.index(st.eos) + 1]
+            accepted = min(len(emitted), n_full)
+            if m > 0:
+                self.spec_stats.record(m, accepted)
+                self.spec_by_req.setdefault(st.rid, SpecStats()) \
+                    .record(m, accepted)
+                if self._adaptive is not None:
+                    self._adaptive.update(st.rid, m, accepted)
+            if st.sampling.logprobs is not None:
+                for j, t in enumerate(emitted):
+                    st.logprobs.append(
+                        logprob_record(rows[j], t, st.sampling.logprobs))
+            st.generated.extend(emitted)
+            # rollback: kv_len now counts only pending + accepted drafts;
+            # pages past it unmap (paged) and the length vector shrinks
+            new_len = st.kv_len
+            if self.paged:
+                self.cache = self.kv.truncate(self.cache, s, new_len)
+                self.scheduler.tables_dirty = True
+            self.cache["len"] = self.cache["len"].at[s].set(new_len)
+            self.tokens = self.tokens.at[s].set(emitted[-1])
+            self._maybe_finish(st)
 
     def _prefetch_next_step(self) -> None:
         """Kick step N+1's pins while step N's host tail (sampling,

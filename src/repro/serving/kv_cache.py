@@ -215,6 +215,51 @@ class PagedKVCache:
                     cache[key] = pool.at[dst_pid].set(pool[src_pid])
         return cache
 
+    def truncate(self, cache: Dict, slot: int, new_len: int) -> Dict:
+        """Shrink ``slot`` to ``new_len`` logical positions — the rollback
+        primitive of speculative decoding (rejected draft tokens vanish as
+        block-table metadata, the payoff of the paged design).
+
+        Pages past ``blocks_for(new_len)`` are unmapped: ref-counts drop,
+        pages return to the free list at zero, and a truncate that lands
+        exactly on a page boundary releases the boundary page too.  The
+        kept trailing page is *writable* again (future appends land in
+        it), so when it is shared (ref > 1 — a forked/deduped page) it is
+        **copied on shrink** into a fresh page first; appending can then
+        never corrupt the sibling that still aliases the original.
+        Returns the cache dict (with the page copy applied when one was
+        needed — pure-metadata truncates return ``cache`` unchanged).
+        """
+        keep = self.blocks_for(new_len)
+        n = int(self._n_blocks[slot])
+        if keep > n:
+            raise ValueError(
+                f"truncate to {new_len} tokens needs {keep} pages but "
+                f"slot {slot} maps only {n}")
+        for j in range(keep, n):
+            pid = int(self._tables[slot, j])
+            self._ref[pid] -= 1
+            if self._ref[pid] == 0:
+                self._free.append(pid)
+            self._tables[slot, j] = TRASH_PAGE
+        self._n_blocks[slot] = keep
+        if keep and new_len % self.page_size:
+            pid = int(self._tables[slot, keep - 1])
+            if self._ref[pid] > 1:
+                if not self._free:
+                    raise PagesExhausted(
+                        "no free page for copy-on-shrink of a shared page")
+                new_pid = self._free.pop()
+                self._ref[pid] -= 1
+                self._ref[new_pid] = 1
+                self._tables[slot, keep - 1] = new_pid
+                cache = dict(cache)
+                for key in list(cache):
+                    if key.startswith("pages_"):
+                        pool = cache[key]
+                        cache[key] = pool.at[new_pid].set(pool[pid])
+        return cache
+
     def mapped_pages(self, slot: int) -> List[int]:
         return [int(p) for p in self._tables[slot, :self._n_blocks[slot]]]
 

@@ -89,6 +89,7 @@ class RequestState:
     generated: List[int] = dataclasses.field(default_factory=list)
     logprobs: Optional[List[Dict]] = None  # per-token, when requested
     status: str = WAITING
+    finish_reason: Optional[str] = None  # "eos" | "length" once finished
     slot: Optional[int] = None
     preemptions: int = 0                 # times this request was evicted
     resumed_at: int = 0                  # len(generated) at last admission
@@ -379,13 +380,20 @@ class Scheduler:
             self.slot_req[st.slot] = None
 
     # -- the per-step plan ---------------------------------------------
-    def plan(self) -> StepPlan:
+    def plan(self, advances: Optional[Dict[int, int]] = None) -> StepPlan:
         """Decide this step's preemptions, admissions, and page growth.
 
         All accounting (slots, pages) is committed here; the executor
         then performs the device work in plan order (saves before
         restores/prefills, so swapped KV is read before its old pages
-        can be rewritten)."""
+        can be rewritten).
+
+        ``advances`` maps request ids to this step's KV advance in
+        positions (default 1, the plain decode step).  Speculative
+        decoding passes ``k_eff + 1`` per drafted request so optimistic
+        growth reserves the whole draft run up front; rejection later
+        *shrinks* the slot back (``PagedKVCache.truncate``), so a spec
+        step can never hold rejected pages across steps."""
         out = StepPlan()
         if self.optimistic:
             # growth first: running requests reserve their next decode
@@ -393,7 +401,9 @@ class Scheduler:
             # requests the policy would sacrifice anyway
             for st in reversed(self.policy.preempt_order(self.running())):
                 if st.status == RUNNING:
-                    self._grow(st, out)
+                    adv = 1 if advances is None \
+                        else max(int(advances.get(st.rid, 1)), 1)
+                    self._grow(st, out, adv)
         # advance in-flight chunked prefills before admitting anything new:
         # a half-prefilled slot that stops getting chunks is pure waste
         for st in self.prefilling():
@@ -435,10 +445,13 @@ class Scheduler:
         self.preempted.append(victim)
         out.preempt.append(victim)
 
-    def _grow(self, st: RequestState, out: StepPlan) -> bool:
-        """Map the page covering ``st``'s next decode position, evicting
-        victims (possibly ``st`` itself) under page pressure."""
-        return self._grow_to(st, min(st.kv_len + 1, self.max_len), out)
+    def _grow(self, st: RequestState, out: StepPlan,
+              advance: int = 1) -> bool:
+        """Map the page(s) covering ``st``'s next ``advance`` decode
+        positions, evicting victims (possibly ``st`` itself) under page
+        pressure."""
+        return self._grow_to(st, min(st.kv_len + advance, self.max_len),
+                             out)
 
     def _grow_to(self, st: RequestState, target: int,
                  out: StepPlan) -> bool:

@@ -421,3 +421,71 @@ def test_batcher_close_owns_backend(setup):
         b.run_until_done()
     assert hb2.engines != {}
     hb2.close()
+
+
+# ---------------------------------------------------------------------------
+# tokenizer-aware text IO
+# ---------------------------------------------------------------------------
+
+def test_byte_tokenizer_roundtrip():
+    from repro.serving.tokenizer import ByteTokenizer
+    tok = ByteTokenizer()
+    for s in ("hello", "héllo wörld", "καλημέρα", "🙂 ok"):
+        ids = tok.encode(s)
+        assert all(0 <= t <= 255 for t in ids)
+        assert tok.decode(ids) == s
+    # out-of-byte-range ids decode, not crash (models sample freely)
+    assert tok.decode([104, 105, 400]) == "hi" + tok.decode([255])
+    assert tok.eos_id == 0
+    assert ByteTokenizer(eos_id=None).eos_id is None
+
+
+def test_stream_decoder_holds_split_characters():
+    from repro.serving.tokenizer import ByteTokenizer, StreamDecoder
+    tok = ByteTokenizer()
+    dec = StreamDecoder(tok)
+    out = [dec.push(b) for b in tok.encode("a€b")]   # € is 3 bytes
+    assert out == ["a", "", "", "€", "b"]
+    assert dec.flush() == ""
+    # an incomplete tail surfaces on flush instead of vanishing
+    dec2 = StreamDecoder(tok)
+    parts = [dec2.push(b) for b in tok.encode("€")[:2]]
+    assert parts == ["", ""]
+    assert dec2.flush() != ""
+
+
+def test_facade_text_io_and_stream_text(setup, rng):
+    """Text in, text out, through both the blocking and streaming paths;
+    token-level results stay the source of truth underneath."""
+    from repro.serving.tokenizer import ByteTokenizer
+    cfg, params = setup
+    tok = ByteTokenizer(eos_id=None)
+    with LLM(cfg, params, max_slots=2, max_len=64, tokenizer=tok) as llm:
+        out = llm.generate("abcabcabc", max_new=8)[0]
+        assert out.prompt == tok.encode("abcabcabc")
+        assert out.text == tok.decode(out.tokens)
+        assert out.finish_reason == "length"
+        chunks = list(llm.stream_text("abcabcabc", max_new=8))
+        assert "".join(chunks) == out.text      # same request, same text
+    # no tokenizer: text prompts are rejected, token IO is unchanged
+    with LLM(cfg, params, max_slots=1, max_len=64) as llm:
+        with pytest.raises(ValueError, match="tokenizer"):
+            llm.generate("abc", max_new=4)
+        out = llm.generate([[1, 2, 3]], max_new=4)[0]
+        assert out.text is None
+
+
+def test_facade_finish_reason_from_scheduler(setup, rng):
+    """The batcher records WHY it finished a request; the facade reports
+    that verdict rather than re-deriving it from the token tail."""
+    cfg, params = setup
+    prompt = [int(t) for t in rng.integers(1, cfg.vocab_size, 8)]
+    with LLM(cfg, params, max_slots=1, max_len=64) as llm:
+        probe = llm.generate([prompt], max_new=6)[0]
+        assert probe.finish_reason == "length"
+        # now stop on the token the model actually emits mid-stream
+        eos = probe.tokens[2]
+        rid = llm.submit(prompt, 6, eos=eos)
+        out = llm.drain()[rid]
+    assert out.finish_reason == "eos"
+    assert out.tokens[-1] == eos

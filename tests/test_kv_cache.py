@@ -374,3 +374,56 @@ def test_scan_backend_rejects_paged(tiny_setup):
     with pytest.raises(NotImplementedError):
         ContinuousBatcher(cfg, backend=ScanResidentBackend(cfg, params),
                           max_slots=2, max_len=32, paged=True)
+
+
+# ---------------------------------------------------------------------------
+# truncate: speculative rollback's page-table primitive
+# ---------------------------------------------------------------------------
+
+def test_truncate_copies_shared_partial_page(tiny_setup):
+    """Shrinking onto a ref-counted trailing page must copy it first:
+    the slot will overwrite the tail on its next append, and the fork
+    sibling still reads the original bytes through its own table."""
+    cfg, _ = tiny_setup
+    kv = PagedKVCache(cfg, 2, 64, page_size=8)
+    kv.alloc(0, 20)                                 # pages A, B, C
+    cache = kv.init_cache()
+    pool = cache["pages_k0"]
+    for j, pid in enumerate(kv.mapped_pages(0)):
+        pool = pool.at[pid].set(float(j + 1))
+    cache["pages_k0"] = pool
+
+    cache = kv.fork(cache, 0, 1, 16)                # slot 1 aliases A, B
+    src = kv.mapped_pages(0)
+    free0 = kv.free_pages
+    cache = kv.truncate(cache, 0, 12)               # drop C, split B
+    now = kv.mapped_pages(0)
+    assert now[0] == src[0]                         # full page stays shared
+    assert now[1] != src[1]                         # partial page copied
+    assert kv.refcount(src[1]) == 1                 # sibling sole owner now
+    assert kv.refcount(now[1]) == 1
+    np.testing.assert_array_equal(cache["pages_k0"][now[1]],
+                                  cache["pages_k0"][src[1]])
+    assert kv.mapped_pages(1) == src[:2]            # sibling untouched
+    assert kv.free_pages == free0                   # C freed, copy taken
+    _allocator_consistent(kv)
+    kv.free(0)
+    kv.free(1)
+    assert kv.free_pages == kv.n_pages - 1
+
+
+def test_truncate_boundary_releases_and_sole_owner_keeps(tiny_setup):
+    cfg, _ = tiny_setup
+    kv = PagedKVCache(cfg, 1, 64, page_size=8)
+    kv.alloc(0, 20)                                 # 3 pages
+    cache = kv.init_cache()
+    free0 = kv.free_pages
+    cache = kv.truncate(cache, 0, 16)               # exactly 2 pages
+    assert len(kv.mapped_pages(0)) == 2
+    assert kv.free_pages == free0 + 1               # page boundary: no copy
+    pages = kv.mapped_pages(0)
+    cache = kv.truncate(cache, 0, 12)               # unaligned, ref-1 page
+    assert kv.mapped_pages(0) == pages              # kept in place, no copy
+    with pytest.raises(ValueError):
+        kv.truncate(cache, 0, 30)                   # truncate cannot grow
+    _allocator_consistent(kv)

@@ -1,0 +1,406 @@
+"""Heterogeneous speculative decoding (docs/SERVING.md): CPU-side
+drafting, batched verification over the paged KV cache, and rejection
+sampling that leaves the output distribution untouched.
+
+The contract under test: greedy speculative decoding is *token-identical*
+to the non-speculative baseline across dense/paged caches, chunked
+admission, and mid-speculation preemption; stochastic acceptance keeps
+the emitted marginal exactly the request's filtered sampling
+distribution; and a draft-less row inside a verify step draws
+bitwise-identically to a plain decode step (so speculation on one tenant
+can never perturb another).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import model as M
+from repro.serving.api import LLM
+from repro.serving.backends import ResidentBackend
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.sampling import (SamplingParams, pack_sampling,
+                                    request_key, sample_rows, step_key)
+from repro.serving.speculative import (AdaptiveK, ModelDrafter, NgramDrafter,
+                                       SpecConfig, SpecStats, accept_row,
+                                       filtered_probs)
+
+
+@pytest.fixture(scope="module")
+def setup():
+    cfg = get_config("tiny")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return cfg, params
+
+
+def _run(cfg, params, submits, *, spec=None, max_slots=2, max_len=64,
+         **kw):
+    """Run (rid, prompt, max_new, sampling) submits to completion;
+    returns ({rid: tokens}, batcher-stats-or-None)."""
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          own_backend=True, max_slots=max_slots,
+                          max_len=max_len, spec=spec, **kw)
+    for rid, p, n, sp in submits:
+        b.submit(p, n, sampling=sp, rid=rid)
+    out = {rid: list(t) for rid, t in b.run_until_done().items()}
+    stats = b.spec_stats if spec is not None else None
+    b.close()
+    return out, stats
+
+
+def _repetitive(rng, vocab, length, period=4):
+    motif = [int(t) for t in rng.integers(1, vocab, period)]
+    return (motif * length)[:length]
+
+
+# ---------------------------------------------------------------------------
+# drafters as pure functions
+# ---------------------------------------------------------------------------
+
+def test_ngram_drafter_lookup():
+    d = NgramDrafter(max_ngram=3)
+    # newest trigram [2,3,4] recurs: propose its continuation
+    assert d.propose(0, [1, 2, 3, 4, 9, 1, 2, 3, 4], 3) == [9, 1, 2]
+    # k caps the continuation
+    assert d.propose(0, [1, 2, 3, 4, 9, 1, 2, 3, 4], 1) == [9]
+    # nothing recurs: no proposal (falls back to plain decode)
+    assert d.propose(0, [1, 2, 3, 4, 5, 6], 4) == []
+    assert d.propose(0, [], 4) == []
+    assert d.propose(0, [1, 2], 0) == []
+
+
+def test_ngram_drafter_prefers_longest_then_most_recent():
+    d = NgramDrafter(max_ngram=2)
+    # bigram [1,2] occurs twice earlier; the most recent match (followed
+    # by 8) must win over the older one (followed by 7)
+    assert d.propose(0, [1, 2, 7, 1, 2, 8, 1, 2], 1) == [8]
+    # longest n wins: unigram [5] matches, but bigram [2,5] also matches
+    # with a different continuation
+    toks = [2, 5, 6, 5, 9, 2, 5]
+    assert d.propose(0, toks, 1) == [6]         # via bigram [2,5]
+    d1 = NgramDrafter(max_ngram=1)
+    assert d1.propose(0, toks, 1) == [9]        # unigram sees newest 5
+    with pytest.raises(ValueError):
+        NgramDrafter(max_ngram=0)
+
+
+def test_adaptive_k_controller():
+    ak = AdaptiveK(4, k_min=2, k_max=6)
+    assert ak.k_for(0) == 4
+    ak.update(0, 4, 4)                  # full acceptance: grow
+    assert ak.k_for(0) == 5
+    ak.update(0, 5, 5)
+    ak.update(0, 6, 6)                  # capped at k_max
+    assert ak.k_for(0) == 6
+    ak.update(0, 6, 2)                  # < half survived: shrink
+    assert ak.k_for(0) == 5
+    ak.update(0, 5, 3)                  # middling: hold
+    assert ak.k_for(0) == 5
+    for _ in range(10):
+        ak.update(0, 5, 0)              # floored at k_min
+    assert ak.k_for(0) == 2
+    ak.update(1, 0, 0)                  # draft-less step: no-op
+    assert ak.k_for(1) == 4
+    ak.release(0)
+    assert ak.k_for(0) == 4
+
+
+def test_spec_config_validation():
+    with pytest.raises(ValueError):
+        SpecConfig(drafter=NgramDrafter(), k=0)
+    with pytest.raises(ValueError):
+        SpecConfig(drafter=NgramDrafter(), k=2, k_min=3, k_max=2)
+    st = SpecStats()
+    st.record(4, 2)
+    st.record(0, 0)                     # draft-less steps don't count
+    assert st.as_dict() == {"steps": 1, "drafted": 4, "accepted": 2,
+                            "rolled_back": 2, "acceptance_rate": 0.5}
+
+
+# ---------------------------------------------------------------------------
+# the host mirror of the device sampler's filter
+# ---------------------------------------------------------------------------
+
+def test_filtered_probs_supports_exactly_the_sampler(rng):
+    """filtered_probs' support must equal the set of tokens sample_rows
+    can emit: many seeded device draws all land inside the support, and
+    every strictly-positive mode keeps more than the argmax."""
+    logits = np.asarray(rng.standard_normal(64) * 2, np.float32)
+    for params in (SamplingParams(kind="topk", top_k=5, temperature=2.0),
+                   SamplingParams(kind="topp", top_p=0.7, temperature=2.0),
+                   SamplingParams(kind="temperature", temperature=3.0)):
+        p = filtered_probs(logits, params)
+        assert p.shape == (64,)
+        assert abs(p.sum() - 1.0) < 1e-5
+        assert p[int(np.argmax(logits))] > 0          # argmax always kept
+        if params.kind == "topk":
+            assert (p > 0).sum() <= params.top_k
+        n = 128
+        keys = jnp.stack([jax.random.PRNGKey(10_000 + i) for i in range(n)])
+        draws = np.asarray(sample_rows(
+            jnp.tile(jnp.asarray(logits)[None], (n, 1)), keys,
+            pack_sampling([params] * n)))
+        assert set(draws.tolist()) <= set(np.flatnonzero(p > 0).tolist())
+
+
+def test_accept_row_marginal_matches_filtered_probs(rng):
+    """The rejection-sampling marginal: over many request keys, the first
+    token accept_row emits is distributed as filtered_probs — whether the
+    draft was the mode (mostly accepted) or a tail token (mostly
+    rejected and resampled)."""
+    logits = np.asarray(rng.standard_normal(16), np.float32)
+    params = SamplingParams(kind="temperature", temperature=3.0)
+    p = filtered_probs(logits, params)
+    rows = np.stack([logits, logits])           # bonus row is irrelevant
+    for draft in (int(np.argmax(p)), int(np.argmin(p))):
+        counts = np.zeros(16)
+        n = 600
+        for i in range(n):
+            key = request_key(jax.random.PRNGKey(3), i, params)
+            out = accept_row(rows, [draft], params, key, 0)
+            counts[out[0]] += 1
+        tv = 0.5 * np.abs(counts / n - p).sum()
+        assert tv < 0.11, (draft, tv)
+
+
+def test_accept_row_greedy_is_argmax_chain(rng):
+    rows = np.asarray(rng.standard_normal((4, 32)), np.float32)
+    arg = [int(np.argmax(r)) for r in rows]
+    key = request_key(jax.random.PRNGKey(0), 0, SamplingParams())
+    # all drafts match: every argmax plus the bonus argmax
+    assert accept_row(rows, arg[:3], SamplingParams(), key, 0) == arg
+    # first mismatch cuts the run and emits the correction
+    wrong = [arg[0], (arg[1] + 1) % 32, arg[2]]
+    assert accept_row(rows, wrong, SamplingParams(), key, 0) == arg[:2]
+
+
+# ---------------------------------------------------------------------------
+# greedy identity: dense / paged / chunked admission
+# ---------------------------------------------------------------------------
+
+def _greedy_submits(rng, cfg, n=3, plen=12, max_new=10):
+    subs = []
+    for rid in range(n):
+        subs.append((rid, _repetitive(rng, cfg.vocab_size, plen, 3 + rid),
+                     max_new, SamplingParams()))
+    return subs
+
+
+def test_spec_greedy_token_identical_dense(setup, rng):
+    cfg, params = setup
+    subs = _greedy_submits(rng, cfg)
+    base, _ = _run(cfg, params, subs)
+    spec = SpecConfig(drafter=NgramDrafter(), k=4)
+    out, stats = _run(cfg, params, subs, spec=spec)
+    assert out == base
+    assert stats.drafted > 0 and stats.accepted > 0
+
+
+def test_spec_greedy_token_identical_paged(setup, rng):
+    cfg, params = setup
+    subs = _greedy_submits(rng, cfg)
+    base, _ = _run(cfg, params, subs)
+    spec = SpecConfig(drafter=NgramDrafter(), k=4)
+    out, stats = _run(cfg, params, subs, spec=spec, paged=True, page_size=8)
+    assert out == base
+    assert stats.accepted > 0
+
+
+def test_spec_greedy_token_identical_chunked_admission(setup, rng):
+    """A long prompt admitted in chunks, then speculated over: the
+    chunked-prefill scheduler path and the verify path compose without
+    perturbing tokens."""
+    cfg, params = setup
+    subs = [(0, _repetitive(rng, cfg.vocab_size, 30, 3), 10,
+             SamplingParams()),
+            (1, _repetitive(rng, cfg.vocab_size, 8, 4), 10,
+             SamplingParams())]
+    base, _ = _run(cfg, params, subs, max_len=64)
+    spec = SpecConfig(drafter=NgramDrafter(), k=4)
+    out, stats = _run(cfg, params, subs, spec=spec, paged=True, page_size=8,
+                      chunk_tokens=8, max_len=64)
+    assert out == base
+    assert stats.accepted > 0
+
+
+def test_spec_adaptive_k_identical_and_bounded(setup, rng):
+    cfg, params = setup
+    subs = _greedy_submits(rng, cfg, n=2)
+    base, _ = _run(cfg, params, subs)
+    spec = SpecConfig(drafter=NgramDrafter(), k=2, adaptive=True,
+                      k_min=1, k_max=5)
+    out, stats = _run(cfg, params, subs, spec=spec)
+    assert out == base                  # adaptation never changes tokens
+    assert stats.drafted > 0
+
+
+# ---------------------------------------------------------------------------
+# preemption mid-speculation
+# ---------------------------------------------------------------------------
+
+def test_spec_preempt_resume_token_identical(setup, rng):
+    """A page pool too small for both tenants forces preempt/resume in
+    the middle of speculative runs; deterministic re-drafting on resume
+    keeps every request token-identical to the unpressured baseline."""
+    cfg, params = setup
+    subs = _greedy_submits(rng, cfg, n=3, plen=10, max_new=12)
+    base, _ = _run(cfg, params, subs, max_slots=3, max_len=64)
+    spec = SpecConfig(drafter=NgramDrafter(), k=4)
+    b = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                          own_backend=True, max_slots=3, max_len=64,
+                          paged=True, page_size=8, n_pages=9,
+                          spec=spec)
+    for rid, p, n, sp in subs:
+        b.submit(p, n, sampling=sp, rid=rid)
+    out = {rid: list(t) for rid, t in b.run_until_done().items()}
+    preemptions = b.scheduler.preemptions
+    b.close()
+    assert out == base
+    assert preemptions > 0              # the squeeze actually happened
+
+
+# ---------------------------------------------------------------------------
+# speculation on one tenant cannot perturb another
+# ---------------------------------------------------------------------------
+
+class _OnlyRid:
+    """Wrap a drafter so only one request ever gets drafts: the other
+    rides the verify batch as a draft-less row."""
+
+    def __init__(self, inner, rid):
+        self.inner, self.rid = inner, rid
+
+    def propose(self, rid, tokens, k):
+        return self.inner.propose(rid, tokens, k) if rid == self.rid else []
+
+    def release(self, rid):
+        self.inner.release(rid)
+
+    def close(self):
+        self.inner.close()
+
+
+def test_spec_draftless_row_bitwise_stochastic(setup, rng):
+    """A stochastic tenant that never drafts shares verify steps with a
+    speculating neighbor; its bonus draw rides sample_rows with the plain
+    step key, so its tokens are bitwise the baseline's."""
+    cfg, params = setup
+    sto = SamplingParams(kind="temperature", temperature=2.0)
+    subs = [(0, _repetitive(rng, cfg.vocab_size, 12, 3), 10,
+             SamplingParams()),
+            (1, [int(t) for t in rng.integers(1, cfg.vocab_size, 9)], 10,
+             sto)]
+    base, _ = _run(cfg, params, subs)
+    spec = SpecConfig(drafter=_OnlyRid(NgramDrafter(), 0), k=4)
+    for kw in ({}, {"paged": True, "page_size": 8}):
+        out, stats = _run(cfg, params, subs, spec=spec, **kw)
+        assert out[1] == base[1]        # stochastic tenant: bitwise
+        assert out[0] == base[0]        # greedy tenant: argmax chain
+        assert stats.accepted > 0
+
+
+# ---------------------------------------------------------------------------
+# rejection / rollback under a hot sampler
+# ---------------------------------------------------------------------------
+
+class _ConstDrafter:
+    """Always proposes the same run — drafting quality is irrelevant when
+    the test targets the rejection/rollback machinery itself."""
+
+    def __init__(self, run):
+        self.run = list(run)
+
+    def propose(self, rid, tokens, k):
+        return self.run[:k]
+
+    def release(self, rid):
+        pass
+
+    def close(self):
+        pass
+
+
+def test_spec_rollback_truncates_and_finishes(setup, rng):
+    """At a temperature hot enough to reject almost every draft, the KV
+    rollback path (dense len reset, paged truncate) runs and every
+    request still finishes with exactly its budget."""
+    cfg, params = setup
+    hot = SamplingParams(kind="temperature", temperature=25.0)
+    subs = [(rid, _repetitive(rng, cfg.vocab_size, 12, 3), 8, hot)
+            for rid in range(2)]
+    spec = SpecConfig(drafter=_ConstDrafter([1, 2, 3]), k=3)
+    for kw in ({}, {"paged": True, "page_size": 8}):
+        out, stats = _run(cfg, params, subs, spec=spec, **kw)
+        assert all(len(t) == 8 for t in out.values())
+        assert stats.rolled_back > 0
+        assert stats.drafted == stats.accepted + stats.rolled_back
+
+
+# ---------------------------------------------------------------------------
+# the model drafter
+# ---------------------------------------------------------------------------
+
+def test_model_drafter_self_draft_identity(setup, rng):
+    """Drafting with the target model itself: every greedy draft is the
+    target's own argmax, so acceptance is total and output identical."""
+    cfg, params = setup
+    subs = _greedy_submits(rng, cfg, n=2, plen=8, max_new=8)
+    base, _ = _run(cfg, params, subs)
+    drafter = ModelDrafter(cfg, params, max_len=64)
+    spec = SpecConfig(drafter=drafter, k=3)
+    out, stats = _run(cfg, params, subs, spec=spec, paged=True, page_size=8)
+    assert out == base
+    assert stats.drafted > 0
+    assert stats.acceptance_rate == 1.0
+
+
+def test_model_drafter_reconciles_after_rejection(setup, rng):
+    """Rejected speculation leaves the drafter's private cache ahead of
+    the request's real history; the LCP reconciliation re-feeds only the
+    divergent tail and keeps proposing."""
+    cfg, params = setup
+    hot = SamplingParams(kind="temperature", temperature=25.0)
+    subs = [(0, _repetitive(rng, cfg.vocab_size, 10, 3), 8, hot)]
+    drafter = ModelDrafter(cfg, params, max_len=64)
+    spec = SpecConfig(drafter=drafter, k=3)
+    out, stats = _run(cfg, params, subs, spec=spec)
+    assert len(out[0]) == 8
+    assert stats.rolled_back > 0        # rejections actually happened
+    assert not drafter._fed             # released on finish
+
+
+# ---------------------------------------------------------------------------
+# the facade: stats, finish_reason, eos mid-run
+# ---------------------------------------------------------------------------
+
+def test_facade_spec_stats_and_acceptance(setup, rng):
+    cfg, params = setup
+    prompts = [_repetitive(rng, cfg.vocab_size, 12, 3) for _ in range(2)]
+    spec = SpecConfig(drafter=NgramDrafter(), k=4)
+    with LLM(cfg, params, max_slots=2, max_len=64, paged=True,
+             page_size=8, spec=spec) as llm:
+        outs = llm.generate(prompts, max_new=10)
+        assert llm.last_executor == "batcher"   # spec never runs one-shot
+        st = llm.stats()["spec"]
+    assert st["drafted"] > 0 and st["accepted"] > 0
+    assert st["acceptance_rate"] > 0
+    assert st["drafted"] == st["accepted"] + st["rolled_back"]
+    assert set(st["per_request"]) == {o.rid for o in outs}
+    assert all(o.finish_reason == "length" for o in outs)
+
+
+def test_facade_spec_eos_mid_draft(setup, rng):
+    """An eos token emitted in the middle of an accepted draft run cuts
+    the output there and reports finish_reason='eos'."""
+    cfg, params = setup
+    prompt = _repetitive(rng, cfg.vocab_size, 12, 3)
+    with LLM(cfg, params, max_slots=1, max_len=64) as llm:
+        base = llm.generate([prompt], max_new=10)[0].tokens
+    assert len(base) == 10
+    eos = base[5]                       # force a stop mid-stream
+    spec = SpecConfig(drafter=NgramDrafter(), k=4)
+    with LLM(cfg, params, max_slots=1, max_len=64, spec=spec) as llm:
+        out = llm.generate([prompt], max_new=10, eos=eos)[0]
+    assert out.finish_reason == "eos"
+    assert out.tokens == base[:base.index(eos) + 1]

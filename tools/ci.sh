@@ -220,4 +220,49 @@ assert n_chunks == sum(-(-len(p) // 5) for p in prompts if len(p) > 5)
 print("chunked prefill smoke OK:", chunked, f"chunks={n_chunks}")
 EOF
 
+echo "== smoke: speculative decoding (CPU draft, batched verify) =="
+python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.backends import HeteGenBackend, ResidentBackend
+from repro.serving.batcher import ContinuousBatcher
+from repro.serving.speculative import NgramDrafter, SpecConfig
+
+cfg = get_config("tiny")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+rng = np.random.default_rng(0)
+# repetitive prompts: prompt-lookup drafting has something to look up
+prompts = [([int(t) for t in rng.integers(1, cfg.vocab_size, 3)] * 5)[:12]
+           for _ in range(2)]
+
+base = ContinuousBatcher(cfg, backend=ResidentBackend(cfg, params),
+                         own_backend=True, max_slots=2, max_len=48)
+bids = [base.submit(p, 8) for p in prompts]
+want = base.run_until_done()
+base.close()
+
+# greedy speculation over the paged offload path: token-identical, and
+# the verify phase gets its own placement plan beside prefill/decode
+hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0, batch=2)
+b = ContinuousBatcher(cfg, backend=hb, max_slots=2, max_len=48,
+                      paged=True, page_size=8,
+                      spec=SpecConfig(drafter=NgramDrafter(), k=4))
+sids = [b.submit(p, 8) for p in prompts]
+got = b.run_until_done()
+st = b.spec_stats
+assert all(want[d] == got[s] for d, s in zip(bids, sids)), (want, got)
+assert st.drafted > 0 and st.accepted > 0, st.as_dict()
+assert st.drafted == st.accepted + st.rolled_back
+assert b.kv.free_pages == b.kv.usable_pages, "pages leaked"
+assert "verify" in hb.policies, hb.policies.keys()
+hb.close()
+b.close()
+print("speculative smoke OK:", [got[s] for s in sids],
+      f"acceptance={st.acceptance_rate:.2f}")
+EOF
+
 echo "CI OK"
