@@ -1,0 +1,25 @@
+"""`repro.analysis.lint` — static invariant analyzer for the kernels
+and the serving stack (docs/ANALYSIS.md).
+
+Rules:
+
+* ``kernel-grid-bounds`` / ``kernel-tile-alignment`` / ``kernel-dtype``
+  / ``kernel-scalar-arity`` — Pallas BlockSpec/grid proofs
+  (:mod:`.kernel_check`)
+* ``hot-path-sync`` — no host sync reachable from the decode step
+  (:mod:`.hotpath`)
+* ``prng-discipline`` — request-owned keys only (:mod:`.prng`)
+* ``lock-discipline`` — cross-thread writes under the declared lock
+  (:mod:`.locks`)
+
+Run ``python -m repro.analysis.lint --strict`` (the tier-1 CI gate) or
+``--changed-only`` for the fast git-diff-scoped mode.  Suppress a
+finding with ``# lint: allow[rule-name] justification``.
+"""
+
+from .diagnostics import (Finding, SuppressionIndex, exit_code,  # noqa: F401
+                          render_human, render_json)
+from .hotpath import check_hotpath                               # noqa: F401
+from .kernel_check import check_kernels, findings_for_callable   # noqa: F401
+from .locks import check_locks                                   # noqa: F401
+from .prng import check_prng                                     # noqa: F401

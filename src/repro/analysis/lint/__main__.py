@@ -1,0 +1,96 @@
+"""Driver: ``python -m repro.analysis.lint [--strict] [--json]
+[--changed-only]``.
+
+Runs every rule, applies `# lint: allow[...]` suppressions, renders
+human or JSON output, and exits 0 (clean) / 1 (findings) / 2 (analyzer
+crash) — the contract tools/ci.sh gates on.  ``--changed-only`` scopes
+the AST lints to files changed vs HEAD (plus untracked) and skips the
+kernel checker unless a kernel or analyzer file changed, keeping the
+iterative loop fast.
+"""
+
+from __future__ import annotations
+
+import argparse
+import subprocess
+import sys
+import traceback
+from pathlib import Path
+from typing import List, Optional, Set
+
+from . import hotpath, kernel_check, locks, prng
+from .diagnostics import (REPO_ROOT, Finding, SuppressionIndex, exit_code,
+                          render_human, render_json)
+
+
+def _changed_files(root: Path) -> Set[str]:
+    changed: Set[str] = set()
+    try:
+        diff = subprocess.run(
+            ["git", "diff", "--name-only", "HEAD"],
+            cwd=root, capture_output=True, text=True, check=True)
+        changed |= {l.strip() for l in diff.stdout.splitlines() if l.strip()}
+        status = subprocess.run(
+            ["git", "status", "--porcelain"],
+            cwd=root, capture_output=True, text=True, check=True)
+        changed |= {l[3:].strip() for l in status.stdout.splitlines()
+                    if l[:2].strip() and len(l) > 3}
+    except (subprocess.CalledProcessError, FileNotFoundError):
+        return set()        # not a git checkout: fall back to full scan
+    return changed
+
+
+def run(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(prog="python -m repro.analysis.lint")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings (e.g. bare suppressions) also fail")
+    ap.add_argument("--json", action="store_true", dest="as_json",
+                    help="machine-readable findings on stdout")
+    ap.add_argument("--changed-only", action="store_true",
+                    help="scope to files changed vs HEAD (git)")
+    ap.add_argument("--root", type=Path, default=REPO_ROOT,
+                    help="repository root (default: auto-detected)")
+    ap.add_argument("--skip-kernels", action="store_true",
+                    help="skip the (import-heavy) Pallas kernel checker")
+    args = ap.parse_args(argv)
+    root = args.root.resolve()
+
+    changed = _changed_files(root) if args.changed_only else None
+
+    def _scoped(files: List[str]) -> List[str]:
+        if changed is None:
+            return files
+        return [f for f in files if f in changed]
+
+    findings: List[Finding] = []
+    try:
+        run_kernels = not args.skip_kernels
+        if run_kernels and changed is not None:
+            run_kernels = any(
+                f.startswith(("src/repro/kernels/", "src/repro/analysis/"))
+                for f in changed)
+        if run_kernels:
+            findings += kernel_check.check_kernels()
+
+        hp_files = _scoped(hotpath.scope_files(root))
+        if changed is None or hp_files:
+            # the call graph needs the full scope even when only some
+            # files changed; findings are filtered to the changed set
+            hp = hotpath.check_hotpath(root)
+            if changed is not None:
+                hp = [f for f in hp if f.path in changed]
+            findings += hp
+        findings += prng.check_prng(root, _scoped(prng.scope_files(root)))
+        findings += locks.check_locks(root, _scoped(locks.scope_files(root)))
+    except Exception:
+        traceback.print_exc()
+        print("lint: internal error (exit 2)", file=sys.stderr)
+        return 2
+
+    findings = SuppressionIndex(root).apply(findings)
+    print(render_json(findings) if args.as_json else render_human(findings))
+    return exit_code(findings, strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(run())

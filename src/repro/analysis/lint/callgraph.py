@@ -1,0 +1,163 @@
+"""An over-approximate call graph over the serving/core sources.
+
+Python gives us no static dispatch, so resolution is deliberately
+conservative (may-call): ``self.m(...)`` resolves to the same class's
+``m`` if it exists, else to *every* method named ``m``; ``obj.m(...)``
+resolves to every method or function named ``m`` in the scanned set;
+bare names resolve through the module's import aliases and module-level
+functions.  Functions passed as callables to ``*.submit(...)`` or
+``Thread(target=...)`` count as calls (they will run).  Nested
+functions and lambdas are folded into their enclosing def.
+
+Over-approximation errs toward *more* reachable code — exactly the right
+direction for the hot-path lint, which must not miss a sync hiding
+behind a dynamically-dispatched backend method.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+
+@dataclass
+class FuncInfo:
+    path: str                       # repo-relative
+    module: str                     # e.g. "repro.serving.batcher"
+    cls: Optional[str]              # enclosing class name or None
+    name: str
+    node: ast.AST                   # FunctionDef / AsyncFunctionDef
+
+    @property
+    def qualname(self) -> str:
+        return f"{self.cls}.{self.name}" if self.cls else self.name
+
+    @property
+    def key(self) -> Tuple[str, Optional[str], str]:
+        return (self.path, self.cls, self.name)
+
+
+@dataclass
+class ModuleInfo:
+    path: str
+    module: str
+    tree: ast.Module
+    aliases: Dict[str, str] = field(default_factory=dict)  # local -> target
+
+
+class CodeIndex:
+    """Parsed modules plus name -> definition lookup tables."""
+
+    def __init__(self):
+        self.modules: Dict[str, ModuleInfo] = {}          # path -> info
+        self.funcs: Dict[Tuple[str, Optional[str], str], FuncInfo] = {}
+        self.methods_by_name: Dict[str, List[FuncInfo]] = {}
+        self.functions_by_name: Dict[str, List[FuncInfo]] = {}
+        self.classes: Dict[str, List[Tuple[str, ast.ClassDef]]] = {}
+
+    def add_file(self, path: Path, rel: str, module: str) -> None:
+        tree = ast.parse(path.read_text(), filename=str(path))
+        mi = ModuleInfo(rel, module, tree)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Import):
+                for a in node.names:
+                    mi.aliases[a.asname or a.name.split(".")[0]] = a.name
+            elif isinstance(node, ast.ImportFrom):
+                for a in node.names:
+                    mi.aliases[a.asname or a.name] = \
+                        f"{node.module}.{a.name}" if node.module else a.name
+        self.modules[rel] = mi
+
+        for node in tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                fi = FuncInfo(rel, module, None, node.name, node)
+                self.funcs[fi.key] = fi
+                self.functions_by_name.setdefault(node.name, []).append(fi)
+            elif isinstance(node, ast.ClassDef):
+                self.classes.setdefault(node.name, []).append((rel, node))
+                for item in node.body:
+                    if isinstance(item, (ast.FunctionDef,
+                                         ast.AsyncFunctionDef)):
+                        fi = FuncInfo(rel, module, node.name,
+                                      item.name, item)
+                        self.funcs[fi.key] = fi
+                        self.methods_by_name.setdefault(
+                            item.name, []).append(fi)
+
+    def class_method(self, path: str, cls: str, name: str) \
+            -> Optional[FuncInfo]:
+        return self.funcs.get((path, cls, name))
+
+
+_CALLABLE_SINKS = {"submit", "Thread", "map", "call_soon", "after"}
+
+
+def _called_names(fn: FuncInfo, index: CodeIndex) -> Iterable[ast.expr]:
+    """Yield callee expressions: call targets plus callables handed to
+    executors/threads (which will be called)."""
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        yield node.func
+        f = node.func
+        sink = (isinstance(f, ast.Attribute) and f.attr in _CALLABLE_SINKS) \
+            or (isinstance(f, ast.Name) and f.id in _CALLABLE_SINKS)
+        if sink:
+            for arg in list(node.args) + [kw.value for kw in node.keywords]:
+                if isinstance(arg, (ast.Attribute, ast.Name)):
+                    yield arg
+
+
+def _resolve(expr: ast.expr, fn: FuncInfo, index: CodeIndex) \
+        -> List[FuncInfo]:
+    if isinstance(expr, ast.Attribute):
+        name = expr.attr
+        if isinstance(expr.value, ast.Name) and expr.value.id == "self" \
+                and fn.cls is not None:
+            own = index.class_method(fn.path, fn.cls, name)
+            if own is not None:
+                return [own]
+        # unknown receiver: every method or function with this name may run
+        return index.methods_by_name.get(name, []) \
+            + index.functions_by_name.get(name, [])
+    if isinstance(expr, ast.Name):
+        mi = index.modules[fn.path]
+        same = [f for f in index.functions_by_name.get(expr.id, [])
+                if f.path == fn.path]
+        if same:
+            return same
+        target = mi.aliases.get(expr.id)
+        if target:
+            leaf = target.rsplit(".", 1)[-1]
+            return [f for f in index.functions_by_name.get(leaf, [])]
+    return []
+
+
+def reachable_from(index: CodeIndex,
+                   entries: Iterable[Tuple[str, Optional[str], str]]) \
+        -> Set[Tuple[str, Optional[str], str]]:
+    """BFS over may-call edges from the entry points (path, cls, name)."""
+    seen: Set[Tuple[str, Optional[str], str]] = set()
+    work = [index.funcs[e] for e in entries if e in index.funcs]
+    for fn in work:
+        seen.add(fn.key)
+    while work:
+        fn = work.pop()
+        for expr in _called_names(fn, index):
+            for callee in _resolve(expr, fn, index):
+                if callee.key not in seen:
+                    seen.add(callee.key)
+                    work.append(callee)
+    return seen
+
+
+def build_index(root: Path, rel_files: Iterable[str],
+                pkg_prefix: str = "repro") -> CodeIndex:
+    index = CodeIndex()
+    for rel in rel_files:
+        p = root / rel
+        mod = rel.removeprefix("src/").removesuffix(".py").replace("/", ".")
+        index.add_file(p, rel, mod)
+    return index

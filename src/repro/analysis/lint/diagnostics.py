@@ -1,0 +1,153 @@
+"""Findings, suppressions, and rendering for `repro.analysis.lint`.
+
+A *finding* is one violated invariant, anchored to a file/line and a rule
+name.  Suppressions are source comments of the form
+
+    # lint: allow[rule-name] justification for why this site is exempt
+
+placed on the flagged line or the line directly above it.  The
+justification is mandatory: a bare ``allow[...]`` suppresses the finding
+but emits a ``bare-suppression`` warning in its place, so suppressed
+sites stay visible in review (and fail ``--strict``).
+
+Exit-code semantics (used by the driver and tools/ci.sh):
+
+    0  no findings (warnings allowed unless --strict)
+    1  findings
+    2  the analyzer itself crashed
+"""
+
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from pathlib import Path
+from typing import Dict, Iterable, List, Optional, Set, Tuple
+
+REPO_ROOT = Path(__file__).resolve().parents[4]
+
+_SUPPRESS_RE = re.compile(
+    r"#\s*lint:\s*allow\[([A-Za-z0-9_-]+)\]\s*(.*?)\s*$")
+
+
+@dataclass
+class Finding:
+    rule: str
+    path: str                 # repo-relative, POSIX separators
+    line: int
+    message: str
+    severity: str = "error"   # "error" | "warning"
+
+    def render(self) -> str:
+        return (f"{self.path}:{self.line}: "
+                f"[{self.rule}] {self.severity}: {self.message}")
+
+
+def relpath(p: str | Path, root: Path = REPO_ROOT) -> str:
+    p = Path(p).resolve()
+    try:
+        return p.relative_to(root).as_posix()
+    except ValueError:
+        return p.as_posix()
+
+
+@dataclass
+class Suppression:
+    rule: str
+    line: int
+    justification: str
+    covers: Tuple[int, ...] = ()
+    used: bool = False
+
+
+def scan_suppressions(path: Path) -> List[Suppression]:
+    out: List[Suppression] = []
+    try:
+        text = path.read_text()
+    except OSError:
+        return out
+    lines = text.splitlines()
+    for i, ln in enumerate(lines, start=1):
+        m = _SUPPRESS_RE.search(ln)
+        if not m:
+            continue
+        # a suppression covers its own line (trailing comment) and the
+        # next source line after the comment block it belongs to, so a
+        # multi-line justification still anchors to the flagged statement
+        covers = [i]
+        j = i
+        while j < len(lines):
+            stripped = lines[j].strip()
+            j += 1
+            if stripped and not stripped.startswith("#"):
+                covers.append(j)
+                break
+        out.append(Suppression(m.group(1), i, m.group(2), tuple(covers)))
+    return out
+
+
+class SuppressionIndex:
+    """Per-file cache of `# lint: allow[...]` comments.
+
+    A suppression on line L covers findings on L (trailing comment) and
+    L+1 (comment-above).  Bare suppressions still suppress, but each one
+    surfaces as a ``bare-suppression`` warning so it cannot hide
+    silently.
+    """
+
+    def __init__(self, root: Path = REPO_ROOT):
+        self.root = root
+        self._cache: Dict[str, List[Suppression]] = {}
+
+    def _for_file(self, rel: str) -> List[Suppression]:
+        if rel not in self._cache:
+            self._cache[rel] = scan_suppressions(self.root / rel)
+        return self._cache[rel]
+
+    def matches(self, f: Finding) -> Optional[Suppression]:
+        for s in self._for_file(f.path):
+            if s.rule == f.rule and f.line in s.covers:
+                return s
+        return None
+
+    def apply(self, findings: Iterable[Finding]) -> List[Finding]:
+        kept: List[Finding] = []
+        for f in findings:
+            s = self.matches(f)
+            if s is None:
+                kept.append(f)
+            else:
+                s.used = True
+                if not s.justification:
+                    kept.append(Finding(
+                        "bare-suppression", f.path, s.line,
+                        f"suppression of [{f.rule}] has no justification "
+                        f"(write `# lint: allow[{f.rule}] <why>`)",
+                        severity="warning"))
+        return kept
+
+
+def exit_code(findings: List[Finding], strict: bool) -> int:
+    errors = [f for f in findings if f.severity == "error"]
+    if errors:
+        return 1
+    if strict and findings:
+        return 1
+    return 0
+
+
+def render_human(findings: List[Finding]) -> str:
+    if not findings:
+        return "lint: clean (0 findings)"
+    lines = [f.render() for f in sorted(
+        findings, key=lambda f: (f.path, f.line, f.rule))]
+    n_err = sum(f.severity == "error" for f in findings)
+    n_warn = len(findings) - n_err
+    lines.append(f"lint: {n_err} error(s), {n_warn} warning(s)")
+    return "\n".join(lines)
+
+
+def render_json(findings: List[Finding]) -> str:
+    return json.dumps({"findings": [asdict(f) for f in sorted(
+        findings, key=lambda f: (f.path, f.line, f.rule))]}, indent=2)

@@ -1,0 +1,115 @@
+"""Hot-path sync lint: no host synchronization on the decode step.
+
+HeteGen's throughput comes from overlapping CPU compute, PCIe transfer,
+and device compute; a single hidden host sync (`.item()`, `np.asarray`
+on a device array, `jax.device_get`, `block_until_ready`) on the decode
+step serializes the whole pipeline.  This lint walks the may-call graph
+from ``ContinuousBatcher.step`` (the one function every decode token
+passes through) and flags those calls in any reachable function under
+``src/repro/serving`` or ``src/repro/core``.
+
+Escapes, in declared order of preference:
+
+* ``SAMPLING_SINKS`` — functions whose *job* is host-side sampling
+  (the per-step sample and the speculative accept/reject mirror); the
+  sync there is the one the design budget already accounts for.
+* ``np.asarray([...literal...])`` — building a host array from Python
+  scalars is not a device sync; exempted structurally.
+* ``# lint: allow[hot-path-sync] why`` — site-level suppression with a
+  mandatory justification (e.g. the engine's stream-timing syncs, which
+  are the measurement the alpha controller feeds on).
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Iterable, List, Optional, Set, Tuple
+
+from .callgraph import CodeIndex, FuncInfo, build_index, reachable_from
+from .diagnostics import Finding
+
+RULE = "hot-path-sync"
+
+# the decode step: every generated token passes through here.  The
+# HeteGen engine's linear is declared explicitly because the backend
+# reaches it through jit-built closures the static graph cannot follow.
+ENTRY_POINTS = [
+    ("src/repro/serving/batcher.py", "ContinuousBatcher", "step"),
+    ("src/repro/core/engine.py", "HeteGenEngine", "linear"),
+]
+
+# functions whose purpose is host-side sampling/acceptance: the one
+# host sync per step the design accounts for (docs/ANALYSIS.md)
+SAMPLING_SINKS = {
+    ("src/repro/serving/batcher.py", "ContinuousBatcher",
+     "_sample_slot_rows"),
+    ("src/repro/serving/speculative.py", None, "filtered_probs"),
+    ("src/repro/serving/speculative.py", None, "logprob_record"),
+    ("src/repro/serving/speculative.py", None, "accept_row"),
+}
+
+_NUMPY_ALIASES = {"np", "numpy"}
+_LITERAL = (ast.List, ast.Tuple, ast.ListComp, ast.GeneratorExp,
+            ast.Constant)
+
+
+def scope_files(root: Path) -> List[str]:
+    rels = []
+    for sub in ("src/repro/serving", "src/repro/core"):
+        rels += sorted(str(p.relative_to(root).as_posix())
+                       for p in (root / sub).glob("*.py"))
+    # models.model is transit (backends call into it) but its findings
+    # are out of scope here — jnp-only by construction
+    extra = root / "src/repro/models/model.py"
+    if extra.exists():
+        rels.append("src/repro/models/model.py")
+    return rels
+
+
+def _flag_sync_calls(fn: FuncInfo) -> Iterable[Tuple[int, str]]:
+    for node in ast.walk(fn.node):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            if f.attr == "item" and not node.args:
+                yield node.lineno, ".item() forces a device->host transfer"
+            elif f.attr == "block_until_ready":
+                yield node.lineno, "block_until_ready() stalls the " \
+                    "dispatch pipeline"
+            elif f.attr == "device_get" and \
+                    isinstance(f.value, ast.Name) and f.value.id == "jax":
+                yield node.lineno, "jax.device_get copies device->host"
+            elif f.attr in ("asarray", "array") and \
+                    isinstance(f.value, ast.Name) and \
+                    f.value.id in _NUMPY_ALIASES:
+                if node.args and isinstance(node.args[0], _LITERAL):
+                    continue        # host literal, not a device sync
+                yield node.lineno, f"np.{f.attr} on a (possibly device) " \
+                    "array blocks until the value is ready"
+
+
+def check_hotpath(root: Path,
+                  files: Optional[List[str]] = None,
+                  entries=None, sinks=None) -> List[Finding]:
+    files = files if files is not None else scope_files(root)
+    entries = entries if entries is not None else ENTRY_POINTS
+    sinks = sinks if sinks is not None else SAMPLING_SINKS
+    index = build_index(root, files)
+    reach = reachable_from(index, entries)
+    findings: List[Finding] = []
+    for key in sorted(reach, key=lambda k: (k[0], str(k[1]), k[2])):
+        path, cls, name = key
+        if not (path.startswith("src/repro/serving/")
+                or path.startswith("src/repro/core/")):
+            continue                      # transit modules: out of scope
+        if key in sinks or (path, None, name) in sinks:
+            continue
+        fn = index.funcs[key]
+        for line, why in _flag_sync_calls(fn):
+            findings.append(Finding(
+                RULE, path, line,
+                f"{fn.qualname} is reachable from the decode step "
+                f"(ContinuousBatcher.step): {why}"))
+    return findings

@@ -1,0 +1,431 @@
+"""Static checker for the Pallas kernels in `repro.kernels`.
+
+The Pallas invariants that end-to-end tests only probabilistically catch:
+
+* **kernel-grid-bounds** — every `BlockSpec` index map, evaluated at every
+  grid point (with the scalar-prefetch operands it dereferences, e.g. the
+  paged block table), must return block indices inside the operand.  An
+  off-by-one in a page index map reads another sequence's KV.
+* **kernel-tile-alignment** — block shapes should fill TPU tiles: the
+  lane (last) dim a multiple of 128 or the whole operand extent; the
+  sublane dim 1, a multiple of the dtype's minimum sublane count
+  (fp32 8, bf16 16, int8/fp8 32), or the whole extent.
+* **kernel-dtype** — index maps must return integers and scalar-prefetch
+  operands must be integer arrays (a float block table would silently
+  truncate).
+* **kernel-scalar-arity** — the kernel body's positional parameter count
+  must equal num_scalar_prefetch + inputs + outputs + scratch; a drifted
+  signature binds the wrong ref to the wrong operand.
+
+Nothing here executes a kernel.  ``pl.pallas_call`` and
+``pltpu.PrefetchScalarGridSpec`` are temporarily replaced with recorders:
+the harnesses below call each public kernel entry with small
+representative inputs (block tables are permutations that include the
+maximum page id, so the full physical range is exercised), the recorder
+captures (grid, specs, operands, out_shape, kernel) and returns zeros of
+the declared output shape, and the checks above run on the capture.
+"""
+
+from __future__ import annotations
+
+import functools
+import inspect
+import math
+from dataclasses import dataclass, field
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from .diagnostics import Finding, relpath
+
+RULE_BOUNDS = "kernel-grid-bounds"
+RULE_ALIGN = "kernel-tile-alignment"
+RULE_DTYPE = "kernel-dtype"
+RULE_ARITY = "kernel-scalar-arity"
+
+_GRID_POINT_CAP = 200_000
+
+# minimum sublane count for a full TPU tile, by dtype itemsize
+_MIN_SUBLANE = {4: 8, 2: 16, 1: 32}
+_LANE = 128
+
+
+@dataclass
+class CapturedCall:
+    kernel: Callable
+    grid: Tuple[int, ...]
+    in_specs: List[Any]
+    out_specs: List[Any]
+    out_shapes: List[Any]            # ShapeDtypeStruct leaves
+    out_is_seq: bool
+    scratch_shapes: List[Any]
+    num_scalar_prefetch: int
+    operands: Tuple[Any, ...] = ()
+
+
+class _Recorder:
+    """Context manager that swaps pallas entry points for recorders."""
+
+    def __init__(self):
+        self.calls: List[CapturedCall] = []
+
+    def __enter__(self):
+        from jax.experimental import pallas as pl
+        from jax.experimental.pallas import tpu as pltpu
+        self._pl, self._pltpu = pl, pltpu
+        self._real_call = pl.pallas_call
+        self._real_grid = pltpu.PrefetchScalarGridSpec
+        calls = self.calls
+
+        class _FakeGridSpec:
+            def __init__(self, *, num_scalar_prefetch=0, grid=(),
+                         in_specs=None, out_specs=None, scratch_shapes=None):
+                self.num_scalar_prefetch = num_scalar_prefetch
+                self.grid = grid
+                self.in_specs = in_specs or []
+                self.out_specs = out_specs
+                self.scratch_shapes = scratch_shapes or []
+
+        def _fake_call(kernel, *, grid_spec=None, out_shape=None, grid=None,
+                       in_specs=None, out_specs=None, scratch_shapes=None,
+                       interpret=False, **kw):
+            import jax.numpy as jnp
+            if grid_spec is not None:
+                grid = grid_spec.grid
+                in_specs = grid_spec.in_specs
+                out_specs = grid_spec.out_specs
+                scratch_shapes = grid_spec.scratch_shapes
+                nsp = grid_spec.num_scalar_prefetch
+            else:
+                nsp = 0
+            out_is_seq = isinstance(out_shape, (list, tuple))
+            out_leaves = list(out_shape) if out_is_seq else [out_shape]
+            o_specs = (list(out_specs) if isinstance(out_specs, (list, tuple))
+                       else [out_specs])
+            rec = CapturedCall(
+                kernel=kernel, grid=tuple(grid), in_specs=list(in_specs),
+                out_specs=o_specs, out_shapes=out_leaves,
+                out_is_seq=out_is_seq,
+                scratch_shapes=list(scratch_shapes or []),
+                num_scalar_prefetch=nsp)
+
+            def _runner(*operands):
+                rec.operands = operands
+                calls.append(rec)
+                outs = [jnp.zeros(s.shape, s.dtype) for s in out_leaves]
+                return outs if out_is_seq else outs[0]
+
+            return _runner
+
+        pl.pallas_call = _fake_call
+        pltpu.PrefetchScalarGridSpec = _FakeGridSpec
+        return self
+
+    def __exit__(self, *exc):
+        self._pl.pallas_call = self._real_call
+        self._pltpu.PrefetchScalarGridSpec = self._real_grid
+        return False
+
+
+# ---------------------------------------------------------------------------
+# checks over one captured call
+# ---------------------------------------------------------------------------
+
+def _unwrap(fn: Callable) -> Callable:
+    fn = inspect.unwrap(fn)
+    while isinstance(fn, functools.partial):
+        fn = inspect.unwrap(fn.func)
+    return fn
+
+
+def _anchor(fn: Callable) -> Tuple[str, int]:
+    f = _unwrap(fn)
+    code = getattr(f, "__code__", None)
+    if code is None:
+        return "<unknown>", 0
+    return relpath(code.co_filename), code.co_firstlineno
+
+
+def _is_int(v) -> bool:
+    if isinstance(v, (bool, np.bool_)):
+        return False
+    if isinstance(v, (int, np.integer)):
+        return True
+    arr = np.asarray(v)
+    return arr.ndim == 0 and np.issubdtype(arr.dtype, np.integer)
+
+
+def _grid_points(grid: Tuple[int, ...]):
+    total = math.prod(grid) if grid else 0
+    if total <= _GRID_POINT_CAP:
+        yield from np.ndindex(*grid)
+        return
+    # degenerate fallback: corners only (never hit by the repo's kernels)
+    corners = [(0, g - 1) for g in grid]
+    seen = set()
+    for combo in np.ndindex(*([2] * len(grid))):
+        pt = tuple(corners[d][c] for d, c in enumerate(combo))
+        if pt not in seen:
+            seen.add(pt)
+            yield pt
+
+
+def _spec_fields(spec) -> Tuple[Optional[Tuple], Optional[Callable]]:
+    if spec is None:
+        return None, None
+    block = getattr(spec, "block_shape", None)
+    imap = getattr(spec, "index_map", None)
+    return block, imap
+
+
+def _check_alignment(spec, operand_shape, dtype, label: str,
+                     findings: List[Finding]) -> None:
+    block, imap = _spec_fields(spec)
+    if not block:
+        return
+    path, line = _anchor(imap) if imap is not None else ("<unknown>", 0)
+    itemsize = np.dtype(dtype).itemsize
+    min_sub = _MIN_SUBLANE.get(itemsize, 8)
+    lane = block[-1]
+    if lane is not None:
+        ext = operand_shape[-1]
+        if not (lane % _LANE == 0 or lane == ext):
+            findings.append(Finding(
+                RULE_ALIGN, path, line,
+                f"{label}: lane dim {lane} of block {tuple(block)} is "
+                f"neither a multiple of {_LANE} nor the operand extent "
+                f"{ext} (partial lanes waste VREGs)"))
+    if len(block) >= 2 and block[-2] is not None:
+        sub, ext = block[-2], operand_shape[-2]
+        if not (sub == 1 or sub % min_sub == 0 or sub == ext):
+            findings.append(Finding(
+                RULE_ALIGN, path, line,
+                f"{label}: sublane dim {sub} of block {tuple(block)} is not "
+                f"1, a multiple of {min_sub} ({np.dtype(dtype).name} min "
+                f"sublane), or the operand extent {ext}"))
+
+
+def _check_call(rec: CapturedCall) -> List[Finding]:
+    findings: List[Finding] = []
+    nsp = rec.num_scalar_prefetch
+    kpath, kline = _anchor(rec.kernel)
+    kname = getattr(_unwrap(rec.kernel), "__name__", "<kernel>")
+
+    scalar_ops = rec.operands[:nsp]
+    array_ops = rec.operands[nsp:]
+    if len(array_ops) != len(rec.in_specs):
+        findings.append(Finding(
+            RULE_ARITY, kpath, kline,
+            f"{kname}: {len(array_ops)} array operands but "
+            f"{len(rec.in_specs)} in_specs"))
+        return findings
+
+    # scalar-prefetch operands must be integer arrays
+    scalars_np = []
+    for i, op in enumerate(scalar_ops):
+        arr = np.asarray(op)
+        scalars_np.append(arr)
+        if not np.issubdtype(arr.dtype, np.integer):
+            findings.append(Finding(
+                RULE_DTYPE, kpath, kline,
+                f"{kname}: scalar-prefetch operand {i} has dtype "
+                f"{arr.dtype}, expected an integer type"))
+
+    # kernel signature arity: nsp + inputs + outputs + scratch refs
+    sig = inspect.signature(rec.kernel)
+    n_pos = sum(1 for p in sig.parameters.values()
+                if p.kind in (p.POSITIONAL_ONLY, p.POSITIONAL_OR_KEYWORD))
+    expected = nsp + len(rec.in_specs) + len(rec.out_shapes) \
+        + len(rec.scratch_shapes)
+    if n_pos != expected:
+        findings.append(Finding(
+            RULE_ARITY, kpath, kline,
+            f"{kname}: takes {n_pos} positional refs but the call binds "
+            f"{expected} (= {nsp} scalar-prefetch + {len(rec.in_specs)} in "
+            f"+ {len(rec.out_shapes)} out + {len(rec.scratch_shapes)} "
+            f"scratch)"))
+
+    # pair each spec with its operand (outputs use the declared out_shape)
+    pairs = [(spec, np.asarray(op).shape, np.asarray(op).dtype,
+              f"{kname} in_specs[{i}]")
+             for i, (spec, op) in enumerate(zip(rec.in_specs, array_ops))]
+    pairs += [(spec, tuple(sh.shape), np.dtype(sh.dtype),
+               f"{kname} out_specs[{i}]")
+              for i, (spec, sh) in enumerate(zip(rec.out_specs,
+                                                 rec.out_shapes))]
+
+    for spec, shape, dtype, label in pairs:
+        _check_alignment(spec, shape, dtype, label, findings)
+
+    # grid-bounds: evaluate every index map at every grid point
+    for spec, shape, dtype, label in pairs:
+        block, imap = _spec_fields(spec)
+        if imap is None or not block:
+            continue
+        path, line = _anchor(imap)
+        blk = [b if b is not None else shape[d]
+               for d, b in enumerate(block)]
+        nblocks = [max(1, -(-shape[d] // blk[d])) for d in range(len(blk))]
+        bad_dtype_reported = False
+        for pt in _grid_points(rec.grid):
+            idx = imap(*pt, *scalars_np)
+            if not isinstance(idx, (tuple, list)):
+                idx = (idx,)
+            if len(idx) != len(blk):
+                findings.append(Finding(
+                    RULE_BOUNDS, path, line,
+                    f"{label}: index map returned {len(idx)} indices for a "
+                    f"rank-{len(blk)} block at grid point {tuple(pt)}"))
+                break
+            if not all(_is_int(v) for v in idx):
+                if not bad_dtype_reported:
+                    findings.append(Finding(
+                        RULE_DTYPE, path, line,
+                        f"{label}: index map returned non-integer indices "
+                        f"{tuple(type(v).__name__ for v in idx)} at grid "
+                        f"point {tuple(pt)}"))
+                    bad_dtype_reported = True
+                break
+            vals = [int(v) for v in idx]
+            oob = [d for d, v in enumerate(vals)
+                   if not 0 <= v < nblocks[d]]
+            if oob:
+                d = oob[0]
+                findings.append(Finding(
+                    RULE_BOUNDS, path, line,
+                    f"{label}: index map returns block index {vals[d]} on "
+                    f"dim {d} at grid point {tuple(pt)}, valid range "
+                    f"[0, {nblocks[d]}) for operand shape {shape} with "
+                    f"block {tuple(blk)}"))
+                break
+    return findings
+
+
+def findings_for_callable(fn: Callable, *args, **kwargs) -> List[Finding]:
+    """Run `fn` under the recorder and check every pallas_call it makes.
+
+    The analyzer's own tests use this to check fixture kernels; the tree
+    checker below uses it for each harness.
+    """
+    with _Recorder() as rec:
+        fn(*args, **kwargs)
+    out: List[Finding] = []
+    for call in rec.calls:
+        out.extend(_check_call(call))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# harnesses: one per kernel module, small shapes, full page-id coverage
+# ---------------------------------------------------------------------------
+
+def _h_paged_attention():
+    import jax.numpy as jnp
+    from repro.kernels import paged_attention as mod
+    b, hq, hkv, d, ps, nb = 2, 4, 2, 64, 8, 3
+    p = 1 + b * nb
+    q = jnp.zeros((b, hq, d), jnp.float32)
+    kp = jnp.zeros((p, hkv, ps, d), jnp.float32)
+    # permutation of all non-trash pages: the map must handle page p-1
+    bt = jnp.asarray(np.arange(1, p, dtype=np.int32)[::-1].reshape(b, nb))
+    lens = jnp.asarray(np.array([20, 17], np.int32))
+    mod.paged_decode_attention(q, kp, kp, bt, lens)
+    ks = jnp.zeros((p, hkv, ps), jnp.float32)
+    mod.paged_decode_attention(q, kp.astype(jnp.int8), kp.astype(jnp.int8),
+                               bt, lens, k_scale=ks, v_scale=ks)
+
+
+def _h_paged_prefill():
+    import jax.numpy as jnp
+    from repro.kernels import paged_prefill as mod
+    b, hq, hkv, d, ps, nb, s = 2, 4, 2, 64, 8, 3, 16
+    p = 1 + b * nb
+    q = jnp.zeros((b, hq, s, d), jnp.float32)
+    kp = jnp.zeros((p, hkv, ps, d), jnp.float32)
+    bt = jnp.asarray(np.arange(1, p, dtype=np.int32)[::-1].reshape(b, nb))
+    offs = jnp.asarray(np.array([8, 5], np.int32))
+    mod.paged_prefill_attention(q, kp, kp, bt, offs, block_q=16)
+    ks = jnp.zeros((p, hkv, ps), jnp.float32)
+    mod.paged_prefill_attention(q, kp.astype(jnp.int8), kp.astype(jnp.int8),
+                                bt, offs, block_q=16, k_scale=ks, v_scale=ks)
+
+
+def _h_decode_attention():
+    import jax.numpy as jnp
+    from repro.kernels import decode_attention as mod
+    b, hq, hkv, s, d = 2, 4, 2, 256, 64
+    q = jnp.zeros((b, hq, d), jnp.float32)
+    k = jnp.zeros((b, hkv, s, d), jnp.float32)
+    lens = jnp.asarray(np.array([100, 256], np.int32))
+    mod.decode_attention(q, k, k, lens, block_kv=128)
+    sc = jnp.zeros((b, hkv, s), jnp.float32)
+    mod.decode_attention(q, k.astype(jnp.int8), k.astype(jnp.int8), lens,
+                         block_kv=128, k_scale=sc, v_scale=sc)
+
+
+def _h_flash_attention():
+    import jax.numpy as jnp
+    from repro.kernels import flash_attention as mod
+    b, hq, hkv, s, d = 1, 2, 1, 128, 64
+    q = jnp.zeros((b, hq, s, d), jnp.float32)
+    k = jnp.zeros((b, hkv, s, d), jnp.float32)
+    mod.flash_attention(q, k, k)
+    mod.flash_attention(q, k, k, causal=False, window=64)
+
+
+def _h_hete_matmul():
+    import jax.numpy as jnp
+    from repro.kernels import hete_matmul as mod
+    x = jnp.zeros((128, 256), jnp.float32)
+    w = jnp.zeros((256, 128), jnp.float32)
+    mod.matmul(x, w)
+    mod.matmul(x, w, jnp.zeros((128,), jnp.float32), activation="gelu")
+    mod.gated_matmul(x, w, w)
+
+
+def _h_q8_matmul():
+    import jax.numpy as jnp
+    from repro.kernels import q8_matmul as mod
+    x = jnp.zeros((128, 256), jnp.float32)
+    q = jnp.zeros((256, 128), jnp.int8)
+    mod.q8_matmul(x, q, jnp.zeros((128,), jnp.float32))
+
+
+def _h_rmsnorm():
+    import jax.numpy as jnp
+    from repro.kernels import rmsnorm as mod
+    mod.rmsnorm(jnp.zeros((16, 128), jnp.float32),
+                jnp.zeros((128,), jnp.float32))
+
+
+def _h_ssd_chunk():
+    import jax.numpy as jnp
+    from repro.kernels import ssd_chunk as mod
+    bs, ln, h, p, n, chunk = 1, 16, 2, 64, 32, 8
+    mod.ssd_chunk(jnp.zeros((bs, ln, h, p), jnp.float32),
+                  jnp.zeros((bs, ln, h), jnp.float32),
+                  jnp.zeros((h,), jnp.float32),
+                  jnp.zeros((bs, ln, h, n), jnp.float32),
+                  jnp.zeros((bs, ln, h, n), jnp.float32), chunk=chunk)
+
+
+HARNESSES: List[Tuple[str, Callable[[], None]]] = [
+    ("paged_attention", _h_paged_attention),
+    ("paged_prefill", _h_paged_prefill),
+    ("decode_attention", _h_decode_attention),
+    ("flash_attention", _h_flash_attention),
+    ("hete_matmul", _h_hete_matmul),
+    ("q8_matmul", _h_q8_matmul),
+    ("rmsnorm", _h_rmsnorm),
+    ("ssd_chunk", _h_ssd_chunk),
+]
+
+
+def check_kernels(only: Optional[Sequence[str]] = None) -> List[Finding]:
+    """Check every kernel module (or the named subset) and return findings."""
+    out: List[Finding] = []
+    for name, harness in HARNESSES:
+        if only is not None and name not in only:
+            continue
+        out.extend(findings_for_callable(harness))
+    return out

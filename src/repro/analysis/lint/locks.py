@@ -1,0 +1,271 @@
+"""Lock-discipline lint for the threaded serving/core classes.
+
+`AsyncLLM` runs an event loop thread beside caller threads;
+`AsyncParamManager` and the HeteGen engine fan work out to pinning /
+CPU / transfer executors.  Any attribute those classes write from more
+than one thread entry point must be written under the class's declared
+lock, or the telemetry/handle maps race.
+
+The analysis, per class in ``src/repro/serving`` + ``src/repro/core``:
+
+* **declared locks** — ``self.X = threading.Lock()/RLock()/Condition()``
+  in ``__init__``.  ``Condition(self.Y)`` aliases X to Y's lock (the
+  canonical lock), so guarding with either name counts.
+* **thread entry points** — methods handed to ``Thread(target=self.M)``
+  or ``executor.submit(self.M, ...)``.  Classes with none are skipped:
+  single-threaded objects need no locking.
+* **shared attributes** — written (assignment, augmented assignment,
+  subscript store, or a mutating method call like ``append``/``pop``/
+  ``clear``) outside ``__init__`` by a thread entry point, or by two or
+  more different methods.
+* **the check** — every write to a shared attribute must be lexically
+  under ``with self.<lock>``, or sit in a helper whose every call site
+  in the class is itself lock-held (lock *inheritance*, computed to a
+  fixpoint — this is how ``AsyncLLM._register`` is proven safe).
+  Calls from ``__init__`` count as held: no second thread exists yet.
+"""
+
+from __future__ import annotations
+
+import ast
+from dataclasses import dataclass, field
+from pathlib import Path
+from typing import Dict, List, Optional, Set, Tuple
+
+from .diagnostics import Finding
+
+RULE = "lock-discipline"
+
+_LOCK_CTORS = {"Lock", "RLock", "Condition"}
+_MUTATORS = {"append", "appendleft", "pop", "popleft", "clear", "update",
+             "extend", "add", "remove", "insert", "setdefault", "discard"}
+
+
+def scope_files(root: Path) -> List[str]:
+    rels: List[str] = []
+    for sub in ("src/repro/serving", "src/repro/core"):
+        rels += sorted(str(p.relative_to(root).as_posix())
+                       for p in (root / sub).glob("*.py"))
+    return rels
+
+
+def _self_attr(node: ast.expr) -> Optional[str]:
+    """Head attribute of a `self.`-rooted expression: self.a.b[c] -> a."""
+    while isinstance(node, (ast.Attribute, ast.Subscript)):
+        parent = node.value
+        if isinstance(parent, ast.Name) and parent.id == "self" and \
+                isinstance(node, ast.Attribute):
+            return node.attr
+        node = parent
+    return None
+
+
+def _lock_ctor(call: ast.Call) -> bool:
+    f = call.func
+    if isinstance(f, ast.Attribute) and f.attr in _LOCK_CTORS:
+        return True
+    return isinstance(f, ast.Name) and f.id in _LOCK_CTORS
+
+
+@dataclass
+class _Write:
+    attr: str
+    line: int
+    guarded: bool
+    method: str
+
+
+@dataclass
+class _CallSite:
+    callee: str
+    guarded: bool
+    method: str
+
+
+class _MethodScan(ast.NodeVisitor):
+    """Collect self-attribute writes and self-method calls with their
+    lexical `with self.<lock>` guard state."""
+
+    def __init__(self, method: str, locks: Dict[str, str]):
+        self.method = method
+        self.locks = locks          # attr -> canonical lock attr
+        self.guarded = False
+        self.writes: List[_Write] = []
+        self.calls: List[_CallSite] = []
+
+    def _is_lock(self, expr: ast.expr) -> bool:
+        a = _self_attr(expr) if isinstance(expr, ast.Attribute) else None
+        return a is not None and a in self.locks
+
+    def visit_With(self, node: ast.With) -> None:
+        held = any(self._is_lock(item.context_expr) for item in node.items)
+        prev = self.guarded
+        self.guarded = self.guarded or held
+        for stmt in node.body:
+            self.visit(stmt)
+        self.guarded = prev
+        for item in node.items:
+            self.visit(item.context_expr)
+
+    def _record_write(self, target: ast.expr, line: int) -> None:
+        attr = _self_attr(target)
+        if attr is not None and attr not in self.locks:
+            self.writes.append(
+                _Write(attr, line, self.guarded, self.method))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record_write(t, node.lineno)
+        self.visit(node.value)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record_write(node.target, node.lineno)
+        self.visit(node.value)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        self._record_write(node.target, node.lineno)
+        if node.value is not None:
+            self.visit(node.value)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        f = node.func
+        if isinstance(f, ast.Attribute):
+            head = _self_attr(f.value) if isinstance(
+                f.value, (ast.Attribute, ast.Subscript)) else None
+            if f.attr in _MUTATORS and head is not None:
+                self.writes.append(
+                    _Write(head, node.lineno, self.guarded, self.method))
+            if isinstance(f.value, ast.Name) and f.value.id == "self":
+                self.calls.append(
+                    _CallSite(f.attr, self.guarded, self.method))
+        self.generic_visit(node)
+
+
+def _thread_targets(cls: ast.ClassDef) -> Set[str]:
+    """Methods handed to Thread(target=self.M) / executor.submit(self.M)."""
+    targets: Set[str] = set()
+
+    def _self_method(expr) -> Optional[str]:
+        if isinstance(expr, ast.Attribute) and \
+                isinstance(expr.value, ast.Name) and expr.value.id == "self":
+            return expr.attr
+        return None
+
+    for node in ast.walk(cls):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        fname = f.attr if isinstance(f, ast.Attribute) else \
+            f.id if isinstance(f, ast.Name) else None
+        if fname == "Thread":
+            for kw in node.keywords:
+                if kw.arg == "target":
+                    m = _self_method(kw.value)
+                    if m:
+                        targets.add(m)
+        elif fname == "submit" and node.args:
+            m = _self_method(node.args[0])
+            if m:
+                targets.add(m)
+    return targets
+
+
+def _declared_locks(cls: ast.ClassDef) -> Dict[str, str]:
+    """attr -> canonical lock attr, for locks assigned in __init__."""
+    locks: Dict[str, str] = {}
+    init = next((n for n in cls.body
+                 if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))
+                 and n.name == "__init__"), None)
+    if init is None:
+        return locks
+    for node in ast.walk(init):
+        if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+            continue
+        attr = _self_attr(node.targets[0])
+        if attr is None or not isinstance(node.value, ast.Call) or \
+                not _lock_ctor(node.value):
+            continue
+        canonical = attr
+        # Condition(self.Y): reuse Y's canonical lock
+        if node.value.args:
+            arg_attr = _self_attr(node.value.args[0])
+            if arg_attr is not None and arg_attr in locks:
+                canonical = locks[arg_attr]
+        locks[attr] = canonical
+    return locks
+
+
+def _check_class(rel: str, cls: ast.ClassDef) -> List[Finding]:
+    locks = _declared_locks(cls)
+    targets = _thread_targets(cls)
+    if not locks or not targets:
+        return []                   # single-threaded or lock-free class
+
+    methods = [n for n in cls.body
+               if isinstance(n, (ast.FunctionDef, ast.AsyncFunctionDef))]
+    scans: Dict[str, _MethodScan] = {}
+    for m in methods:
+        scan = _MethodScan(m.name, locks)
+        for stmt in m.body:
+            scan.visit(stmt)
+        scans[m.name] = scan
+
+    # shared = written by a thread entry point, or by >= 2 methods
+    writers: Dict[str, Set[str]] = {}
+    for name, scan in scans.items():
+        if name == "__init__":
+            continue
+        for w in scan.writes:
+            writers.setdefault(w.attr, set()).add(name)
+    shared = {attr for attr, who in writers.items()
+              if who & targets or len(who) >= 2}
+
+    # lock inheritance: a helper is held if every in-class call site is
+    # held (lexically, from __init__, or from another held helper)
+    call_sites: Dict[str, List[_CallSite]] = {}
+    for name, scan in scans.items():
+        for c in scan.calls:
+            if c.callee in scans:
+                call_sites.setdefault(c.callee, []).append(c)
+    inherited: Set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for name in scans:
+            if name in inherited or name in targets or name == "__init__":
+                continue
+            sites = call_sites.get(name, [])
+            if sites and all(
+                    s.guarded or s.method == "__init__"
+                    or s.method in inherited for s in sites):
+                inherited.add(name)
+                changed = True
+
+    findings: List[Finding] = []
+    lock_names = sorted(set(locks.values()))
+    for name, scan in scans.items():
+        if name == "__init__" or name in inherited:
+            continue
+        for w in scan.writes:
+            if w.attr in shared and not w.guarded:
+                who = sorted(writers.get(w.attr, set()))
+                findings.append(Finding(
+                    RULE, rel, w.line,
+                    f"{cls.name}.{name} writes self.{w.attr} without "
+                    f"holding {' / '.join('self.' + l for l in lock_names)}"
+                    f" — the attribute is also written by "
+                    f"{', '.join(m for m in who if m != name) or 'a thread'}"
+                    f" (thread entry points: {', '.join(sorted(targets))})"))
+    return findings
+
+
+def check_locks(root: Path, files: Optional[List[str]] = None) \
+        -> List[Finding]:
+    files = files if files is not None else scope_files(root)
+    findings: List[Finding] = []
+    for rel in files:
+        tree = ast.parse((root / rel).read_text(), filename=rel)
+        for node in tree.body:
+            if isinstance(node, ast.ClassDef):
+                findings.extend(_check_class(rel, node))
+    return findings

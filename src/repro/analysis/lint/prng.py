@@ -1,0 +1,97 @@
+"""PRNG discipline lint: request-owned keys only in serving code.
+
+PR 3's request-level sampling made paged-vs-dense decode token-identical
+under stochastic sampling *because* keys are derived per request
+(`sampling.request_key`) and per emitted token (`sampling.step_key`) —
+never from the batch row, the step counter, or an ad-hoc
+``jax.random.PRNGKey`` minted mid-path.  A raw ``PRNGKey``/``split`` in
+serving code re-introduces schedule-dependent randomness: the same
+request sampled through a different slot or batch shape would draw
+different tokens.
+
+This lint flags ``jax.random.PRNGKey(...)`` and ``jax.random.split(...)``
+calls in ``src/repro/serving`` outside ``sampling.py`` (the key
+authority).  ``fold_in`` is allowed — deriving a subkey from a
+request-owned key is exactly the sanctioned pattern.  Front-door seeds
+(`LLM(seed=)` creating the one base key that ``request_key`` folds
+request ids into) carry `# lint: allow[prng-discipline]` suppressions.
+"""
+
+from __future__ import annotations
+
+import ast
+from pathlib import Path
+from typing import Dict, List, Optional
+
+from .diagnostics import Finding
+
+RULE = "prng-discipline"
+
+# the module allowed to mint and split keys
+KEY_AUTHORITY = "sampling.py"
+
+
+def scope_files(root: Path) -> List[str]:
+    return sorted(
+        str(p.relative_to(root).as_posix())
+        for p in (root / "src/repro/serving").glob("*.py")
+        if p.name != KEY_AUTHORITY)
+
+
+def _random_aliases(tree: ast.Module) -> Dict[str, str]:
+    """Names that refer to jax.random or its members in this module."""
+    out: Dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.name == "jax.random":
+                    out[a.asname or "jax"] = "jax.random"
+        elif isinstance(node, ast.ImportFrom):
+            if node.module == "jax":
+                for a in node.names:
+                    if a.name == "random":
+                        out[a.asname or "random"] = "jax.random"
+            elif node.module == "jax.random":
+                for a in node.names:
+                    if a.name in ("PRNGKey", "split"):
+                        out[a.asname or a.name] = f"jax.random.{a.name}"
+    return out
+
+
+def _flagged_call(node: ast.Call, aliases: Dict[str, str]) -> Optional[str]:
+    f = node.func
+    if isinstance(f, ast.Attribute) and f.attr in ("PRNGKey", "split"):
+        v = f.value
+        # jax.random.X
+        if isinstance(v, ast.Attribute) and v.attr == "random" and \
+                isinstance(v.value, ast.Name) and v.value.id == "jax":
+            return f.attr
+        # jr.X where jr aliases jax.random
+        if isinstance(v, ast.Name) and aliases.get(v.id) == "jax.random":
+            return f.attr
+        # anything.PRNGKey is distinctive enough to flag regardless
+        if f.attr == "PRNGKey":
+            return f.attr
+    if isinstance(f, ast.Name) and \
+            aliases.get(f.id, "").startswith("jax.random."):
+        return aliases[f.id].rsplit(".", 1)[-1]
+    return None
+
+
+def check_prng(root: Path, files: Optional[List[str]] = None) \
+        -> List[Finding]:
+    files = files if files is not None else scope_files(root)
+    findings: List[Finding] = []
+    for rel in files:
+        tree = ast.parse((root / rel).read_text(), filename=rel)
+        aliases = _random_aliases(tree)
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Call):
+                what = _flagged_call(node, aliases)
+                if what:
+                    findings.append(Finding(
+                        RULE, rel, node.lineno,
+                        f"raw jax.random.{what} in serving code — keys "
+                        f"must flow from sampling.request_key/step_key "
+                        f"so results are schedule-independent"))
+    return findings

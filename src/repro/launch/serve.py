@@ -65,6 +65,10 @@ def main() -> None:
                     "(no caller-driven step())")
     ap.add_argument("--n-pages", type=int, default=None,
                     help="shrink the paged pool to provoke preemption")
+    ap.add_argument("--selfcheck", action="store_true",
+                    help="paged-allocator runtime self-check: validate "
+                    "free-list/ref-count/block-table invariants every "
+                    "step and audit for leaked pages at close")
     ap.add_argument("--chunk-tokens", type=int, default=None,
                     help="chunked prefill: admit long prompts at most "
                     "this many tokens per step so a long admission "
@@ -159,7 +163,7 @@ def main() -> None:
                   n_pages=args.n_pages, policy=args.policy,
                   chunk_tokens=args.chunk_tokens,
                   prefix_dedupe=False if args.no_prefix_dedupe else None,
-                  spec=spec)
+                  spec=spec, selfcheck=args.selfcheck)
     # give the priority policy something to schedule: alternate priorities
     prio = (lambda i: i % 2) if args.policy == "priority" else (lambda i: 0)
 

@@ -137,7 +137,8 @@ class LLM:
                  prefix_dedupe: Optional[bool] = None,
                  spec: Optional[SpecConfig] = None,
                  tokenizer: Optional[Tokenizer] = None,
-                 seed: int = 0):
+                 seed: int = 0,
+                 selfcheck: bool = False):
         if backend is None and params is None:
             raise ValueError("LLM needs params or a backend")
         self.cfg = cfg
@@ -168,6 +169,11 @@ class LLM:
         self.spec = spec
         self.tokenizer = tokenizer
         self.seed = seed
+        # selfcheck: PagedKVCache(check=True) — validate allocator
+        # invariants every step and audit for leaked pages at close
+        self.selfcheck = selfcheck
+        # lint: allow[prng-discipline] the facade's base key: request_key
+        # folds per-request ids into it, step_key derives per-token draws
         self._base_key = jax.random.PRNGKey(seed)
         self._ids = itertools.count()
         self._batcher: Optional[ContinuousBatcher] = None
@@ -191,7 +197,7 @@ class LLM:
                       preempt_mode=self.preempt_mode,
                       chunk_tokens=self.chunk_tokens,
                       prefix_dedupe=self.prefix_dedupe,
-                      spec=self.spec)
+                      spec=self.spec, selfcheck=self.selfcheck)
             if self._backend is None:
                 self._batcher = ContinuousBatcher(self.cfg, self._params,
                                                   **kw)
@@ -548,6 +554,9 @@ class LLM:
                                "pool_pages": kv.n_pages - 1,
                                "mapped_pages": kv.n_pages - 1
                                - kv.free_pages}
+                # allocator self-check counters (cheap even without
+                # check=True): pages_leaked != 0 means ref-count drift
+                st["kv"] = kv.stats()
             if self._batcher.spec is not None:
                 spec = self._batcher.spec_stats.as_dict()
                 spec["per_request"] = {

@@ -76,7 +76,8 @@ class LinearBackend(Protocol):
     def init_paged_cache(self, batch: int, max_len: int, *,
                          page_size: int = 16,
                          n_pages: Optional[int] = None,
-                         kv_dtype: Optional[str] = None
+                         kv_dtype: Optional[str] = None,
+                         check: bool = False
                          ) -> "PagedKVCache": ...
 
     def prefill(self, batch: Dict, cache: Dict
@@ -173,9 +174,10 @@ class ResidentBackend:
     def init_paged_cache(self, batch: int, max_len: int, *,
                          page_size: int = 16,
                          n_pages: Optional[int] = None,
-                         kv_dtype: Optional[str] = None) -> PagedKVCache:
+                         kv_dtype: Optional[str] = None,
+                         check: bool = False) -> PagedKVCache:
         return PagedKVCache(self.cfg, batch, max_len, page_size=page_size,
-                            n_pages=n_pages, kv_dtype=kv_dtype)
+                            n_pages=n_pages, kv_dtype=kv_dtype, check=check)
 
     def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
         return self._prefill(self.shared, self.weights, self.biases,
@@ -404,9 +406,10 @@ class HeteGenBackend:
     def init_paged_cache(self, batch: int, max_len: int, *,
                          page_size: int = 16,
                          n_pages: Optional[int] = None,
-                         kv_dtype: Optional[str] = None) -> PagedKVCache:
+                         kv_dtype: Optional[str] = None,
+                         check: bool = False) -> PagedKVCache:
         return PagedKVCache(self.cfg, batch, max_len, page_size=page_size,
-                            n_pages=n_pages, kv_dtype=kv_dtype)
+                            n_pages=n_pages, kv_dtype=kv_dtype, check=check)
 
     def prefill(self, batch: Dict, cache: Dict) -> Tuple[Dict, jax.Array]:
         if self.phase_plans:

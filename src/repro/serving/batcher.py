@@ -101,7 +101,8 @@ class ContinuousBatcher:
                  preempt_mode: Optional[str] = None,
                  chunk_tokens: Optional[int] = None,
                  prefix_dedupe: Optional[bool] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None,
+                 selfcheck: bool = False):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
@@ -120,13 +121,15 @@ class ContinuousBatcher:
         self.max_slots = max_slots
         self.max_len = max_len
         self.default_sampling = SamplingParams.from_config(sampler)
+        # lint: allow[prng-discipline] the one base key request_key folds
+        # request ids into; every sampling draw derives from it per request
         self._base_key = jax.random.PRNGKey(seed)
         self.paged = paged
         self.kv = None
         if paged:
             self.kv = self.backend.init_paged_cache(
                 max_slots, max_len, page_size=page_size, n_pages=n_pages,
-                kv_dtype=kv_dtype)
+                kv_dtype=kv_dtype, check=selfcheck)
             self.cache = self.kv.init_cache()
         else:
             self.cache = self.backend.init_cache(max_slots, max_len)
@@ -268,6 +271,9 @@ class ContinuousBatcher:
         slot length.  Recompute mode keeps only the token ids."""
         if st.swap_block_ids is not None:
             ids = jnp.asarray(st.swap_block_ids, jnp.int32)
+            # lint: allow[hot-path-sync] swap-mode preemption host-saves
+            # the victim's KV pages by design; it runs on the rare
+            # PagesExhausted path, not on a normal decode step
             st.saved_kv = {k: np.asarray(v[ids])
                            for k, v in self.cache.items()
                            if k.startswith("pages_")}
@@ -468,6 +474,11 @@ class ContinuousBatcher:
         identically on resume — mid-speculation preemption stays
         token-identical).
         """
+        if self.kv is not None and self.kv.check:
+            # selfcheck mode: prove the allocator invariants at the step
+            # boundary too, so drift introduced between the per-op hooks
+            # (e.g. direct metadata edits) surfaces before the next plan
+            self.kv.validate()
         proposals = self._draft_proposals() if self.spec is not None \
             else None
         advances = None
@@ -607,6 +618,8 @@ class ContinuousBatcher:
             # Keep their lengths: verify bumps every row's len by the
             # padded width, but the real new lengths are only known after
             # acceptance — restore, then set per-slot below.
+            # lint: allow[hot-path-sync] host mirror of slot lengths for
+            # the accept/reject loop; dense "len" is a small host-side row
             lens_before = np.asarray(self.cache["len"])
             toks = jnp.asarray(
                 [row_tokens(s) if active[s] else [0] * width
@@ -617,6 +630,9 @@ class ContinuousBatcher:
             self.cache["len"] = jnp.asarray(lens_before)
             row_of = {s: s for s in slots}
 
+        # lint: allow[hot-path-sync] speculative accept/reject is host-side
+        # by design (point-mass rejection sampling over the verify logits);
+        # this is the step's one sampling sync, same budget as sample_rows
         lg = np.asarray(logits, np.float32)     # (rows, width, V)
         for s in slots:
             st = slot_req[s]
@@ -702,6 +718,10 @@ class ContinuousBatcher:
         if self._closed:
             return
         self._closed = True
+        if self.kv is not None:
+            # end-of-life audit: raises PagedCacheCorruption on leaked
+            # pages when the cache was built with check=True
+            self.kv.close()
         if self._own_backend:
             self.backend.close()
 

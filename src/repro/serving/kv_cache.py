@@ -56,6 +56,11 @@ class PagesExhausted(RuntimeError):
     """Raised when an allocation needs more pages than the free list has."""
 
 
+class PagedCacheCorruption(RuntimeError):
+    """Raised by the ``check=True`` self-check when an allocator invariant
+    is violated (double release, ref-count drift, leaked pages, ...)."""
+
+
 class PagedKVCache:
     """Block-pool allocator + block tables for a slot-based serving cache.
 
@@ -67,7 +72,7 @@ class PagedKVCache:
 
     def __init__(self, cfg: ModelConfig, max_slots: int, max_len: int, *,
                  page_size: int = 16, n_pages: Optional[int] = None,
-                 kv_dtype: Optional[str] = None):
+                 kv_dtype: Optional[str] = None, check: bool = False):
         self.cfg = cfg
         self.max_slots = max_slots
         self.max_len = max_len
@@ -78,6 +83,11 @@ class PagedKVCache:
         if self.n_pages < 2:
             raise ValueError("need at least one usable page beyond trash")
         self.kv_dtype = kv_dtype
+        # runtime self-check mode (LLM(selfcheck=True) / serve --selfcheck):
+        # validate the free-list/ref-count/table invariants after every
+        # mutating operation and refuse double releases / leaked closes
+        self.check = check
+        self._refcount_max = 0
         # host-side metadata: free list, ref-counts, block tables
         self._free: List[int] = list(range(self.n_pages - 1, TRASH_PAGE, -1))
         self._ref = np.zeros((self.n_pages,), np.int32)
@@ -151,10 +161,16 @@ class PagedKVCache:
             self._ref[pid] = 1
             self._tables[slot, j] = pid
         self._n_blocks[slot] = need_blocks
+        self._refcount_max = max(self._refcount_max, 1)
+        if self.check:
+            self.validate()
 
     def free(self, slot: int) -> None:
         """Unmap every page of ``slot``; pages whose ref-count hits zero
         return to the free list (shared prefix pages survive)."""
+        if self.check and not self._n_blocks[slot]:
+            raise PagedCacheCorruption(
+                f"double release: slot {slot} holds no pages")
         for j in range(int(self._n_blocks[slot])):
             pid = int(self._tables[slot, j])
             self._ref[pid] -= 1
@@ -162,6 +178,8 @@ class PagedKVCache:
                 self._free.append(pid)
         self._tables[slot, :] = TRASH_PAGE
         self._n_blocks[slot] = 0
+        if self.check:
+            self.validate()
 
     def fork_aligned(self, src_slot: int, dst_slot: int,
                      n_tokens: int) -> None:
@@ -182,8 +200,11 @@ class PagedKVCache:
         for j in range(n_full):
             pid = int(self._tables[src_slot, j])
             self._ref[pid] += 1
+            self._refcount_max = max(self._refcount_max, int(self._ref[pid]))
             self._tables[dst_slot, j] = pid
         self._n_blocks[dst_slot] = n_full
+        if self.check:
+            self.validate()
 
     def fork(self, cache: Dict, src_slot: int, dst_slot: int,
              n_tokens: int) -> Dict:
@@ -213,6 +234,8 @@ class PagedKVCache:
                 if key.startswith("pages_"):
                     pool = cache[key]
                     cache[key] = pool.at[dst_pid].set(pool[src_pid])
+            if self.check:
+                self.validate()
         return cache
 
     def truncate(self, cache: Dict, slot: int, new_len: int) -> Dict:
@@ -258,6 +281,8 @@ class PagedKVCache:
                     if key.startswith("pages_"):
                         pool = cache[key]
                         cache[key] = pool.at[new_pid].set(pool[pid])
+        if self.check:
+            self.validate()
         return cache
 
     def mapped_pages(self, slot: int) -> List[int]:
@@ -265,6 +290,91 @@ class PagedKVCache:
 
     def refcount(self, page_id: int) -> int:
         return int(self._ref[page_id])
+
+    # -- runtime self-check --------------------------------------------
+    def validate(self) -> None:
+        """Prove the allocator invariants; raise
+        :class:`PagedCacheCorruption` naming the first violated one.
+
+        Called after every mutating op when ``check=True`` (and directly
+        by the batcher's per-step hook); safe to call at any time.
+        """
+        free = self._free
+        if len(set(free)) != len(free):
+            raise PagedCacheCorruption("free list holds duplicate page ids")
+        for pid in free:
+            if not (TRASH_PAGE < pid < self.n_pages):
+                raise PagedCacheCorruption(
+                    f"free list holds out-of-range page id {pid}")
+            if self._ref[pid] != 0:
+                raise PagedCacheCorruption(
+                    f"free page {pid} has ref-count {int(self._ref[pid])}")
+        if self._ref[TRASH_PAGE] != 0:
+            raise PagedCacheCorruption("trash page has a non-zero ref-count")
+        # count table occurrences of every real page
+        occ = np.zeros((self.n_pages,), np.int64)
+        for slot in range(self.max_slots):
+            n = int(self._n_blocks[slot])
+            row = self._tables[slot]
+            for j in range(self.blocks_per_slot):
+                pid = int(row[j])
+                if not (0 <= pid < self.n_pages):
+                    raise PagedCacheCorruption(
+                        f"slot {slot} block {j} maps out-of-range page {pid}")
+                if j >= n:
+                    if pid != TRASH_PAGE:
+                        raise PagedCacheCorruption(
+                            f"slot {slot} block {j} beyond its {n} mapped "
+                            f"pages points at page {pid}, not trash")
+                elif pid == TRASH_PAGE:
+                    raise PagedCacheCorruption(
+                        f"slot {slot} block {j} inside its {n} mapped pages "
+                        f"points at the trash page")
+                else:
+                    occ[pid] += 1
+        for pid in range(TRASH_PAGE + 1, self.n_pages):
+            if int(self._ref[pid]) != int(occ[pid]):
+                raise PagedCacheCorruption(
+                    f"page {pid}: ref-count {int(self._ref[pid])} != "
+                    f"{int(occ[pid])} block-table occurrence(s)")
+        referenced = int((self._ref > 0).sum())
+        if len(free) + referenced != self.usable_pages:
+            raise PagedCacheCorruption(
+                f"page accounting drift: {len(free)} free + {referenced} "
+                f"referenced != {self.usable_pages} usable")
+
+    def stats(self) -> Dict:
+        """Cheap allocator counters (O(n_pages), no device sync) — safe to
+        poll every request even with ``check=False``.
+
+        ``pages_leaked`` is the gap between pool capacity and what the
+        free list plus live ref-counts account for: non-zero means pages
+        were lost to ref-count drift.  ``refcount_max`` is the high-water
+        sharing degree (>= 2 once any prefix was forked/deduped).
+        """
+        referenced = int((self._ref > 0).sum())
+        return {
+            "page_size": self.page_size,
+            "n_pages": self.n_pages,
+            "usable_pages": self.usable_pages,
+            "free_pages": len(self._free),
+            "mapped_pages": referenced,
+            "pages_leaked": self.usable_pages - len(self._free) - referenced,
+            "refcount_max": self._refcount_max,
+        }
+
+    def close(self) -> Dict:
+        """End-of-life audit: returns :meth:`stats`; with ``check=True``
+        raises :class:`PagedCacheCorruption` when pages leaked (pages
+        still mapped by live slots are fine — the batcher may close
+        mid-flight — only unaccounted-for pages count as leaks)."""
+        st = self.stats()
+        if self.check and st["pages_leaked"]:
+            raise PagedCacheCorruption(
+                f"{st['pages_leaked']} page(s) leaked at close "
+                f"(free {st['free_pages']} + mapped {st['mapped_pages']} "
+                f"< usable {st['usable_pages']})")
+        return st
 
 
 def slot_view(cache: Dict, slot: int, length: int = 0) -> Dict:

@@ -280,6 +280,8 @@ def _prefix_hashes(prompt: List[int], page_size: int) -> List[bytes]:
     h = hashlib.sha256()
     for j in range(len(prompt) // page_size):
         page = prompt[j * page_size:(j + 1) * page_size]
+        # lint: allow[hot-path-sync] hashes a host list of prompt ints at
+        # admission (prefix dedupe); no device array is ever involved
         h.update(np.asarray(page, np.int64).tobytes())
         out.append(h.digest())
     return out

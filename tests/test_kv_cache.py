@@ -84,6 +84,7 @@ def test_paged_vs_dense_resident_interleaved(tiny_setup, rng):
         assert dout[d] == pout[p], (d, p)
     # release unmapped everything: the pool drained back to full
     assert paged.kv.free_pages == paged.kv.n_pages - 1
+    assert paged.kv.stats()["pages_leaked"] == 0
     _allocator_consistent(paged.kv)
 
 
@@ -106,6 +107,7 @@ def test_paged_vs_dense_hetegen_batcher(opt_setup, rng):
     for d, p in zip(dids, pids):
         assert dout[d] == pout[p], (d, p)
     assert paged.kv.free_pages == paged.kv.n_pages - 1
+    assert paged.kv.stats()["pages_leaked"] == 0
     hb.close()
 
 
@@ -199,6 +201,7 @@ def test_fragmentation_churn_reuses_pages(tiny_setup, rng):
     out = b.run_until_done()
     assert len(out) == 8 and all(len(v) for v in out.values())
     assert b.kv.free_pages == 8
+    assert b.kv.stats()["pages_leaked"] == 0
     _allocator_consistent(b.kv)
 
 
@@ -248,6 +251,9 @@ def test_fork_shares_pages_and_reclaims_by_refcount(tiny_setup, rng):
     assert kv.free_pages == free0 + 1               # only src partial page
     kv.free(1)                                      # last owner: reclaim
     assert kv.free_pages == kv.n_pages - 1
+    st = kv.stats()
+    assert st["pages_leaked"] == 0
+    assert st["refcount_max"] >= 2                  # the fork was recorded
     _allocator_consistent(kv)
 
 

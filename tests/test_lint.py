@@ -1,0 +1,309 @@
+"""Tests for the static invariant analyzer (repro.analysis.lint).
+
+Each fixture violates exactly one rule; the analyzer must (a) flag it,
+naming file/line/rule, and (b) report nothing on the real tree — the
+clean-tree run is what tools/ci.sh gates on.
+"""
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis.lint import (check_hotpath, check_locks, check_prng,
+                                 findings_for_callable)
+from repro.analysis.lint.__main__ import run as lint_main
+from repro.analysis.lint.diagnostics import Finding, SuppressionIndex
+from repro.serving.kv_cache import (PagedCacheCorruption, PagedKVCache,
+                                    PagesExhausted)
+
+
+# ---------------------------------------------------------------------------
+# kernel checker: fixture pallas calls, one violation each
+# ---------------------------------------------------------------------------
+
+def _call_fixture_kernel(imap_in, block_in=(8, 128), shape=(16, 128)):
+    """A minimal 1-in/1-out pallas call with a pluggable input index map."""
+    from jax.experimental import pallas as pl
+
+    def kern(x_ref, o_ref):
+        o_ref[...] = x_ref[...]
+
+    x = jnp.zeros(shape, jnp.float32)
+    nrows = shape[0] // block_in[0]
+    pl.pallas_call(
+        kern,
+        grid=(nrows,),
+        in_specs=[pl.BlockSpec(block_in, imap_in)],
+        out_specs=pl.BlockSpec((shape[0], shape[1]), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct(shape, jnp.float32),
+    )(x)
+
+
+def test_kernel_oob_index_map_flagged():
+    # off-by-one: grid point i=1 returns row-block 2, valid range [0, 2)
+    found = findings_for_callable(
+        _call_fixture_kernel, lambda i: (i + 1, 0))
+    bounds = [f for f in found if f.rule == "kernel-grid-bounds"]
+    assert bounds, found
+    assert "valid range [0, 2)" in bounds[0].message
+    assert bounds[0].path.endswith("test_lint.py") and bounds[0].line > 0
+
+
+def test_kernel_in_bounds_map_clean():
+    found = findings_for_callable(_call_fixture_kernel, lambda i: (i, 0))
+    assert found == []
+
+
+def test_kernel_misaligned_tile_flagged():
+    # lane dim 64 is neither a multiple of 128 nor the operand extent 128
+    found = findings_for_callable(
+        _call_fixture_kernel, lambda i: (i, 0), (8, 64))
+    align = [f for f in found if f.rule == "kernel-tile-alignment"]
+    assert align, found
+    assert "lane dim 64" in align[0].message
+
+
+def test_kernel_scalar_arity_and_dtype():
+    from jax.experimental import pallas as pl
+    from jax.experimental.pallas import tpu as pltpu
+
+    def kern(bt_ref, x_ref, o_ref, extra_ref):   # one ref too many
+        o_ref[...] = x_ref[...]
+
+    def entry(bt):
+        x = jnp.zeros((8, 128), jnp.float32)
+        pl.pallas_call(
+            kern,
+            grid_spec=pltpu.PrefetchScalarGridSpec(
+                num_scalar_prefetch=1,
+                grid=(1,),
+                in_specs=[pl.BlockSpec((8, 128), lambda i, bt: (0, 0))],
+                out_specs=pl.BlockSpec((8, 128), lambda i, bt: (0, 0))),
+            out_shape=jax.ShapeDtypeStruct((8, 128), jnp.float32),
+        )(bt, x)
+
+    found = findings_for_callable(entry, jnp.zeros((4,), jnp.int32))
+    assert any(f.rule == "kernel-scalar-arity" for f in found), found
+    # a float block table is a dtype violation on top of the arity one
+    found = findings_for_callable(entry, jnp.zeros((4,), jnp.float32))
+    assert any(f.rule == "kernel-dtype" for f in found), found
+
+
+def test_tree_kernels_clean():
+    from repro.analysis.lint import check_kernels
+    assert check_kernels() == []
+
+
+# ---------------------------------------------------------------------------
+# AST lints: tmp-tree fixtures, one violation each
+# ---------------------------------------------------------------------------
+
+def _write(root, rel, src):
+    p = root / rel
+    p.parent.mkdir(parents=True, exist_ok=True)
+    p.write_text(textwrap.dedent(src))
+    return rel
+
+
+def test_hotpath_item_flagged(tmp_path):
+    rel = _write(tmp_path, "src/repro/serving/fixture_step.py", """\
+        class Stepper:
+            def step(self):
+                return self._advance()
+
+            def _advance(self):
+                return self.tok.item()
+        """)
+    found = check_hotpath(tmp_path, files=[rel],
+                          entries=[(rel, "Stepper", "step")], sinks=set())
+    assert [f.rule for f in found] == ["hot-path-sync"]
+    assert found[0].path == rel and found[0].line == 6
+    assert ".item()" in found[0].message
+
+
+def test_hotpath_sink_whitelisted(tmp_path):
+    rel = _write(tmp_path, "src/repro/serving/fixture_sink.py", """\
+        class Stepper:
+            def step(self):
+                return self._sample()
+
+            def _sample(self):
+                return self.tok.item()
+        """)
+    found = check_hotpath(tmp_path, files=[rel],
+                          entries=[(rel, "Stepper", "step")],
+                          sinks={(rel, "Stepper", "_sample")})
+    assert found == []
+
+
+def test_hotpath_unreachable_not_flagged(tmp_path):
+    rel = _write(tmp_path, "src/repro/serving/fixture_cold.py", """\
+        class Stepper:
+            def step(self):
+                return 1
+
+            def debug_dump(self):
+                return self.tok.item()
+        """)
+    found = check_hotpath(tmp_path, files=[rel],
+                          entries=[(rel, "Stepper", "step")], sinks=set())
+    assert found == []
+
+
+def test_prng_raw_key_flagged(tmp_path):
+    rel = _write(tmp_path, "bad_prng.py", """\
+        import jax
+
+        def sample(seed):
+            key = jax.random.PRNGKey(seed)
+            return jax.random.fold_in(key, 0)
+        """)
+    found = check_prng(tmp_path, files=[rel])
+    assert [f.rule for f in found] == ["prng-discipline"]
+    assert found[0].line == 4          # fold_in is sanctioned, not flagged
+
+
+def test_lock_unlocked_write_flagged(tmp_path):
+    rel = _write(tmp_path, "bad_locks.py", """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+                self._t = threading.Thread(target=self._worker)
+
+            def _worker(self):
+                self.count += 1
+
+            def bump(self):
+                with self._lock:
+                    self.count += 1
+        """)
+    found = check_locks(tmp_path, files=[rel])
+    assert [f.rule for f in found] == ["lock-discipline"]
+    assert found[0].line == 10 and "Counter._worker" in found[0].message
+
+
+def test_lock_held_helper_clean(tmp_path):
+    # the fixpoint: a helper whose every call site holds the lock is safe
+    rel = _write(tmp_path, "good_locks.py", """\
+        import threading
+
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.count = 0
+                self._t = threading.Thread(target=self._worker)
+
+            def _bump(self):
+                self.count += 1
+
+            def _worker(self):
+                with self._lock:
+                    self._bump()
+
+            def bump(self):
+                with self._lock:
+                    self._bump()
+        """)
+    assert check_locks(tmp_path, files=[rel]) == []
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+
+def test_suppression_with_justification(tmp_path):
+    rel = _write(tmp_path, "s.py", """\
+        # lint: allow[some-rule] this site is exempt because reasons
+        x = 1
+        y = 2
+        """)
+    idx = SuppressionIndex(tmp_path)
+    assert not idx.apply([Finding("some-rule", rel, 2, "m")])
+    # different rule or uncovered line: untouched
+    assert idx.apply([Finding("other-rule", rel, 2, "m")])
+    assert idx.apply([Finding("some-rule", rel, 3, "m")])
+
+
+def test_bare_suppression_warns(tmp_path):
+    rel = _write(tmp_path, "s.py", """\
+        # lint: allow[some-rule]
+        x = 1
+        """)
+    out = SuppressionIndex(tmp_path).apply(
+        [Finding("some-rule", rel, 2, "m")])
+    assert [f.rule for f in out] == ["bare-suppression"]
+    assert out[0].severity == "warning"
+
+
+# ---------------------------------------------------------------------------
+# runtime self-check (PagedKVCache(check=True))
+# ---------------------------------------------------------------------------
+
+@pytest.fixture()
+def kv(tiny_cfg):
+    return PagedKVCache(tiny_cfg, 4, 64, page_size=8, check=True)
+
+
+def test_selfcheck_double_release(kv):
+    kv.alloc(0, 10)
+    kv.free(0)
+    with pytest.raises(PagedCacheCorruption, match="double release"):
+        kv.free(0)
+
+
+def test_selfcheck_detects_corrupt_internals(kv):
+    kv.alloc(0, 10)
+    kv._tables[0, 0] = kv.n_pages + 5          # out-of-range page
+    with pytest.raises(PagedCacheCorruption, match="out-of-range"):
+        kv.validate()
+
+
+def test_selfcheck_detects_refcount_drift(kv):
+    kv.alloc(0, 10)
+    kv._ref[int(kv._tables[0, 0])] += 1        # phantom reference
+    with pytest.raises(PagedCacheCorruption, match="ref-count"):
+        kv.validate()
+
+
+def test_selfcheck_truncate_after_fork(kv, tiny_cfg):
+    cache = kv.init_cache()
+    kv.alloc(0, 20)                            # 3 pages, last partial
+    cache = kv.fork(cache, 0, 1, 20)           # 2 shared + 1 copied
+    assert kv.stats()["refcount_max"] == 2
+    # shrink the fork below the shared boundary: pure-metadata rollback
+    cache = kv.truncate(cache, 1, 8)
+    kv.validate()
+    kv.free(0)
+    kv.free(1)
+    st = kv.close()
+    assert st["pages_leaked"] == 0 and st["free_pages"] == kv.usable_pages
+
+
+def test_selfcheck_close_reports_leak(kv):
+    kv._free.pop()                             # lose a page
+    with pytest.raises(PagedCacheCorruption, match="leaked"):
+        kv.close()
+
+
+def test_stats_cheap_without_check(tiny_cfg):
+    kv = PagedKVCache(tiny_cfg, 2, 32, page_size=8)    # check=False
+    kv.alloc(0, 9)
+    st = kv.stats()
+    assert st["mapped_pages"] == 2 and st["pages_leaked"] == 0
+    kv.free(0)
+    kv.free(0)                                 # silent no-op when unchecked
+    assert kv.close()["pages_leaked"] == 0
+
+
+# ---------------------------------------------------------------------------
+# the tree itself is clean — the CI gate
+# ---------------------------------------------------------------------------
+
+def test_clean_tree_strict_exit_zero(capsys):
+    assert lint_main(["--strict", "--skip-kernels"]) == 0
+    assert "lint: clean" in capsys.readouterr().out

@@ -11,6 +11,12 @@ cd "$(dirname "$0")/.."
 
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
+echo "== tier-1: static invariant lint (repro.analysis.lint) =="
+# kernel index-map bounds, tile alignment, hot-path sync, PRNG and lock
+# discipline; --strict also fails on bare (unjustified) suppressions.
+# docs/ANALYSIS.md catalogs the rules.
+python -m repro.analysis.lint --strict
+
 echo "== tier-1: pytest =="
 # Two failures predate the seed (multi-device dryrun subprocess and the HLO
 # analyzer depend on a newer jax than the container ships); deselect them so
