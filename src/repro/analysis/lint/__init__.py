@@ -11,6 +11,8 @@ Rules:
 * ``prng-discipline`` — request-owned keys only (:mod:`.prng`)
 * ``lock-discipline`` — cross-thread writes under the declared lock
   (:mod:`.locks`)
+* ``telemetry-no-sync`` — no host sync reachable from the tracer's
+  recording/export surface (:mod:`.telemetry_sync`)
 
 Run ``python -m repro.analysis.lint --strict`` (the tier-1 CI gate) or
 ``--changed-only`` for the fast git-diff-scoped mode.  Suppress a
@@ -23,3 +25,4 @@ from .hotpath import check_hotpath                               # noqa: F401
 from .kernel_check import check_kernels, findings_for_callable   # noqa: F401
 from .locks import check_locks                                   # noqa: F401
 from .prng import check_prng                                     # noqa: F401
+from .telemetry_sync import check_telemetry                      # noqa: F401

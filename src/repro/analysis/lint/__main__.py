@@ -18,7 +18,7 @@ import traceback
 from pathlib import Path
 from typing import List, Optional, Set
 
-from . import hotpath, kernel_check, locks, prng
+from . import hotpath, kernel_check, locks, prng, telemetry_sync
 from .diagnostics import (REPO_ROOT, Finding, SuppressionIndex, exit_code,
                           render_human, render_json)
 
@@ -82,6 +82,13 @@ def run(argv: Optional[List[str]] = None) -> int:
             findings += hp
         findings += prng.check_prng(root, _scoped(prng.scope_files(root)))
         findings += locks.check_locks(root, _scoped(locks.scope_files(root)))
+        ts_files = _scoped(telemetry_sync.scope_files(root))
+        if changed is None or ts_files:
+            # same full-scope / filtered-findings contract as hotpath
+            ts = telemetry_sync.check_telemetry(root)
+            if changed is not None:
+                ts = [f for f in ts if f.path in changed]
+            findings += ts
     except Exception:
         traceback.print_exc()
         print("lint: internal error (exit 2)", file=sys.stderr)

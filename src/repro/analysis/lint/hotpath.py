@@ -44,6 +44,10 @@ ENTRY_POINTS = [
 SAMPLING_SINKS = {
     ("src/repro/serving/batcher.py", "ContinuousBatcher",
      "_sample_slot_rows"),
+    # the traced body of _sample_slot_rows (the public wrapper only adds
+    # the tracer span around the same budgeted host sync)
+    ("src/repro/serving/batcher.py", "ContinuousBatcher",
+     "_sample_slot_rows_traced"),
     ("src/repro/serving/speculative.py", None, "filtered_probs"),
     ("src/repro/serving/speculative.py", None, "logprob_record"),
     ("src/repro/serving/speculative.py", None, "accept_row"),

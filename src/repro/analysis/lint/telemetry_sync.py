@@ -1,0 +1,78 @@
+"""Telemetry sync lint: the tracer must never synchronize the device.
+
+The whole point of :mod:`repro.telemetry` is measuring the overlap of
+the pin / transfer / host-GEMM / device streams *without perturbing it*
+(docs/OBSERVABILITY.md).  A ``.item()``, ``jax.device_get``,
+``block_until_ready``, or ``np.asarray`` on a device array anywhere in
+the recording or snapshot path would serialize the very streams under
+measurement — the observer effect this rule forbids statically.
+
+The walk starts from every recording entry point (``Tracer.span`` /
+``event`` and the :class:`MetricsRegistry` instruments) plus the
+snapshot/export surface, follows the may-call graph across the
+telemetry package, and flags any host-sync call in a reachable
+function.  Unlike ``hot-path-sync`` there are no sampling sinks and no
+budgeted escapes: telemetry has *zero* legitimate device syncs, so a
+``# lint: allow[telemetry-no-sync]`` should essentially never appear.
+"""
+
+from __future__ import annotations
+
+from pathlib import Path
+from typing import List, Optional
+
+from .callgraph import build_index, reachable_from
+from .diagnostics import Finding
+from .hotpath import _flag_sync_calls
+
+RULE = "telemetry-no-sync"
+
+# recording hot path (runs inside the streams being measured) plus the
+# snapshot/export/report surface (runs on the driver thread, but a sync
+# there still stalls dispatch mid-serve when called between steps)
+ENTRY_POINTS = [
+    ("src/repro/telemetry/tracer.py", "Tracer", "span"),
+    ("src/repro/telemetry/tracer.py", "Tracer", "event"),
+    ("src/repro/telemetry/tracer.py", "Tracer", "spans"),
+    ("src/repro/telemetry/tracer.py", "Tracer", "events_list"),
+    ("src/repro/telemetry/tracer.py", "_LiveSpan", "__exit__"),
+    ("src/repro/telemetry/metrics.py", "Counter", "inc"),
+    ("src/repro/telemetry/metrics.py", "Gauge", "set"),
+    ("src/repro/telemetry/metrics.py", "Histogram", "observe"),
+    ("src/repro/telemetry/metrics.py", "MetricsRegistry", "absorb"),
+    ("src/repro/telemetry/metrics.py", "MetricsRegistry", "snapshot"),
+    ("src/repro/telemetry/export.py", None, "to_chrome_trace"),
+    ("src/repro/telemetry/export.py", None, "write_chrome_trace"),
+    ("src/repro/telemetry/overlap.py", None, "compute_overlap"),
+    ("src/repro/telemetry/recalibrate.py", None, "recalibrate_alpha"),
+]
+
+
+def scope_files(root: Path) -> List[str]:
+    sub = root / "src/repro/telemetry"
+    return sorted(str(p.relative_to(root).as_posix())
+                  for p in sub.glob("*.py"))
+
+
+def check_telemetry(root: Path,
+                    files: Optional[List[str]] = None,
+                    entries=None) -> List[Finding]:
+    files = files if files is not None else scope_files(root)
+    if not files:
+        return []
+    index = build_index(root, files)
+    entries = entries if entries is not None else ENTRY_POINTS
+    reach = reachable_from(index, [e for e in entries
+                                   if e in index.funcs])
+    findings: List[Finding] = []
+    for key in sorted(reach, key=lambda k: (k[0], str(k[1]), k[2])):
+        path, cls, name = key
+        if not path.startswith("src/repro/telemetry/"):
+            continue
+        fn = index.funcs[key]
+        for line, why in _flag_sync_calls(fn):
+            findings.append(Finding(
+                RULE, path, line,
+                f"{fn.qualname} is reachable from the telemetry "
+                f"recording/export surface: {why}"))
+    return findings

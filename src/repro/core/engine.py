@@ -35,6 +35,7 @@ import numpy as np
 
 from repro.core import alpha as alpha_lib
 from repro.core.param_manager import AsyncParamManager, plan_prefetch_order
+from repro.telemetry.tracer import NULL_TRACER, Tracer
 
 
 @dataclasses.dataclass(frozen=True)
@@ -77,7 +78,9 @@ class HeteGenEngine:
                  biases: Optional[Dict[str, np.ndarray]] = None,
                  tile: int = 128,
                  device: Optional[jax.Device] = None,
-                 resident_store: Optional[Dict[str, jax.Array]] = None):
+                 resident_store: Optional[Dict[str, jax.Array]] = None,
+                 tracer: Tracer = NULL_TRACER,
+                 trace_phase: Optional[str] = None):
         self.plan = {p.name: p for p in plan}
         self.order = [p.name for p in plan]
         self.tile = tile
@@ -85,6 +88,8 @@ class HeteGenEngine:
         self.biases = {k: jnp.asarray(v) for k, v in (biases or {}).items()}
         self.stats = StreamStats()
         self._lock = threading.Lock()
+        self.tracer = tracer
+        self.trace_phase = trace_phase
 
         # Partition every weight once, ahead of time.  ``resident_store``
         # lets a phase-aware backend run several engines (one partition per
@@ -119,7 +124,9 @@ class HeteGenEngine:
             if cols < w.shape[-1]:
                 self._host_part[p.name] = np.ascontiguousarray(w[..., cols:])
 
-        self.manager = (AsyncParamManager(stage_src, groups)
+        self.manager = (AsyncParamManager(stage_src, groups,
+                                          tracer=tracer,
+                                          trace_phase=trace_phase)
                         if stage_src else None)
         self._next_in_group = plan_prefetch_order(
             [n for n in self.order if n in stage_src], groups)
@@ -147,21 +154,26 @@ class HeteGenEngine:
                     seen.add(p.group)
 
     def _host_matmul(self, x_np: np.ndarray, name: str) -> np.ndarray:
-        t0 = time.perf_counter()
-        y = x_np @ self._host_part[name]
-        with self._lock:
-            self.stats.cpu += time.perf_counter() - t0
+        w = self._host_part[name]
+        with self.tracer.span(name, track="cpu_gemm", bytes=w.nbytes,
+                              module=name, phase=self.trace_phase):
+            t0 = time.perf_counter()
+            y = x_np @ w
+            with self._lock:
+                self.stats.cpu += time.perf_counter() - t0
         return y
 
-    def _transfer(self, buf: np.ndarray) -> jax.Array:
-        t0 = time.perf_counter()
-        arr = jax.device_put(buf, self.device)
-        # lint: allow[hot-path-sync] transfer-stream timing: the sync is
-        # the measurement (trans busy-seconds feed the alpha law), and it
-        # runs on the dedicated transfer thread, not the dispatch thread
-        arr.block_until_ready()
-        with self._lock:
-            self.stats.trans += time.perf_counter() - t0
+    def _transfer(self, buf: np.ndarray, name: str) -> jax.Array:
+        with self.tracer.span(name, track="transfer", bytes=buf.nbytes,
+                              module=name, phase=self.trace_phase):
+            t0 = time.perf_counter()
+            arr = jax.device_put(buf, self.device)
+            # lint: allow[hot-path-sync] transfer-stream timing: the sync is
+            # the measurement (trans busy-seconds feed the alpha law), and it
+            # runs on the dedicated transfer thread, not the dispatch thread
+            arr.block_until_ready()
+            with self._lock:
+                self.stats.trans += time.perf_counter() - t0
         return arr
 
     # ------------------------------------------------------------------
@@ -169,13 +181,15 @@ class HeteGenEngine:
         """y = x @ W[name] (+ bias), executed per the placement plan."""
         p = self.plan[name]
         if p.mode == "resident":
-            t0 = time.perf_counter()
-            y = self._matmul(x, self._resident[name])
-            # lint: allow[hot-path-sync] device-stream timing: dev
-            # busy-seconds are the alpha controller's input signal
-            y.block_until_ready()
-            with self._lock:
-                self.stats.dev += time.perf_counter() - t0
+            with self.tracer.span(name, track="device", module=name,
+                                  phase=self.trace_phase):
+                t0 = time.perf_counter()
+                y = self._matmul(x, self._resident[name])
+                # lint: allow[hot-path-sync] device-stream timing: dev
+                # busy-seconds are the alpha controller's input signal
+                y.block_until_ready()
+                with self._lock:
+                    self.stats.dev += time.perf_counter() - t0
         else:
             cols = self._dev_cols[name]
             has_host = name in self._host_part
@@ -204,16 +218,18 @@ class HeteGenEngine:
             y_dev = None
             if cols > 0:
                 buf = self.manager.acquire(name)
-                w_fut = self._trans_pool.submit(self._transfer, buf)
+                w_fut = self._trans_pool.submit(self._transfer, buf, name)
                 w_dev = w_fut.result()
-                t0 = time.perf_counter()
-                y_dev = self._matmul(x, w_dev)
-                # lint: allow[hot-path-sync] ring-slot release ordering:
-                # jax's CPU backend zero-copies device_put, so the read
-                # must finish before the slot is re-staged (see above)
-                y_dev.block_until_ready()
-                with self._lock:
-                    self.stats.dev += time.perf_counter() - t0
+                with self.tracer.span(name, track="device", module=name,
+                                      phase=self.trace_phase):
+                    t0 = time.perf_counter()
+                    y_dev = self._matmul(x, w_dev)
+                    # lint: allow[hot-path-sync] ring-slot release ordering:
+                    # jax's CPU backend zero-copies device_put, so the read
+                    # must finish before the slot is re-staged (see above)
+                    y_dev.block_until_ready()
+                    with self._lock:
+                        self.stats.dev += time.perf_counter() - t0
                 self.manager.release(name)
 
             # 4. combine
@@ -230,6 +246,17 @@ class HeteGenEngine:
         return y
 
     # ------------------------------------------------------------------
+    def set_tracer(self, tracer: Tracer,
+                   trace_phase: Optional[str] = None) -> None:
+        """Swap the tracer (and phase label) on a live engine — used when
+        tracing is enabled after the engine was built."""
+        self.tracer = tracer
+        if trace_phase is not None:
+            self.trace_phase = trace_phase
+        if self.manager is not None:
+            self.manager.tracer = tracer
+            self.manager.trace_phase = self.trace_phase
+
     def finish_stats(self) -> StreamStats:
         with self._lock:
             self.stats.wall = time.perf_counter() - self._t_start

@@ -29,6 +29,8 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
+from repro.telemetry.tracer import NULL_TRACER, Tracer
+
 
 @dataclasses.dataclass
 class PinSlot:
@@ -75,10 +77,14 @@ class AsyncParamManager:
     """
 
     def __init__(self, weights: Dict[str, np.ndarray],
-                 groups: Dict[str, str]):
+                 groups: Dict[str, str], *,
+                 tracer: Tracer = NULL_TRACER,
+                 trace_phase: Optional[str] = None):
         """``weights``: host arrays per module; ``groups``: module -> group."""
         self.weights = weights
         self.groups = groups
+        self.tracer = tracer
+        self.trace_phase = trace_phase
         by_group: Dict[str, List[str]] = {}
         for name, g in groups.items():
             by_group.setdefault(g, []).append(name)
@@ -101,14 +107,16 @@ class AsyncParamManager:
             self.events.append((op, name, time.perf_counter()))
 
     def _do_pin(self, slot: PinSlot, name: str) -> np.ndarray:
-        t0 = time.perf_counter()
         src = self.weights[name]
-        flat = src.reshape(-1).view(np.uint8)
-        dst = slot.buffer[: flat.nbytes]
-        np.copyto(dst, flat)
-        dt = time.perf_counter() - t0
-        with self._pin_lock:
-            self._pin_seconds += dt
+        with self.tracer.span(name, track="pin", bytes=src.nbytes,
+                              module=name, phase=self.trace_phase):
+            t0 = time.perf_counter()
+            flat = src.reshape(-1).view(np.uint8)
+            dst = slot.buffer[: flat.nbytes]
+            np.copyto(dst, flat)
+            dt = time.perf_counter() - t0
+            with self._pin_lock:
+                self._pin_seconds += dt
         self._log("pinned", name)
         return dst.view(src.dtype).reshape(src.shape)
 

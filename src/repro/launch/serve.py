@@ -91,6 +91,13 @@ def main() -> None:
                     help="stream the first request token by token")
     ap.add_argument("--hw", default="a10", help="hardware model for the "
                     "alpha law (a10 | v5e)")
+    ap.add_argument("--trace", metavar="OUT.json", default=None,
+                    help="record zero-sync spans across the run and dump "
+                    "a Chrome/Perfetto trace JSON (docs/OBSERVABILITY.md)")
+    ap.add_argument("--overlap-report", action="store_true",
+                    help="print the per-step I/O-hidden fraction, stream "
+                    "utilization, and critical-path breakdown computed "
+                    "from the recorded trace (implies tracing)")
     ap.add_argument("--dryrun", action="store_true")
     ap.add_argument("--shape", default="decode_32k")
     ap.add_argument("--mesh", choices=("single", "multi"), default="single")
@@ -157,21 +164,24 @@ def main() -> None:
         spec = SpecConfig(drafter=drafter, k=args.spec_k,
                           adaptive=args.spec_adaptive)
 
+    tracing = bool(args.trace or args.overlap_report)
     llm_kw = dict(sampling=sampling, max_slots=slots,
                   max_len=args.prompt_len + args.max_new + 8,
                   paged=args.paged, page_size=args.page_size,
                   n_pages=args.n_pages, policy=args.policy,
                   chunk_tokens=args.chunk_tokens,
                   prefix_dedupe=False if args.no_prefix_dedupe else None,
-                  spec=spec, selfcheck=args.selfcheck)
+                  spec=spec, selfcheck=args.selfcheck, trace=tracing)
     # give the priority policy something to schedule: alternate priorities
     prio = (lambda i: i % 2) if args.policy == "priority" else (lambda i: 0)
 
+    facade = None
     if args.use_async:
         # the event loop owns the step() crank: submit/stream only
         from repro.serving.api import AsyncLLM
         with AsyncLLM(cfg, params, backend=backend, own_backend=True,
                       **llm_kw) as allm:
+            facade = allm._llm
             if args.stream:
                 for tok in allm.stream(prompts[0], args.max_new):
                     print(f"  stream> {tok}", flush=True)
@@ -183,6 +193,7 @@ def main() -> None:
     else:
         with LLM(cfg, params, backend=backend, own_backend=True,
                  **llm_kw) as llm:
+            facade = llm
             if args.stream:
                 for tok in llm.stream(prompts[0], args.max_new):
                     print(f"  stream> {tok}", flush=True)
@@ -230,6 +241,15 @@ def main() -> None:
               f"drafted={sp['drafted']} accepted={sp['accepted']} "
               f"rolled_back={sp['rolled_back']} "
               f"(acceptance {sp['acceptance_rate']:.2f})")
+    if tracing:
+        # the tracer's ring buffers are plain host memory — they outlive
+        # the facade's close(), so export after teardown is safe
+        if args.trace:
+            doc = facade.write_trace(args.trace)
+            print(f"trace: {args.trace} "
+                  f"({len(doc['traceEvents'])} events)")
+        if args.overlap_report:
+            print(facade.overlap_report().render())
 
 
 if __name__ == "__main__":

@@ -76,6 +76,10 @@ from repro.serving.sampling import SamplingParams, request_key
 from repro.serving.scheduler import SchedulerPolicy
 from repro.serving.speculative import SpecConfig
 from repro.serving.tokenizer import StreamDecoder, Tokenizer
+from repro.telemetry.export import write_chrome_trace
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.overlap import OverlapReport, compute_overlap
+from repro.telemetry.tracer import Tracer, as_tracer
 
 Prompt = Sequence[int]
 
@@ -138,7 +142,8 @@ class LLM:
                  spec: Optional[SpecConfig] = None,
                  tokenizer: Optional[Tokenizer] = None,
                  seed: int = 0,
-                 selfcheck: bool = False):
+                 selfcheck: bool = False,
+                 trace: Union[bool, Tracer] = False):
         if backend is None and params is None:
             raise ValueError("LLM needs params or a backend")
         self.cfg = cfg
@@ -172,6 +177,15 @@ class LLM:
         # selfcheck: PagedKVCache(check=True) — validate allocator
         # invariants every step and audit for leaked pages at close
         self.selfcheck = selfcheck
+        # observability (docs/OBSERVABILITY.md): trace=True records
+        # zero-sync spans across the whole stack (batcher steps, engine
+        # streams, scheduler events); the registry is always live and
+        # merges the legacy stats() keys on metrics()
+        self.tracer = as_tracer(trace)
+        self._metrics = MetricsRegistry()
+        if self.tracer and backend is not None \
+                and hasattr(backend, "set_tracer"):
+            backend.set_tracer(self.tracer)
         # lint: allow[prng-discipline] the facade's base key: request_key
         # folds per-request ids into it, step_key derives per-token draws
         self._base_key = jax.random.PRNGKey(seed)
@@ -197,7 +211,8 @@ class LLM:
                       preempt_mode=self.preempt_mode,
                       chunk_tokens=self.chunk_tokens,
                       prefix_dedupe=self.prefix_dedupe,
-                      spec=self.spec, selfcheck=self.selfcheck)
+                      spec=self.spec, selfcheck=self.selfcheck,
+                      tracer=self.tracer, metrics=self._metrics)
             if self._backend is None:
                 self._batcher = ContinuousBatcher(self.cfg, self._params,
                                                   **kw)
@@ -564,6 +579,28 @@ class LLM:
                     for rid, s in self._batcher.spec_by_req.items()}
                 st["spec"] = spec
         return st
+
+    def metrics(self) -> Dict:
+        """One flat snapshot of every serving metric: the live batcher
+        instruments (``serve.*``) merged with the legacy :meth:`stats`
+        keys as namespaced gauges (``scheduler.preemptions``,
+        ``kv.free_pages``, ``stream.cpu_s``, ...).  The nested
+        :meth:`stats` dict remains during the deprecation window; this
+        is its replacement surface (docs/OBSERVABILITY.md)."""
+        reg = self._batcher.metrics if self._batcher is not None \
+            else self._metrics
+        reg.absorb(self.stats())
+        return reg.snapshot()
+
+    def write_trace(self, path: str) -> Dict:
+        """Dump the recorded spans as Chrome trace JSON; returns the
+        document (empty trace if tracing was never enabled)."""
+        return write_chrome_trace(path, self.tracer)
+
+    def overlap_report(self) -> OverlapReport:
+        """Per-step I/O-hidden fraction / stream utilization / critical
+        path from the recorded spans (paper Fig. 5c, Table 2)."""
+        return compute_overlap(self.tracer.spans())
 
     def close(self) -> None:
         """Tear down everything the facade owns (idempotent)."""

@@ -37,6 +37,8 @@ from repro.core.policy import LinearSpec, PolicyResult, build_policy
 from repro.models import model as M
 from repro.models.config import ModelConfig
 from repro.serving.kv_cache import PagedKVCache
+from repro.telemetry.recalibrate import recalibrate_alpha
+from repro.telemetry.tracer import NULL_TRACER, Tracer
 
 
 @runtime_checkable
@@ -282,7 +284,10 @@ class HeteGenBackend:
                  use_module_scheduler: bool = True,
                  alpha_override: Optional[float] = None,
                  phase_plans: bool = True,
-                 prefill_retune_factor: float = 2.0):
+                 prefill_retune_factor: float = 2.0,
+                 tracer: Tracer = NULL_TRACER,
+                 recalibrate: Optional[float] = None,
+                 recalibrate_every: int = 16):
         self.cfg = cfg
         shared, weights, biases = M.extract_backend_params(cfg, params)
         self.shared = shared
@@ -304,6 +309,17 @@ class HeteGenBackend:
         self._stats_tally = StreamStats()   # closed engines' busy seconds
         self._phase = "decode"
         self.step_prefetches = 0            # cross-step prefetch nudges
+        self.tracer = tracer
+        # trace-driven alpha recalibration (docs/OBSERVABILITY.md): when
+        # set, every `recalibrate_every` decode steps the measured stream
+        # speeds re-solve Eq. 10-12 and the decode plan is rebuilt if the
+        # refined alpha drifted by more than `recalibrate` (absolute).
+        self.recalibrate = recalibrate
+        self.recalibrate_every = max(int(recalibrate_every), 1)
+        self.recalibrations = 0
+        self.last_fit = None                # most recent trace FitResult
+        self._recal_steps = 0
+        self._recal_mark = tracer.mark() if tracer else 0.0
         self.retune(batch)
 
     # -- phase/batch-aware planning ------------------------------------
@@ -358,7 +374,8 @@ class HeteGenBackend:
                 del self._resident_store[name]
         eng = HeteGenEngine(self._host_weights, pol.plan,
                             biases=self._host_biases,
-                            resident_store=self._resident_store)
+                            resident_store=self._resident_store,
+                            tracer=self.tracer, trace_phase=phase)
         eng.warm_prefetch()
         self.engines[phase] = eng
         if phase == "decode":
@@ -395,6 +412,72 @@ class HeteGenBackend:
                 return
         self.retune(batch, phase="verify", tokens_per_seq=seq)
 
+    # -- tracing + trace-driven recalibration --------------------------
+    def set_tracer(self, tracer: Tracer) -> None:
+        """Attach a tracer to the backend and every live phase engine
+        (the LLM facade calls this when ``trace=`` is enabled after the
+        backend was constructed)."""
+        self.tracer = tracer
+        self._recal_mark = tracer.mark() if tracer else 0.0
+        for phase, eng in self.engines.items():
+            eng.set_tracer(tracer, trace_phase=phase)
+
+    def recalibrate_from_trace(self, phase: str = "decode"):
+        """Refine ``phase``'s alpha from the spans recorded since the
+        last recalibration; returns the ``FitResult`` (or None if the
+        trace has no measurable spans for that phase — e.g. an all-
+        resident plan, or tracing disabled)."""
+        pol = self.policies.get(phase)
+        if pol is None or not self.tracer:
+            return None
+        spans = self.tracer.spans(since=self._recal_mark or None)
+        try:
+            fit = recalibrate_alpha(spans, pol.alpha, phase=phase)
+        except ValueError:
+            return None
+        self.last_fit = fit
+        return fit
+
+    def _apply_alpha(self, phase: str, alpha: float) -> None:
+        """Rebuild ``phase``'s engine with a new hetegen alpha, keeping
+        the residency/streaming decisions of the existing plan."""
+        pol = self.policies[phase]
+        pol.plan = [ModulePlan(p.name, p.group, p.mode,
+                               alpha if p.mode == "hetegen" else p.alpha)
+                    for p in pol.plan]
+        pol.alpha = float(alpha)
+        old = self.engines.pop(phase, None)
+        if old is not None:
+            self._stats_tally = self._stats_tally + old.finish_stats()
+            old.close()
+        eng = HeteGenEngine(self._host_weights, pol.plan,
+                            biases=self._host_biases,
+                            resident_store=self._resident_store,
+                            tracer=self.tracer, trace_phase=phase)
+        eng.warm_prefetch()
+        self.engines[phase] = eng
+
+    def _maybe_recalibrate(self) -> None:
+        """Periodic trace-driven re-tune, called at the top of a decode
+        step — the engines are idle there, so swapping the decode
+        partition is safe.  Opt-in (``recalibrate=``), with the drift
+        threshold acting as hysteresis: the plan is only rebuilt when
+        |refined - current| exceeds it."""
+        if self.recalibrate is None or not self.tracer:
+            return
+        self._recal_steps += 1
+        if self._recal_steps % self.recalibrate_every:
+            return
+        fit = self.recalibrate_from_trace("decode")
+        mark = self.tracer.mark()
+        if fit is None:
+            return
+        self._recal_mark = mark
+        cur = self.policies["decode"].alpha
+        if abs(fit.alpha - cur) > self.recalibrate:
+            self._apply_alpha("decode", fit.alpha)
+            self.recalibrations += 1
+
     # -- LinearBackend surface -----------------------------------------
     def linear(self, x: jax.Array, name: str) -> jax.Array:
         eng = self.engines.get(self._phase) or self.engines["decode"]
@@ -427,6 +510,7 @@ class HeteGenBackend:
 
     def decode(self, token: jax.Array, cache: Dict
                ) -> Tuple[Dict, jax.Array]:
+        self._maybe_recalibrate()
         return M.backend_decode(self.cfg, self.shared, token, cache,
                                 linear=self.linear, ops=self._ops)
 

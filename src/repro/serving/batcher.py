@@ -65,7 +65,9 @@ when handed one with ``own_backend=True``): ``close()`` — or leaving the
 
 from __future__ import annotations
 
+import contextlib
 import itertools
+import time
 from typing import Dict, List, Optional, Union
 
 import jax
@@ -82,6 +84,8 @@ from repro.serving.scheduler import (PREFILLING, RequestState, RUNNING,
                                      Scheduler, SchedulerPolicy)
 from repro.serving.speculative import (AdaptiveK, SpecConfig, SpecStats,
                                        accept_row, logprob_record)
+from repro.telemetry.metrics import MetricsRegistry
+from repro.telemetry.tracer import NULL_TRACER, Tracer
 
 # back-compat: PR 3 exposed the queue entry as batcher.Request
 Request = RequestState
@@ -102,7 +106,9 @@ class ContinuousBatcher:
                  chunk_tokens: Optional[int] = None,
                  prefix_dedupe: Optional[bool] = None,
                  spec: Optional[SpecConfig] = None,
-                 selfcheck: bool = False):
+                 selfcheck: bool = False,
+                 tracer: Tracer = NULL_TRACER,
+                 metrics: Optional[MetricsRegistry] = None):
         if cfg.family in ("ssm", "hybrid", "encdec"):
             raise NotImplementedError(
                 "continuous batching supports transformer KV caches")
@@ -113,7 +119,16 @@ class ContinuousBatcher:
         # transfer ownership with own_backend=True
         self._own_backend = backend is None if own_backend is None \
             else bool(own_backend)
+        # observability (docs/OBSERVABILITY.md): spans land on the "step"
+        # and "phase" tracks here, the backend's engines add the stream
+        # tracks; the registry holds live serving counters and absorbs
+        # the legacy stats() dicts on snapshot
+        self.tracer = tracer
+        self.metrics = metrics if metrics is not None else MetricsRegistry()
+        self._step_no = 0
         self.backend = backend or ScanResidentBackend(cfg, params)
+        if tracer and hasattr(self.backend, "set_tracer"):
+            self.backend.set_tracer(tracer)
         if hasattr(self.backend, "retune"):
             # the decode batch is the slot count — enforce the documented
             # contract instead of trusting the caller's constructed plan
@@ -139,7 +154,8 @@ class ContinuousBatcher:
                                    optimistic=optimistic,
                                    preempt_mode=preempt_mode,
                                    chunk_tokens=chunk_tokens,
-                                   prefix_dedupe=prefix_dedupe)
+                                   prefix_dedupe=prefix_dedupe,
+                                   tracer=tracer)
         # per-slot lengths (vector 'len' drives per-slot scatter updates)
         self.cache["len"] = jnp.zeros((max_slots,), jnp.int32)
         # dense chunked prefill accumulates each slot's KV in a private
@@ -217,6 +233,11 @@ class ContinuousBatcher:
         consume no entropy and cannot perturb real requests.  Rows whose
         request asked for logprobs get their per-token record appended
         here, straight out of the sampler's existing sort."""
+        with self.tracer.span("sample", track="sample", rows=len(slots)):
+            return self._sample_slot_rows_traced(logits, slots)
+
+    def _sample_slot_rows_traced(self, logits: jax.Array,
+                                 slots: List[int]) -> jax.Array:
         slot_req = self.scheduler.slot_req
         params, keys = [], []
         for s in slots:
@@ -473,36 +494,62 @@ class ContinuousBatcher:
         (no entropy was consumed, and deterministic drafters re-propose
         identically on resume — mid-speculation preemption stays
         token-identical).
+
+        Each step records one ``step`` span (its ``phase`` attr names
+        the dominant work) plus per-phase spans on the ``phase`` track,
+        and feeds the live serving metrics — all no-ops with the null
+        tracer/default registry idle.
         """
+        self._step_no += 1
+        t0 = time.perf_counter()
+        toks_before = sum(len(r.generated) for r in self.requests.values())
+        sp = self.tracer.span(f"step{self._step_no}", track="step")
+        with sp:
+            n = self._step_inner(sp)
+        m = self.metrics
+        m.counter("serve.steps").inc()
+        m.counter("serve.tokens").inc(
+            sum(len(r.generated) for r in self.requests.values())
+            - toks_before)
+        m.histogram("serve.step_s").observe(time.perf_counter() - t0)
+        m.gauge("serve.active_slots").set(n)
+        return n
+
+    def _step_inner(self, sp) -> int:
         if self.kv is not None and self.kv.check:
             # selfcheck mode: prove the allocator invariants at the step
             # boundary too, so drift introduced between the per-op hooks
             # (e.g. direct metadata edits) surfaces before the next plan
             self.kv.validate()
-        proposals = self._draft_proposals() if self.spec is not None \
-            else None
-        advances = None
-        if proposals:
-            advances = {rid: len(d) + 1 for rid, d in proposals.items()}
-        plan = self.scheduler.plan(advances)
-        for st in plan.preempt:
-            self._apply_preempt(st)
-        # group same-length fresh admissions into one prefill call; swap
-        # restores and odd lengths keep the batch-1 path
-        fresh: Dict[int, List[RequestState]] = {}
-        for st in plan.start:
-            if st.saved_kv is not None:
-                self._start(st)
-            else:
-                fresh.setdefault(
-                    len(st.prompt) + len(st.generated), []).append(st)
-        for sts in fresh.values():
-            if len(sts) == 1:
-                self._start(sts[0])
-            else:
-                self._start_batch(sts)
-        for st in plan.prefill:
-            self._prefill_chunk(st)
+        with self.tracer.span("plan", track="phase"):
+            proposals = self._draft_proposals() if self.spec is not None \
+                else None
+            advances = None
+            if proposals:
+                advances = {rid: len(d) + 1 for rid, d in proposals.items()}
+            plan = self.scheduler.plan(advances)
+        admit_cm = self.tracer.span("prefill", track="phase") \
+            if (plan.preempt or plan.start or plan.prefill) \
+            else contextlib.nullcontext()
+        with admit_cm:
+            for st in plan.preempt:
+                self._apply_preempt(st)
+            # group same-length fresh admissions into one prefill call;
+            # swap restores and odd lengths keep the batch-1 path
+            fresh: Dict[int, List[RequestState]] = {}
+            for st in plan.start:
+                if st.saved_kv is not None:
+                    self._start(st)
+                else:
+                    fresh.setdefault(
+                        len(st.prompt) + len(st.generated), []).append(st)
+            for sts in fresh.values():
+                if len(sts) == 1:
+                    self._start(sts[0])
+                else:
+                    self._start_batch(sts)
+            for st in plan.prefill:
+                self._prefill_chunk(st)
         if self.paged and self.scheduler.tables_dirty:
             # page growth / release since the last export (admission
             # prefills re-export on their own)
@@ -510,6 +557,8 @@ class ContinuousBatcher:
             self.scheduler.tables_dirty = False
         active = self.scheduler.active_mask()
         if not active.any():
+            sp.set(phase="prefill" if (plan.start or plan.prefill)
+                   else "idle")
             return 0
         occ = int(active.sum())
         # the batch a decode step actually executes: paged decode compacts
@@ -539,16 +588,20 @@ class ContinuousBatcher:
                          if d and rid in self.requests
                          and self.requests[rid].status == RUNNING}
         if proposals:
-            self._spec_step(proposals, active)
+            sp.set(phase="verify")
+            with self.tracer.span("verify", track="phase"):
+                self._spec_step(proposals, active)
             return int(self.scheduler.active_mask().sum())
-        if self.paged and occ < self.max_slots:
-            self._decode_active_slots(active)
-        else:
-            self.cache, logits = self.backend.decode(self.tokens,
-                                                     self.cache)
-            self._prefetch_next_step()
-            self.tokens = self._sample_slot_rows(
-                logits, list(range(self.max_slots)))
+        sp.set(phase="decode")
+        with self.tracer.span("decode", track="phase"):
+            if self.paged and occ < self.max_slots:
+                self._decode_active_slots(active)
+            else:
+                self.cache, logits = self.backend.decode(self.tokens,
+                                                         self.cache)
+                self._prefetch_next_step()
+                self.tokens = self._sample_slot_rows(
+                    logits, list(range(self.max_slots)))
         nxt = self.tokens
         for st in self.scheduler.running():
             st.generated.append(int(nxt[st.slot]))
@@ -630,10 +683,11 @@ class ContinuousBatcher:
             self.cache["len"] = jnp.asarray(lens_before)
             row_of = {s: s for s in slots}
 
-        # lint: allow[hot-path-sync] speculative accept/reject is host-side
-        # by design (point-mass rejection sampling over the verify logits);
-        # this is the step's one sampling sync, same budget as sample_rows
-        lg = np.asarray(logits, np.float32)     # (rows, width, V)
+        with self.tracer.span("sample", track="sample", rows=len(slots)):
+            # lint: allow[hot-path-sync] speculative accept/reject is
+            # host-side by design (point-mass rejection sampling over the
+            # verify logits); the step's one sync, same budget as sampling
+            lg = np.asarray(logits, np.float32)     # (rows, width, V)
         for s in slots:
             st = slot_req[s]
             m = len(drafts[s])

@@ -66,6 +66,7 @@ import numpy as np
 
 from repro.serving.kv_cache import PagedKVCache, PagesExhausted
 from repro.serving.sampling import SamplingParams
+from repro.telemetry.tracer import NULL_TRACER, Tracer
 
 WAITING = "waiting"
 RUNNING = "running"
@@ -304,8 +305,12 @@ class Scheduler:
                  optimistic: bool = True,
                  preempt_mode: Optional[str] = None,
                  chunk_tokens: Optional[int] = None,
-                 prefix_dedupe: Optional[bool] = None):
+                 prefix_dedupe: Optional[bool] = None,
+                 tracer: Tracer = NULL_TRACER):
         self.policy = get_policy(policy)
+        # scheduling decisions land as instant events on the "sched"
+        # track (docs/OBSERVABILITY.md) — admit/resume/preempt/finish
+        self.tracer = tracer
         self.max_slots = max_slots
         self.max_len = max_len
         self.kv = kv
@@ -375,6 +380,9 @@ class Scheduler:
     def finish(self, st: RequestState) -> None:
         """Retire a finished request: release its slot and pages."""
         st.status = FINISHED
+        self.tracer.event("finish", track="sched", rid=st.rid,
+                          reason=st.finish_reason,
+                          generated=len(st.generated))
         if st.slot is not None:
             if self.kv is not None:
                 self.kv.free(st.slot)
@@ -431,6 +439,9 @@ class Scheduler:
         victim.status = PREEMPTED
         victim.preemptions += 1
         self.preemptions += 1
+        self.tracer.event("preempt", track="sched", rid=victim.rid,
+                          mode=self.preempt_mode,
+                          mid_prefill=mid_prefill)
         victim.prefill_cursor = 0
         victim.forked_len = 0
         if self.kv is not None:
@@ -611,10 +622,14 @@ class Scheduler:
                     self.kv.free(slot)   # undo the fork's aliases
                 return False
             self.tables_dirty = True
+        resume = st in self.preempted
         if st in self.waiting:
             self.waiting.remove(st)
-        if st in self.preempted:
+        if resume:
             self.preempted.remove(st)
+        self.tracer.event("resume" if resume else "admit", track="sched",
+                          rid=st.rid, slot=slot,
+                          wait_steps=st.wait_steps)
         st.slot = slot
         st.resumed_at = len(st.generated)
         st.wait_steps = 0

@@ -1,0 +1,32 @@
+"""repro.telemetry — zero-sync tracing, metrics, and trace-driven tuning.
+
+The observability layer for the heterogeneous runtime (docs/OBSERVABILITY.md):
+
+* :mod:`tracer` — ring-buffered spans/events on host ``perf_counter``,
+  never touching a device array.
+* :mod:`metrics` — counters/gauges/histograms superseding the ad-hoc
+  ``stats()`` dicts behind one snapshot.
+* :mod:`export` — Chrome/Perfetto ``trace.json`` writer + validator.
+* :mod:`overlap` — per-step I/O-hidden fraction, stream utilization,
+  critical-path breakdown (paper Fig. 5c, Table 2).
+* :mod:`recalibrate` — measured stream speeds → ``refine_alpha``.
+"""
+
+from repro.telemetry.export import (to_chrome_trace, validate_chrome_trace,
+                                    write_chrome_trace)
+from repro.telemetry.metrics import (Counter, Gauge, Histogram,
+                                     MetricsRegistry)
+from repro.telemetry.overlap import (OverlapReport, WindowReport,
+                                     compute_overlap)
+from repro.telemetry.recalibrate import (SpeedEstimate, measured_speeds,
+                                         recalibrate_alpha)
+from repro.telemetry.tracer import (NULL_TRACER, Event, Span, Tracer,
+                                    as_tracer)
+
+__all__ = [
+    "Counter", "Event", "Gauge", "Histogram", "MetricsRegistry",
+    "NULL_TRACER", "OverlapReport", "Span", "SpeedEstimate", "Tracer",
+    "WindowReport", "as_tracer", "compute_overlap", "measured_speeds",
+    "recalibrate_alpha", "to_chrome_trace", "validate_chrome_trace",
+    "write_chrome_trace",
+]

@@ -12,7 +12,7 @@ import numpy as np
 import pytest
 
 from repro.analysis.lint import (check_hotpath, check_locks, check_prng,
-                                 findings_for_callable)
+                                 check_telemetry, findings_for_callable)
 from repro.analysis.lint.__main__ import run as lint_main
 from repro.analysis.lint.diagnostics import Finding, SuppressionIndex
 from repro.serving.kv_cache import (PagedCacheCorruption, PagedKVCache,
@@ -150,6 +150,40 @@ def test_hotpath_unreachable_not_flagged(tmp_path):
     found = check_hotpath(tmp_path, files=[rel],
                           entries=[(rel, "Stepper", "step")], sinks=set())
     assert found == []
+
+
+def test_telemetry_sync_flagged(tmp_path):
+    rel = _write(tmp_path, "src/repro/telemetry/fixture_sync.py", """\
+        class Tracer:
+            def span(self, name):
+                return self._record(name)
+
+            def _record(self, name):
+                return self.t.block_until_ready()
+        """)
+    found = check_telemetry(tmp_path, files=[rel],
+                            entries=[(rel, "Tracer", "span")])
+    assert [f.rule for f in found] == ["telemetry-no-sync"]
+    assert found[0].line == 6
+    assert "block_until_ready" in found[0].message
+
+
+def test_telemetry_unreachable_not_flagged(tmp_path):
+    rel = _write(tmp_path, "src/repro/telemetry/fixture_cold.py", """\
+        class Tracer:
+            def span(self, name):
+                return name
+
+            def debug_sync(self):
+                return self.t.item()
+        """)
+    assert check_telemetry(tmp_path, files=[rel],
+                           entries=[(rel, "Tracer", "span")]) == []
+
+
+def test_telemetry_tree_clean():
+    from repro.analysis.lint.diagnostics import REPO_ROOT
+    assert check_telemetry(REPO_ROOT) == []
 
 
 def test_prng_raw_key_flagged(tmp_path):

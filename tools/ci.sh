@@ -271,4 +271,58 @@ print("speculative smoke OK:", [got[s] for s in sids],
       f"acceptance={st.acceptance_rate:.2f}")
 EOF
 
+echo "== smoke: traced offload serving (opt-125m, chrome trace + overlap) =="
+# full-width opt-125m, not tiny: tile-128 alpha quantization needs real
+# output dims before the decode plan actually splits modules across the
+# host/device streams, and the trace must show all of them
+# (docs/OBSERVABILITY.md)
+python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.api import LLM
+from repro.serving.backends import HeteGenBackend, enumerate_linears
+from repro.telemetry import validate_chrome_trace
+
+cfg = get_config("opt-125m")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+total = sum(s.nbytes for s in enumerate_linears(cfg))
+be = HeteGenBackend(cfg, params, hw=PAPER_A10, batch=2,
+                    budget_bytes=0.25 * total)
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(0, cfg.vocab_size, 8)) for _ in range(2)]
+
+with LLM(cfg, params, backend=be, own_backend=True, max_slots=2,
+         max_len=32, trace=True) as llm:
+    for p in prompts:
+        llm.submit(p, 4)
+    outs = llm.drain()
+    assert all(len(o.tokens) == 4 for o in outs.values()), outs
+    doc = llm.write_trace("/tmp/hetegen_trace.json")
+    rep = llm.overlap_report()
+    snap = llm.metrics()
+
+# chrome-trace schema + physical invariants: per-track non-overlap,
+# monotone non-negative timestamps
+problems = validate_chrome_trace(doc)
+assert problems == [], problems[:5]
+tracks = {e["args"]["name"] for e in doc["traceEvents"] if e["ph"] == "M"}
+want = {"step", "phase", "pin", "transfer", "cpu_gemm", "device", "sample"}
+assert want <= tracks, (want - tracks, tracks)
+
+# the overlap report's headline number is a fraction
+assert 0.0 <= rep.io_hidden_frac <= 1.0, rep.io_hidden_frac
+assert rep.overall.io_busy > 0, "offload decode moved no bytes?"
+assert rep.steps, "no per-step windows"
+
+# the batcher's live instruments made it into the merged snapshot
+assert snap["serve.tokens"] == 8.0, snap.get("serve.tokens")
+assert snap["serve.steps"] >= 1, snap.get("serve.steps")
+print(f"traced smoke OK: {len(doc['traceEvents'])} events, "
+      f"tracks={sorted(tracks)}, io_hidden={rep.io_hidden_frac:.3f}")
+EOF
+
 echo "CI OK"
