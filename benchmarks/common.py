@@ -9,34 +9,39 @@ from repro.core.sim import SimModule
 
 
 def opt_decode_modules(arch: str, prefill_len: int = 512,
-                       batch: int = 1) -> List[SimModule]:
+                       batch: int = 1,
+                       wstream: str = "fp") -> List[SimModule]:
     """Per-decode-step module list for an OPT config (the paper's models).
 
     Linear weights in fp16 (the paper's deployment dtype); attention core
-    touches the KV cache for ``prefill_len`` tokens.
+    touches the KV cache for ``prefill_len`` tokens.  ``wstream="q8"``
+    stamps the int8+scale wire bytes on every linear so the simulator
+    prices pin/DMA at the compressed size (docs/ANALYSIS.md appendix).
     """
     cfg = get_config(arch)
     d, f = cfg.d_model, cfg.d_ff
     hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     by = 2                                      # fp16 weights at deployment
+
+    def linear(name, n_in, n_out, group, flops):
+        wire = n_in * n_out + 4 * n_out if wstream == "q8" else None
+        return SimModule(name, "linear", n_in * n_out * by, n_out, group,
+                         flops, wire_bytes=wire)
+
     mods: List[SimModule] = []
     for l in range(cfg.n_layers):
         mods += [
-            SimModule(f"l{l}.wq", "linear", d * hq * hd * by, hq * hd,
-                      "attn", 2 * batch * d * hq * hd),
-            SimModule(f"l{l}.wk", "linear", d * hkv * hd * by, hkv * hd,
-                      "attn", 2 * batch * d * hkv * hd),
-            SimModule(f"l{l}.wv", "linear", d * hkv * hd * by, hkv * hd,
-                      "attn", 2 * batch * d * hkv * hd),
+            linear(f"l{l}.wq", d, hq * hd, "attn", 2 * batch * d * hq * hd),
+            linear(f"l{l}.wk", d, hkv * hd, "attn",
+                   2 * batch * d * hkv * hd),
+            linear(f"l{l}.wv", d, hkv * hd, "attn",
+                   2 * batch * d * hkv * hd),
             SimModule(f"l{l}.attn", "attn_core", 0, 0, "attn",
                       4 * batch * d * prefill_len,
                       cache_bytes=2 * batch * hkv * hd * prefill_len * by),
-            SimModule(f"l{l}.wo", "linear", hq * hd * d * by, d, "attn",
-                      2 * batch * hq * hd * d),
-            SimModule(f"l{l}.w_in", "linear", d * f * by, f, "mlp",
-                      2 * batch * d * f),
-            SimModule(f"l{l}.w_down", "linear", f * d * by, d, "mlp_down",
-                      2 * batch * f * d),
+            linear(f"l{l}.wo", hq * hd, d, "attn", 2 * batch * hq * hd * d),
+            linear(f"l{l}.w_in", d, f, "mlp", 2 * batch * d * f),
+            linear(f"l{l}.w_down", f, d, "mlp_down", 2 * batch * f * d),
         ]
     return mods
 

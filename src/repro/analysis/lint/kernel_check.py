@@ -389,6 +389,12 @@ def _h_q8_matmul():
     x = jnp.zeros((128, 256), jnp.float32)
     q = jnp.zeros((256, 128), jnp.int8)
     mod.q8_matmul(x, q, jnp.zeros((128,), jnp.float32))
+    # non-zero-scale epilogue: run the kernel on a real quantized weight
+    # so the k == n_k-1 scale multiply is exercised, not just the zero path
+    w = (jnp.arange(256 * 128, dtype=jnp.float32).reshape(256, 128)
+         / (256 * 128) - 0.5)
+    qw, scale = mod.quantize_weights(w)
+    mod.q8_matmul(x + 1.0, qw, scale)
 
 
 def _h_rmsnorm():

@@ -98,6 +98,23 @@ def alpha_for_phase(hw, batch: int, phase: str = "decode",
                           hw.v_com())
 
 
+def effective_link_speed(v_com: float, wire_ratio: float) -> float:
+    """Link speed in *compute* bytes/s when the wire format compresses.
+
+    Streaming ``wire_ratio`` wire bytes per compute byte (int8 + scales
+    over fp32 gives r ~= 1/4) makes the link look ``1/r`` times faster to
+    the alpha law: substituting T_com -> r * T_com in Eq. 4 yields
+
+        a = 1 / ( r * V_cpu/V_com + V_cpu/V_gpu + 1 )
+
+    which is exactly :func:`alpha_analytic` evaluated at ``v_com / r``
+    (derivation in docs/ANALYSIS.md).  Monotone: r < 1 => larger alpha.
+    """
+    if wire_ratio <= 0:
+        raise ValueError("wire_ratio must be positive")
+    return v_com / wire_ratio
+
+
 def alpha_approx(v_cpu: float, v_com: float) -> float:
     """Approximate ratio ignoring device compute time, paper Eq. 6."""
     if v_cpu <= 0:

@@ -12,6 +12,19 @@ Executes the linear modules of a model under a per-module placement plan:
     stream    — alpha = 1: pure weight streaming (FlexGen-style baseline).
     host      — alpha = 0: pure host compute (CPU-only baseline).
 
+``wstream`` picks the wire format of the streamed device shards:
+
+    "fp"      — stream the shard as-is (full precision).
+    "q8"      — quantize each shard once at load to int8 + fp32 per-column
+                scales (:func:`repro.kernels.q8_matmul.quantize_weights_np`)
+                and stream the ``(q, scale)`` pair; the device share runs
+                through :func:`repro.kernels.ops.q8_matmul`, dequantizing
+                inside the matmul, so no fp copy of a streamed weight ever
+                exists in device memory.  The host partition keeps its fp
+                weights (it never crosses the link).  Pin/transfer spans
+                carry the wire bytes (plus ``fp_bytes``, the uncompressed
+                equivalent) so telemetry stays honest under compression.
+
 Four real executors provide the four streams of the paper's Fig. 5c: the
 host GEMM pool, the manager's pin thread, the transfer thread, and the
 device queue (JAX async dispatch).  On this CPU-only container the "device"
@@ -34,7 +47,10 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import alpha as alpha_lib
-from repro.core.param_manager import AsyncParamManager, plan_prefetch_order
+from repro.core.param_manager import (AsyncParamManager, Entry,
+                                      plan_prefetch_order)
+from repro.kernels import ops as kernel_ops
+from repro.kernels.q8_matmul import quantize_weights_np
 from repro.telemetry.tracer import NULL_TRACER, Tracer
 
 
@@ -80,7 +96,11 @@ class HeteGenEngine:
                  device: Optional[jax.Device] = None,
                  resident_store: Optional[Dict[str, jax.Array]] = None,
                  tracer: Tracer = NULL_TRACER,
-                 trace_phase: Optional[str] = None):
+                 trace_phase: Optional[str] = None,
+                 wstream: str = "fp"):
+        if wstream not in ("fp", "q8"):
+            raise ValueError(f"unknown wire format {wstream!r} "
+                             "(expected 'fp' or 'q8')")
         self.plan = {p.name: p for p in plan}
         self.order = [p.name for p in plan]
         self.tile = tile
@@ -90,6 +110,7 @@ class HeteGenEngine:
         self._lock = threading.Lock()
         self.tracer = tracer
         self.trace_phase = trace_phase
+        self.wstream = wstream
 
         # Partition every weight once, ahead of time.  ``resident_store``
         # lets a phase-aware backend run several engines (one partition per
@@ -98,7 +119,8 @@ class HeteGenEngine:
         self._resident: Dict[str, jax.Array] = {}
         self._host_part: Dict[str, np.ndarray] = {}
         self._dev_cols: Dict[str, int] = {}
-        stage_src: Dict[str, np.ndarray] = {}
+        self._fp_shard_bytes: Dict[str, int] = {}   # uncompressed shard size
+        stage_src: Dict[str, Entry] = {}
         groups: Dict[str, str] = {}
         for p in plan:
             w = weights[p.name]
@@ -119,14 +141,22 @@ class HeteGenEngine:
             self._dev_cols[p.name] = cols
             if cols > 0:
                 # contiguous copy so staging is a single memcpy
-                stage_src[p.name] = np.ascontiguousarray(w[..., :cols])
+                shard = np.ascontiguousarray(w[..., :cols])
+                self._fp_shard_bytes[p.name] = shard.nbytes
+                if wstream == "q8" and shard.ndim == 2:
+                    # one-time load cost: the shard streams as int8
+                    # payload + fp32 per-column scales from here on
+                    stage_src[p.name] = quantize_weights_np(shard)
+                else:
+                    stage_src[p.name] = shard
                 groups[p.name] = p.group
             if cols < w.shape[-1]:
                 self._host_part[p.name] = np.ascontiguousarray(w[..., cols:])
 
         self.manager = (AsyncParamManager(stage_src, groups,
                                           tracer=tracer,
-                                          trace_phase=trace_phase)
+                                          trace_phase=trace_phase,
+                                          fp_bytes=self._fp_shard_bytes)
                         if stage_src else None)
         self._next_in_group = plan_prefetch_order(
             [n for n in self.order if n in stage_src], groups)
@@ -137,6 +167,13 @@ class HeteGenEngine:
                                               thread_name_prefix="transfer")
 
         self._matmul = jax.jit(lambda x, w: x @ w)
+
+        def _q8_matmul(x, q, s):
+            # prefill activations are (B, S, K); the kernel wants 2D
+            y = kernel_ops.q8_matmul(x.reshape((-1, x.shape[-1])), q, s)
+            return y.reshape(x.shape[:-1] + (q.shape[-1],))
+
+        self._q8_matmul = jax.jit(_q8_matmul)
         self._t_start = time.perf_counter()
 
     # ------------------------------------------------------------------
@@ -163,18 +200,28 @@ class HeteGenEngine:
                 self.stats.cpu += time.perf_counter() - t0
         return y
 
-    def _transfer(self, buf: np.ndarray, name: str) -> jax.Array:
-        with self.tracer.span(name, track="transfer", bytes=buf.nbytes,
-                              module=name, phase=self.trace_phase):
+    def _transfer(self, buf: Entry, name: str,
+                  seq: Optional[int]) -> Entry:
+        parts = buf if isinstance(buf, tuple) else (buf,)
+        wire = sum(p.nbytes for p in parts)
+        attrs = dict(bytes=wire, module=name, phase=self.trace_phase)
+        if seq is not None:
+            attrs["seq"] = seq
+        fp = self._fp_shard_bytes.get(name)
+        if fp is not None:
+            attrs["fp_bytes"] = fp
+        with self.tracer.span(name, track="transfer", **attrs):
             t0 = time.perf_counter()
-            arr = jax.device_put(buf, self.device)
-            # lint: allow[hot-path-sync] transfer-stream timing: the sync is
-            # the measurement (trans busy-seconds feed the alpha law), and it
-            # runs on the dedicated transfer thread, not the dispatch thread
-            arr.block_until_ready()
+            arrs = tuple(jax.device_put(p, self.device) for p in parts)
+            for a in arrs:
+                # lint: allow[hot-path-sync] transfer-stream timing: the sync
+                # is the measurement (trans busy-seconds feed the alpha law),
+                # and it runs on the dedicated transfer thread, not the
+                # dispatch thread
+                a.block_until_ready()
             with self._lock:
                 self.stats.trans += time.perf_counter() - t0
-        return arr
+        return arrs if isinstance(buf, tuple) else arrs[0]
 
     # ------------------------------------------------------------------
     def linear(self, x: jax.Array, name: str) -> jax.Array:
@@ -218,12 +265,16 @@ class HeteGenEngine:
             y_dev = None
             if cols > 0:
                 buf = self.manager.acquire(name)
-                w_fut = self._trans_pool.submit(self._transfer, buf, name)
+                seq = self.manager.seq_of(name)
+                w_fut = self._trans_pool.submit(self._transfer, buf, name,
+                                                seq)
                 w_dev = w_fut.result()
                 with self.tracer.span(name, track="device", module=name,
-                                      phase=self.trace_phase):
+                                      phase=self.trace_phase, seq=seq):
                     t0 = time.perf_counter()
-                    y_dev = self._matmul(x, w_dev)
+                    y_dev = (self._q8_matmul(x, *w_dev)
+                             if isinstance(w_dev, tuple)
+                             else self._matmul(x, w_dev))
                     # lint: allow[hot-path-sync] ring-slot release ordering:
                     # jax's CPU backend zero-copies device_put, so the read
                     # must finish before the slot is re-staged (see above)

@@ -17,6 +17,16 @@ On a TPU host "pinning" is the staging memcpy into the DMA ring
 (DESIGN.md §2); here it is a real ``np.copyto`` into a preallocated buffer,
 executed by a dedicated pin thread, so overlap and ordering are real even
 though the container is CPU-only.
+
+A module's entry may be a single array or a **tuple of arrays** (the
+quantized wire format streams an int8 payload plus its fp32 per-column
+scales): tuple parts are packed sequentially into one slot and come back
+as typed views, so rings are sized to the *wire* bytes actually staged —
+compressed formats shrink the pinned footprint for free.  Pin spans carry
+those wire bytes (plus ``fp_bytes``, the uncompressed equivalent, when
+the owner supplies it) and a per-module ``seq`` counter that the engine
+re-stamps on the matching transfer/device spans, so the trace shows which
+pin fed which transfer (docs/OBSERVABILITY.md).
 """
 
 from __future__ import annotations
@@ -25,11 +35,33 @@ import dataclasses
 import threading
 import time
 from concurrent.futures import Future, ThreadPoolExecutor
-from typing import Dict, List, Optional, Sequence
+from typing import Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
 from repro.telemetry.tracer import NULL_TRACER, Tracer
+
+# one staged entry: a host array, or parts packed into one slot
+Entry = Union[np.ndarray, Tuple[np.ndarray, ...]]
+
+_ALIGN = 64      # part offsets inside a slot (keeps typed views aligned)
+
+
+def entry_parts(entry: Entry) -> Tuple[np.ndarray, ...]:
+    return tuple(entry) if isinstance(entry, (tuple, list)) else (entry,)
+
+
+def entry_wire_bytes(entry: Entry) -> int:
+    """Bytes this entry moves over pin/DMA — the sum of its parts."""
+    return sum(p.nbytes for p in entry_parts(entry))
+
+
+def entry_slot_bytes(entry: Entry) -> int:
+    """Staging bytes the entry occupies (parts padded to alignment)."""
+    off = 0
+    for p in entry_parts(entry):
+        off = -(-off // _ALIGN) * _ALIGN + p.nbytes
+    return off
 
 
 @dataclasses.dataclass
@@ -38,6 +70,7 @@ class PinSlot:
     name: Optional[str] = None            # module currently staged
     ready: Optional[Future] = None        # resolves when staging completes
     in_use: bool = False                  # acquired and not yet released
+    seq: int = -1                         # per-module pin sequence number
 
 
 class GroupRing:
@@ -76,22 +109,29 @@ class AsyncParamManager:
             mgr.release(module)
     """
 
-    def __init__(self, weights: Dict[str, np.ndarray],
+    def __init__(self, weights: Dict[str, Entry],
                  groups: Dict[str, str], *,
                  tracer: Tracer = NULL_TRACER,
-                 trace_phase: Optional[str] = None):
-        """``weights``: host arrays per module; ``groups``: module -> group."""
+                 trace_phase: Optional[str] = None,
+                 fp_bytes: Optional[Dict[str, int]] = None):
+        """``weights``: host arrays (or part tuples) per module;
+        ``groups``: module -> group.  ``fp_bytes`` optionally maps a
+        module to the uncompressed byte count its entry represents —
+        stamped on pin spans so trace consumers can relate wire traffic
+        back to compute bytes."""
         self.weights = weights
         self.groups = groups
         self.tracer = tracer
         self.trace_phase = trace_phase
+        self.fp_bytes = fp_bytes or {}
         by_group: Dict[str, List[str]] = {}
         for name, g in groups.items():
             by_group.setdefault(g, []).append(name)
         self.rings: Dict[str, GroupRing] = {}
         for g, names in by_group.items():
-            slot_bytes = max(weights[n].nbytes for n in names)
+            slot_bytes = max(entry_slot_bytes(weights[n]) for n in names)
             self.rings[g] = GroupRing(g, slot_bytes)
+        self._seq: Dict[str, int] = {}    # per-module pin counter
         self._pinner = ThreadPoolExecutor(max_workers=1,
                                           thread_name_prefix="pin")
         self.events: List[tuple] = []     # (op, module, t) for tests/metrics
@@ -106,19 +146,48 @@ class AsyncParamManager:
         with self._events_lock:
             self.events.append((op, name, time.perf_counter()))
 
-    def _do_pin(self, slot: PinSlot, name: str) -> np.ndarray:
+    def _do_pin(self, slot: PinSlot, name: str, seq: int) -> Entry:
         src = self.weights[name]
-        with self.tracer.span(name, track="pin", bytes=src.nbytes,
-                              module=name, phase=self.trace_phase):
+        parts = entry_parts(src)
+        attrs = dict(bytes=entry_wire_bytes(src), module=name,
+                     phase=self.trace_phase, seq=seq)
+        fp = self.fp_bytes.get(name)
+        if fp is not None:
+            attrs["fp_bytes"] = int(fp)
+        with self.tracer.span(name, track="pin", **attrs):
             t0 = time.perf_counter()
-            flat = src.reshape(-1).view(np.uint8)
-            dst = slot.buffer[: flat.nbytes]
-            np.copyto(dst, flat)
+            views: List[np.ndarray] = []
+            off = 0
+            for p in parts:
+                off = -(-off // _ALIGN) * _ALIGN
+                flat = p.reshape(-1).view(np.uint8)
+                dst = slot.buffer[off: off + flat.nbytes]
+                np.copyto(dst, flat)
+                views.append(dst.view(p.dtype).reshape(p.shape))
+                off += flat.nbytes
             dt = time.perf_counter() - t0
             with self._pin_lock:
                 self._pin_seconds += dt
         self._log("pinned", name)
-        return dst.view(src.dtype).reshape(src.shape)
+        return tuple(views) if isinstance(src, (tuple, list)) else views[0]
+
+    def _submit_pin(self, slot: PinSlot, name: str) -> None:
+        """Assign the next per-module seq and start the staging copy.
+        Caller must hold the ring lock."""
+        seq = self._seq.get(name, -1) + 1
+        self._seq[name] = seq
+        slot.name = name
+        slot.seq = seq
+        slot.ready = self._pinner.submit(self._do_pin, slot, name, seq)
+
+    def seq_of(self, name: str) -> Optional[int]:
+        """Pin sequence number of the currently staged copy of ``name``
+        (None when nothing is staged) — the link attribute the engine
+        stamps on the transfer/device spans this pin feeds."""
+        ring = self.rings[self.groups[name]]
+        with ring.lock:
+            slot = ring.slot_for(name)
+            return None if slot is None else slot.seq
 
     @property
     def pin_seconds(self) -> float:
@@ -144,12 +213,11 @@ class AsyncParamManager:
             slot = ring.free_slot()
             if slot is None:
                 return False          # ring full: caller retries after release
-            slot.name = name
-            slot.ready = self._pinner.submit(self._do_pin, slot, name)
+            self._submit_pin(slot, name)
             self._log("pin_start", name)
             return True
 
-    def acquire(self, name: str) -> np.ndarray:
+    def acquire(self, name: str) -> Entry:
         """Return the staged weights for ``name``.
 
         Pins synchronously if the prefetch never happened (the non-async
@@ -181,8 +249,7 @@ class AsyncParamManager:
                     if slot.ready is not None:
                         slot.ready.result()   # drain in-flight pin first
                         self._log("evicted", slot.name or "?")
-                slot.name = name
-                slot.ready = self._pinner.submit(self._do_pin, slot, name)
+                self._submit_pin(slot, name)
                 self._log("pin_start_sync", name)
             slot.in_use = True
         arr = slot.ready.result()

@@ -31,10 +31,21 @@ class LinearSpec:
     group: str                  # "attn" | "mlp" | ... (pin-ring size group)
     dtype_bytes: int = 4
     calls: int = 1              # invocations per decode step (shared blocks)
+    wire: str = "fp"            # streamed format: "fp" | "q8" (int8+scales)
 
     @property
     def nbytes(self) -> int:
+        """Compute bytes: what the host GEMM and device matmul touch."""
         return self.n_in * self.n_out * self.dtype_bytes
+
+    @property
+    def wire_bytes(self) -> int:
+        """Bytes that actually cross pin/DMA per full stream of the module.
+        Distinct from :attr:`nbytes` when the wire format compresses —
+        q8 moves an int8 payload plus one fp32 scale per output column."""
+        if self.wire == "q8":
+            return self.n_in * self.n_out + 4 * self.n_out
+        return self.nbytes
 
 
 @dataclasses.dataclass
@@ -48,6 +59,7 @@ class PolicyResult:
     phase: str = "decode"              # "prefill" | "decode" (paper §4.1)
     tokens_per_seq: int = 1            # step tokens per sequence (prompt
     #                                    length for prefill, 1 for decode)
+    wstream: str = "fp"                # wire format the plan was priced for
 
     @property
     def intensity(self) -> int:
@@ -86,19 +98,25 @@ def build_policy(
     v_com = hw.v_com()
     v_pin = hw.v_pin()
 
-    # == alpha_lib.alpha_for_batch(hw, batch), on the speeds computed above
-    a0 = alpha_lib.alpha_analytic(v_cpu, v_gpu, v_com)
+    # == alpha_lib.alpha_for_batch(hw, batch), on the speeds computed above,
+    # with the link derated/boosted by the wire format: compressed streaming
+    # moves wire_bytes per nbytes of compute, so the link looks 1/r faster
+    # (docs/ANALYSIS.md) and the equilibrium shifts toward the device.
+    probe = max(linears, key=lambda s: s.nbytes)
+    wire_ratio = probe.wire_bytes / probe.nbytes
+    a0 = alpha_lib.alpha_analytic(
+        v_cpu, v_gpu, alpha_lib.effective_link_speed(v_com, wire_ratio))
     a = a0
     if use_alpha_benchmark:
         from repro.core.alpha_benchmark import refine_alpha
 
-        probe = max(linears, key=lambda s: s.nbytes)
-
         def t_cpu_fn(x: float) -> float:
+            # host share computes fp weights — compute bytes, not wire
             return (1.0 - x) * probe.nbytes / v_cpu
 
         def t_com_fn(x: float) -> float:
-            dev = x * probe.nbytes
+            # pin and DMA both move the wire format
+            dev = x * probe.wire_bytes
             return max(dev / v_pin, dev / v_com)
 
         a = refine_alpha(t_cpu_fn, t_com_fn, a0).alpha
@@ -110,8 +128,10 @@ def build_policy(
         infos = [ModuleInfo(name=s.name, mem_bytes=s.nbytes,
                             t_cpu=(1.0 - a) * s.nbytes / v_cpu,
                             calls=s.calls) for s in linears]
-        ring = 2 * max((alpha_lib.quantize_alpha(a, s.n_out, tile) * s.nbytes
-                        for s in linears), default=0.0)
+        # pin rings hold the wire format, so a compressed stream frees
+        # budget for residency promotion
+        ring = 2 * max((alpha_lib.quantize_alpha(a, s.n_out, tile)
+                        * s.wire_bytes for s in linears), default=0.0)
         sched = schedule(infos, max(0.0, (budget_bytes or 0.0) - ring))
         for name in sched.resident:
             plan_map[name] = "resident"
@@ -129,10 +149,13 @@ def build_policy(
             aq = alpha_lib.quantize_alpha(a, s.n_out, tile)
             plan.append(ModulePlan(s.name, s.group, "hetegen", aq))
             t_cpu = (1.0 - aq) * s.nbytes / v_cpu
-            t_com = max(aq * s.nbytes / v_com, aq * s.nbytes / v_pin)
+            t_com = max(aq * s.wire_bytes / v_com,
+                        aq * s.wire_bytes / v_pin)
             t_pred += s.calls * max(t_cpu, t_com)
+    wstreams = {s.wire for s in linears}
     return PolicyResult(plan=plan, alpha=a, schedule=sched,
                         predicted_step_time=t_pred,
                         resident_bytes=resident_bytes,
                         batch=batch, phase=phase,
-                        tokens_per_seq=tokens_per_seq)
+                        tokens_per_seq=tokens_per_seq,
+                        wstream=("q8" if wstreams == {"q8"} else "fp"))

@@ -64,6 +64,12 @@ class SimModule:
     flops: float              # FLOPs for this module at the sim batch size
     cache_bytes: int = 0      # KV-cache bytes touched (attn_core only)
     calls: int = 1            # invocations per step (e.g. shared blocks)
+    wire_bytes: Optional[int] = None   # streamed-format bytes; None => fp
+
+    @property
+    def link_bytes(self) -> int:
+        """Bytes the full module would move across pin/DMA (wire format)."""
+        return self.nbytes if self.wire_bytes is None else self.wire_bytes
 
 
 @dataclasses.dataclass
@@ -113,9 +119,14 @@ class _Clock:
 
 
 def _device_time(m: SimModule, hw: HardwareSpec, frac: float,
-                 batch: int) -> float:
-    """Device time for ``frac`` of module ``m`` (roofline of HBM vs MXU)."""
-    t_mem = frac * (m.nbytes + m.cache_bytes) / hw.accel_mem_bw
+                 batch: int, mem_bytes: Optional[int] = None) -> float:
+    """Device time for ``frac`` of module ``m`` (roofline of HBM vs MXU).
+
+    ``mem_bytes`` overrides the weight bytes the memory term reads — a
+    streamed q8 share holds (and re-reads) only the wire-format payload.
+    """
+    wb = m.nbytes if mem_bytes is None else mem_bytes
+    t_mem = frac * (wb + m.cache_bytes) / hw.accel_mem_bw
     t_flops = frac * m.flops / hw.accel_flops
     return max(t_mem, t_flops)
 
@@ -185,7 +196,9 @@ def simulate_step(
             # --- streamed / heterogeneous linear ---
             a = 1.0 if pl.mode == "stream" else pl.alpha
             a = alpha_lib.quantize_alpha(a, m.n_out)
-            dev_bytes = a * m.nbytes
+            # bytes that cross pin/DMA: the wire format (compressed when
+            # wire_bytes < nbytes); host compute still sees fp bytes
+            dev_bytes = a * m.link_bytes
             peak_stream_bytes = max(peak_stream_bytes, dev_bytes)
 
             # pin stage
@@ -249,7 +262,8 @@ def simulate_step(
             # device share
             dev_end = ready
             if a > 0.0:
-                t_dev = _device_time(m, hw, a, batch)
+                t_dev = _device_time(m, hw, a, batch,
+                                     mem_bytes=m.link_bytes)
                 dev_end = clock.run("dev", max(ready, trans_done[i]), t_dev,
                                     m.name + "/dev")
 
@@ -327,7 +341,14 @@ def make_placements(
     v_com = hw.v_com()
     if not use_alpha_benchmark:
         v_cpu = v_cpu * (1.0 + alpha_bias)  # misestimated prior
-    a = alpha_lib.alpha_analytic(v_cpu, v_gpu, v_com)
+    linears = [m for m in modules if m.kind == "linear"]
+    wire_ratio = 1.0
+    if linears:
+        big = max(linears, key=lambda m: m.nbytes)
+        if big.nbytes > 0:
+            wire_ratio = big.link_bytes / big.nbytes
+    a = alpha_lib.alpha_analytic(
+        v_cpu, v_gpu, alpha_lib.effective_link_speed(v_com, wire_ratio))
 
     if use_alpha_benchmark:
         # refine against end-to-end simulated step time (the paper probes
@@ -357,7 +378,8 @@ def make_placements(
                             t_cpu=_host_time(m, hw, 1.0), calls=m.calls)
                  for m in modules if m.kind == "linear"]
         # budget available for promotions = budget minus streaming buffers
-        stream_buf = 2 * max((a * m.nbytes for m in modules
+        # (sized to the wire format actually staged)
+        stream_buf = 2 * max((a * m.link_bytes for m in modules
                               if m.kind == "linear"), default=0)
         plan = schedule(infos, max(0.0, gpu_mem_budget - stream_buf))
         for name in plan.resident:

@@ -1,11 +1,18 @@
 """Int8-weight matmul with per-column scales — quantized weight streaming.
 
-Beyond-paper optimization (EXPERIMENTS.md §Perf): HeteGen is link-bound, so
-streaming weights as int8 + fp32 per-column scales halves the PCIe bytes
-(2-byte bf16 -> 1-byte int8 + 4/N scale), shifting the alpha equilibrium
-toward the device: alpha* ~= T'cpu / (T'cpu + T'com/2).  The device then
-needs an int8 x activation kernel that dequantizes *inside* the matmul —
-this kernel — so no fp copy of the weight ever exists in HBM.
+HeteGen is link-bound, so streaming weights as int8 + fp32 per-column
+scales cuts the PCIe/DMA bytes (2-byte bf16 -> 1-byte int8 + 4/N scale;
+4-byte fp32 -> ~1/4), shifting the alpha equilibrium toward the device:
+alpha* ~= T'cpu / (T'cpu + r * T'com) with r the wire ratio
+(docs/ANALYSIS.md).  This is the live serving path, not an experiment:
+:class:`repro.core.engine.HeteGenEngine` built with ``wstream="q8"``
+quantizes each offloaded column shard once at load
+(:func:`quantize_weights`), stages the ``(q, scale)`` pair through
+:class:`repro.core.param_manager.AsyncParamManager`'s pinned rings (sized
+to the *compressed* bytes), DMAs the pair, and computes the device share
+with this kernel — the dequant happens inside the matmul, so no fp copy
+of a streamed weight ever exists in HBM.  The policy layer prices the
+compressed link through :attr:`repro.core.policy.LinearSpec.wire_bytes`.
 
 Accumulates x_block @ q_block in fp32 and applies the per-column scale on
 the final K step.  (Per-column — not per-tile — scales keep the epilogue a
@@ -15,10 +22,11 @@ single multiply.)
 from __future__ import annotations
 
 import functools
-from typing import Optional, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
@@ -29,6 +37,20 @@ def quantize_weights(w: jax.Array) -> Tuple[jax.Array, jax.Array]:
     q = jnp.clip(jnp.round(w.astype(jnp.float32) / scale), -127, 127
                  ).astype(jnp.int8)
     return q, scale.astype(jnp.float32)
+
+
+def quantize_weights_np(w: np.ndarray) -> Tuple[np.ndarray, np.ndarray]:
+    """Host-side mirror of :func:`quantize_weights` (same wire format).
+
+    The offload engine quantizes shards at load time on the host; this
+    numpy twin avoids a device round-trip there.  Bit-identical to the
+    jax version (tests/test_wstream.py pins them equal).
+    """
+    w32 = np.asarray(w, dtype=np.float32)
+    scale = np.max(np.abs(w32), axis=0) / np.float32(127.0) \
+        + np.float32(1e-12)
+    q = np.clip(np.round(w32 / scale), -127, 127).astype(np.int8)
+    return q, scale.astype(np.float32)
 
 
 def _q8_kernel(x_ref, q_ref, s_ref, o_ref, acc_ref, *, n_k):

@@ -91,6 +91,12 @@ def main() -> None:
                     help="stream the first request token by token")
     ap.add_argument("--hw", default="a10", help="hardware model for the "
                     "alpha law (a10 | v5e)")
+    ap.add_argument("--wstream", choices=("fp", "q8"), default="fp",
+                    help="wire format of streamed weights in the offload "
+                    "modes: fp streams shards as-is, q8 streams int8 + "
+                    "per-column fp32 scales (~4x fewer link bytes; the "
+                    "plan's alpha shifts toward the device, "
+                    "docs/SERVING.md)")
     ap.add_argument("--trace", metavar="OUT.json", default=None,
                     help="record zero-sync spans across the run and dump "
                     "a Chrome/Perfetto trace JSON (docs/OBSERVABILITY.md)")
@@ -152,7 +158,12 @@ def main() -> None:
         total = sum(s.nbytes for s in enumerate_linears(cfg))
         backend = HeteGenBackend(cfg, params, hw=HARDWARE[args.hw],
                                  batch=slots,
-                                 budget_bytes=args.budget_frac * total)
+                                 budget_bytes=args.budget_frac * total,
+                                 wstream=args.wstream)
+        if args.wstream == "q8":
+            pol = backend.policy
+            print(f"  wstream=q8: int8+scale wire format, "
+                  f"decode alpha={pol.alpha:.3f}")
 
     spec = None
     if args.spec is not None:

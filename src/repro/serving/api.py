@@ -143,9 +143,30 @@ class LLM:
                  tokenizer: Optional[Tokenizer] = None,
                  seed: int = 0,
                  selfcheck: bool = False,
-                 trace: Union[bool, Tracer] = False):
+                 trace: Union[bool, Tracer] = False,
+                 wstream: Optional[str] = None):
         if backend is None and params is None:
             raise ValueError("LLM needs params or a backend")
+        # ``wstream`` is a property of the offload backend (the resident
+        # paths never stream weights): accept it here only as a cross-check
+        # against the backend actually passed in, so a caller asking for
+        # q8 streaming cannot silently get an fp (or resident) run.
+        if wstream not in (None, "fp", "q8"):
+            raise ValueError(f"unknown wire format {wstream!r} "
+                             "(expected 'fp' or 'q8')")
+        if wstream is not None:
+            be_ws = getattr(backend, "wstream", None)
+            if be_ws is None:
+                if wstream != "fp":
+                    raise ValueError(
+                        "wstream='q8' needs a streaming backend "
+                        "(HeteGenBackend(wstream='q8')); this backend does "
+                        "not stream weights")
+            elif be_ws != wstream:
+                raise ValueError(
+                    f"wstream={wstream!r} conflicts with the backend's "
+                    f"wire format {be_ws!r}")
+        self.wstream = wstream
         self.cfg = cfg
         self._params = params
         self._backend = backend
@@ -538,6 +559,8 @@ class LLM:
         stream busy-time — whatever the active backend exposes."""
         st: Dict = {"executor": self.last_executor, **self.last_metrics}
         be = self.backend
+        if be is not None and hasattr(be, "wstream"):
+            st["wstream"] = be.wstream
         if be is not None and hasattr(be, "policies"):
             st["phase_alpha"] = {ph: p.alpha
                                  for ph, p in be.policies.items()}

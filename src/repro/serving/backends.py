@@ -91,26 +91,36 @@ class LinearBackend(Protocol):
     def close(self) -> None: ...
 
 
-def enumerate_linears(cfg: ModelConfig) -> List[LinearSpec]:
-    """The model's offloadable linears with size groups (paper §4.3)."""
+def enumerate_linears(cfg: ModelConfig,
+                      wstream: str = "fp") -> List[LinearSpec]:
+    """The model's offloadable linears with size groups (paper §4.3).
+
+    ``wstream`` stamps the streamed wire format on every spec so the
+    policy layer prices the link in wire bytes (``LinearSpec.wire_bytes``)
+    while compute stays in fp bytes."""
     by = cfg.dtype_bytes()
     hd, hq, hkv = cfg.hd, cfg.n_heads, cfg.n_kv_heads
     d, f = cfg.d_model, cfg.d_ff
+    ws = wstream
+
+    def spec(name, n_in, n_out, group):
+        return LinearSpec(name, n_in, n_out, group, by, wire=ws)
+
     out = []
     for l in range(cfg.n_layers):
         out += [
-            LinearSpec(f"blk{l}.wq", d, hq * hd, "attn", by),
-            LinearSpec(f"blk{l}.wk", d, hkv * hd, "attn_kv", by),
-            LinearSpec(f"blk{l}.wv", d, hkv * hd, "attn_kv", by),
-            LinearSpec(f"blk{l}.wo", hq * hd, d, "attn", by),
+            spec(f"blk{l}.wq", d, hq * hd, "attn"),
+            spec(f"blk{l}.wk", d, hkv * hd, "attn_kv"),
+            spec(f"blk{l}.wv", d, hkv * hd, "attn_kv"),
+            spec(f"blk{l}.wo", hq * hd, d, "attn"),
         ]
         if cfg.mlp_kind.startswith("gated"):
-            out += [LinearSpec(f"blk{l}.w_gate", d, f, "mlp", by),
-                    LinearSpec(f"blk{l}.w_up", d, f, "mlp", by),
-                    LinearSpec(f"blk{l}.w_down", f, d, "mlp_down", by)]
+            out += [spec(f"blk{l}.w_gate", d, f, "mlp"),
+                    spec(f"blk{l}.w_up", d, f, "mlp"),
+                    spec(f"blk{l}.w_down", f, d, "mlp_down")]
         else:
-            out += [LinearSpec(f"blk{l}.w_in", d, f, "mlp", by),
-                    LinearSpec(f"blk{l}.w_down", f, d, "mlp_down", by)]
+            out += [spec(f"blk{l}.w_in", d, f, "mlp"),
+                    spec(f"blk{l}.w_down", f, d, "mlp_down")]
     return out
 
 
@@ -287,14 +297,19 @@ class HeteGenBackend:
                  prefill_retune_factor: float = 2.0,
                  tracer: Tracer = NULL_TRACER,
                  recalibrate: Optional[float] = None,
-                 recalibrate_every: int = 16):
+                 recalibrate_every: int = 16,
+                 wstream: str = "fp"):
+        if wstream not in ("fp", "q8"):
+            raise ValueError(f"unknown wire format {wstream!r} "
+                             "(expected 'fp' or 'q8')")
         self.cfg = cfg
         shared, weights, biases = M.extract_backend_params(cfg, params)
         self.shared = shared
         self._host_weights = {k: _np(v) for k, v in weights.items()}
         self._host_biases = {k: _np(v) for k, v in biases.items()}
         self._ops = M.make_backend_ops(cfg)   # jitted norms/attention/head
-        self.linears = enumerate_linears(cfg)
+        self.wstream = wstream
+        self.linears = enumerate_linears(cfg, wstream=wstream)
         self.hw = hw
         self.budget_bytes = budget_bytes
         self.use_alpha_benchmark = use_alpha_benchmark
@@ -375,7 +390,8 @@ class HeteGenBackend:
         eng = HeteGenEngine(self._host_weights, pol.plan,
                             biases=self._host_biases,
                             resident_store=self._resident_store,
-                            tracer=self.tracer, trace_phase=phase)
+                            tracer=self.tracer, trace_phase=phase,
+                            wstream=self.wstream)
         eng.warm_prefetch()
         self.engines[phase] = eng
         if phase == "decode":
@@ -453,30 +469,40 @@ class HeteGenBackend:
         eng = HeteGenEngine(self._host_weights, pol.plan,
                             biases=self._host_biases,
                             resident_store=self._resident_store,
-                            tracer=self.tracer, trace_phase=phase)
+                            tracer=self.tracer, trace_phase=phase,
+                            wstream=self.wstream)
         eng.warm_prefetch()
         self.engines[phase] = eng
 
     def _maybe_recalibrate(self) -> None:
         """Periodic trace-driven re-tune, called at the top of a decode
-        step — the engines are idle there, so swapping the decode
+        or verify step — the engines are idle there, so swapping a phase
         partition is safe.  Opt-in (``recalibrate=``), with the drift
-        threshold acting as hysteresis: the plan is only rebuilt when
-        |refined - current| exceeds it."""
+        threshold acting as hysteresis: a plan is only rebuilt when
+        |refined - current| exceeds it.  Every phase that has recorded
+        measurable spans since the last mark recalibrates from *its own*
+        spans (phase-tagged), so a drifting verify plan re-tunes even
+        though decode traffic dominates the trace."""
         if self.recalibrate is None or not self.tracer:
             return
         self._recal_steps += 1
         if self._recal_steps % self.recalibrate_every:
             return
-        fit = self.recalibrate_from_trace("decode")
         mark = self.tracer.mark()
-        if fit is None:
-            return
-        self._recal_mark = mark
-        cur = self.policies["decode"].alpha
-        if abs(fit.alpha - cur) > self.recalibrate:
-            self._apply_alpha("decode", fit.alpha)
-            self.recalibrations += 1
+        fitted = False
+        for phase in ("decode", "verify"):
+            if phase not in self.policies:
+                continue
+            fit = self.recalibrate_from_trace(phase)
+            if fit is None:
+                continue
+            fitted = True
+            cur = self.policies[phase].alpha
+            if abs(fit.alpha - cur) > self.recalibrate:
+                self._apply_alpha(phase, fit.alpha)
+                self.recalibrations += 1
+        if fitted:
+            self._recal_mark = mark
 
     # -- LinearBackend surface -----------------------------------------
     def linear(self, x: jax.Array, name: str) -> jax.Array:
@@ -519,6 +545,7 @@ class HeteGenBackend:
         intensity batch x (k + 1), the prefill-like regime where alpha
         pushes toward the accelerator even though the step advances the
         decode frontier."""
+        self._maybe_recalibrate()
         if self.phase_plans:
             b, s = batch["tokens"].shape
             self._ensure_verify_plan(b, s)

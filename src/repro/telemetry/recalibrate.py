@@ -17,7 +17,11 @@ those speeds:
 
 The crossing F_cpu(ā) = F_com(ā) is scale-invariant in B, so the
 refined alpha depends only on measured speed ratios; B (bytes per step)
-just sets ``predicted_time``'s units.  The same ``refine_alpha``
+just sets ``predicted_time``'s units.  Under a compressed wire format
+(``wstream="q8"``) pin/transfer spans carry wire bytes plus an
+``fp_bytes`` attr; v_pin/v_com come out in wire bytes/s and the link
+term is scaled by the measured wire ratio r = Σwire/Σfp, i.e.
+T_com(a) = a·B·r / v, matching the shifted law in docs/ANALYSIS.md.  The same ``refine_alpha``
 machinery (probe window, polynomial fit, root solve, hysteresis at the
 caller) applies unchanged — tests check the fit matches a direct
 ``refine_alpha`` call on the synthesized callables to tight tolerance.
@@ -44,7 +48,15 @@ _TRANS_TRACK = "transfer"
 
 @dataclasses.dataclass(frozen=True)
 class SpeedEstimate:
-    """Effective stream speeds (bytes/s) measured from a trace."""
+    """Effective stream speeds (bytes/s) measured from a trace.
+
+    ``v_pin``/``v_com`` are *wire* bytes/s — under a compressed stream
+    (``wstream="q8"``) the pin/transfer spans carry the bytes that
+    actually moved.  ``pin_fp_bytes``/``trans_fp_bytes`` accumulate the
+    spans' ``fp_bytes`` attr (uncompressed equivalent; defaults to the
+    wire bytes on fp traces), so :attr:`wire_ratio` recovers the
+    compression factor r the alpha law needs.
+    """
 
     v_cpu: float
     v_pin: float
@@ -56,14 +68,29 @@ class SpeedEstimate:
     pin_s: float
     trans_s: float
     n_spans: int
+    pin_fp_bytes: int = 0
+    trans_fp_bytes: int = 0
+
+    @property
+    def wire_ratio(self) -> float:
+        """Wire bytes per compute byte on the transfer stream (r <= 1
+        under compression, exactly 1.0 on fp traces)."""
+        if self.trans_fp_bytes <= 0:
+            return 1.0
+        return self.trans_bytes / self.trans_fp_bytes
 
     def as_dict(self) -> Dict[str, float]:
-        return dataclasses.asdict(self)
+        d = dataclasses.asdict(self)
+        d["wire_ratio"] = self.wire_ratio
+        return d
 
 
 def _tally(spans: Sequence[Span], track: str,
            phase: Optional[str]) -> tuple:
-    nbytes, secs, n = 0, 0.0, 0
+    """(wire_bytes, fp_bytes, secs, n) for byte-carrying spans of a track.
+    ``fp_bytes`` falls back to the wire bytes when a span has no
+    ``fp_bytes`` attr (fp streams: wire == compute)."""
+    nbytes, fp_bytes, secs, n = 0, 0, 0.0, 0
     for s in spans:
         if s.track != track:
             continue
@@ -74,9 +101,10 @@ def _tally(spans: Sequence[Span], track: str,
         if not b or s.dur <= 0.0:
             continue
         nbytes += int(b)
+        fp_bytes += int(attrs.get("fp_bytes", b))
         secs += s.dur
         n += 1
-    return nbytes, secs, n
+    return nbytes, fp_bytes, secs, n
 
 
 def measured_speeds(spans: Sequence[Span], *,
@@ -89,9 +117,9 @@ def measured_speeds(spans: Sequence[Span], *,
     when a stream has no measurable spans — an all-device or all-host
     plan cannot calibrate the streams it never exercised.
     """
-    cpu_b, cpu_s, n_cpu = _tally(spans, _CPU_TRACK, phase)
-    pin_b, pin_s, n_pin = _tally(spans, _PIN_TRACK, phase)
-    trn_b, trn_s, n_trn = _tally(spans, _TRANS_TRACK, phase)
+    cpu_b, _, cpu_s, n_cpu = _tally(spans, _CPU_TRACK, phase)
+    pin_b, pin_fp, pin_s, n_pin = _tally(spans, _PIN_TRACK, phase)
+    trn_b, trn_fp, trn_s, n_trn = _tally(spans, _TRANS_TRACK, phase)
     missing = [name for name, n in
                [(_CPU_TRACK, n_cpu), (_PIN_TRACK, n_pin),
                 (_TRANS_TRACK, n_trn)] if n == 0]
@@ -103,7 +131,8 @@ def measured_speeds(spans: Sequence[Span], *,
         v_cpu=cpu_b / cpu_s, v_pin=pin_b / pin_s, v_com=trn_b / trn_s,
         cpu_bytes=cpu_b, pin_bytes=pin_b, trans_bytes=trn_b,
         cpu_s=cpu_s, pin_s=pin_s, trans_s=trn_s,
-        n_spans=n_cpu + n_pin + n_trn)
+        n_spans=n_cpu + n_pin + n_trn,
+        pin_fp_bytes=pin_fp, trans_fp_bytes=trn_fp)
 
 
 def recalibrate_alpha(
@@ -126,15 +155,20 @@ def recalibrate_alpha(
     scale-invariant either way).
     """
     est = measured_speeds(spans, phase=phase)
+    # B counts *compute* bytes (the alpha split partitions the fp weight);
+    # the link only carries r·B wire bytes of it.  On fp traces r == 1 and
+    # fp tallies equal wire tallies, so this reduces to the original form.
     B = float(bytes_per_step) if bytes_per_step is not None else float(
-        est.cpu_bytes + max(est.pin_bytes, est.trans_bytes))
+        est.cpu_bytes + max(est.pin_fp_bytes, est.trans_fp_bytes))
     B = max(B, 1.0)
+    r = est.wire_ratio
 
     def time_cpu(a: float) -> float:
         return (1.0 - a) * B / est.v_cpu
 
     def time_com(a: float) -> float:
-        return max(a * B / est.v_pin, a * B / est.v_com)
+        wire = a * B * r
+        return max(wire / est.v_pin, wire / est.v_com)
 
     return refine_alpha(time_cpu, time_com, alpha0,
                         gamma=gamma, lam=lam, degree=degree)

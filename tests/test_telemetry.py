@@ -423,6 +423,46 @@ def test_engine_emits_stream_spans(rng):
     assert 0.0 <= fit.alpha <= 1.0
 
 
+def test_stream_span_links(rng):
+    """pin -> transfer -> device spans of one module/step share a seq
+    attr, so the trace shows which pin fed which transfer."""
+    import jax.numpy as jnp
+
+    from repro.core import HeteGenEngine, ModulePlan
+
+    names = [f"m{i}" for i in range(3)]
+    W = {n: rng.standard_normal((96, 256)).astype(np.float32)
+         for n in names}
+    plan = [ModulePlan(n, "g", "hetegen", 0.5) for n in names]
+    tr = Tracer()
+    eng = HeteGenEngine(W, plan, tracer=tr, trace_phase="decode")
+    eng.warm_prefetch()
+    x = jnp.asarray(rng.standard_normal((2, 96)).astype(np.float32))
+    n_steps = 3
+    for _ in range(n_steps):
+        for n in names:
+            eng.linear(x, n)
+    eng.close()
+
+    spans = tr.spans()
+    for n in names:
+        linked = {}
+        for track in ("pin", "transfer", "device"):
+            seqs = [(s.attrs or {}).get("seq") for s in spans
+                    if s.track == track
+                    and (s.attrs or {}).get("module", s.name) == n]
+            assert all(q is not None for q in seqs), (n, track)
+            linked[track] = seqs
+        # every step's transfer/device span names the pin that fed it:
+        # the same seq appears once per stream, in the same order
+        assert linked["transfer"] == linked["device"]
+        assert linked["transfer"] == list(range(n_steps))
+        # pins are distinct and cover every transfer (the tail may hold
+        # one extra: the wrap-around prefetch of a step that never ran)
+        assert len(set(linked["pin"])) == len(linked["pin"])
+        assert set(linked["transfer"]) <= set(linked["pin"])
+
+
 def test_traced_batcher_token_identical(rng):
     """Tracing must be observation only: same tokens with and without."""
     import jax

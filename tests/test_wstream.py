@@ -1,0 +1,274 @@
+"""Quantized weight streaming (int8 wire format) end to end.
+
+The q8 wire format streams each offloaded column shard as an int8
+payload plus fp32 per-output-column scales: pin rings shrink to the
+compressed bytes, transfer spans carry wire (not compute) bytes, the
+policy layer prices the link in wire bytes (alpha shifts toward the
+device), and the device share dequantizes inside the matmul
+(docs/ANALYSIS.md, docs/SERVING.md).
+"""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, reduced
+from repro.core import HeteGenEngine, ModulePlan
+from repro.core.alpha import alpha_analytic, effective_link_speed
+from repro.core.hw import PAPER_A10
+from repro.core.param_manager import entry_slot_bytes, entry_wire_bytes
+from repro.core.policy import LinearSpec, build_policy
+from repro.kernels.q8_matmul import quantize_weights, quantize_weights_np
+from repro.models import model as M
+from repro.serving.backends import HeteGenBackend, enumerate_linears
+from repro.telemetry import Tracer, measured_speeds, recalibrate_alpha
+
+
+@pytest.fixture(scope="module")
+def opt_setup():
+    # the smoke reduction shrinks d_model to 64, where one 128-column
+    # tile swallows every module and alpha quantizes to 0/1 — widen the
+    # linears so a 0.5 split is real and the q8 wire format streams
+    cfg = dataclasses.replace(
+        reduced(get_config("opt-125m"), layers=2),
+        name="opt-wstream", d_model=256, n_heads=4, head_dim=64, d_ff=512)
+    params = M.init_params(cfg, jax.random.PRNGKey(1))
+    return cfg, params
+
+
+def _mini_engine(rng, wstream, tracer=None, n=3, shape=(96, 256), a=0.5):
+    names = [f"m{i}" for i in range(n)]
+    W = {nm: rng.standard_normal(shape).astype(np.float32) for nm in names}
+    plan = [ModulePlan(nm, "g", "hetegen", a) for nm in names]
+    kw = dict(tracer=tracer, trace_phase="decode") if tracer else {}
+    return W, names, HeteGenEngine(W, plan, wstream=wstream, **kw)
+
+
+# ---------------------------------------------------------------------------
+# wire format
+# ---------------------------------------------------------------------------
+
+def test_quantize_roundtrip_error_bound(rng):
+    """Symmetric per-column int8: dequant error <= scale/2 per element."""
+    w = rng.standard_normal((64, 256)).astype(np.float32) * 3.0
+    q, scale = quantize_weights_np(w)
+    assert q.dtype == np.int8 and scale.dtype == np.float32
+    assert scale.shape == (256,)
+    err = np.abs(w - q.astype(np.float32) * scale)
+    assert np.all(err <= scale[None, :] * 0.5 + 1e-6)
+    # symmetric max scaling never clips: |q| reaches 127 but not beyond
+    assert np.abs(q).max() == 127
+
+
+def test_np_quantizer_bit_identical_to_jax(rng):
+    """The load-time host quantizer IS the jax wire format."""
+    w = rng.standard_normal((48, 128)).astype(np.float32)
+    qn, sn = quantize_weights_np(w)
+    qj, sj = quantize_weights(jnp.asarray(w))
+    np.testing.assert_array_equal(qn, np.asarray(qj))
+    np.testing.assert_array_equal(sn, np.asarray(sj))
+
+
+def test_linear_spec_wire_bytes():
+    s_fp = LinearSpec("m", 96, 256, "g", 4)
+    s_q8 = LinearSpec("m", 96, 256, "g", 4, wire="q8")
+    assert s_fp.wire_bytes == s_fp.nbytes == 96 * 256 * 4
+    assert s_q8.nbytes == s_fp.nbytes            # compute bytes unchanged
+    assert s_q8.wire_bytes == 96 * 256 + 4 * 256  # int8 payload + scales
+    assert s_q8.wire_bytes < s_q8.nbytes
+
+
+def test_engine_rejects_unknown_wstream(rng):
+    with pytest.raises(ValueError, match="wire format"):
+        _mini_engine(rng, "int4")
+
+
+# ---------------------------------------------------------------------------
+# compressed rings + wire-byte telemetry
+# ---------------------------------------------------------------------------
+
+def test_pin_rings_sized_to_wire_bytes(rng):
+    _, _, eng_fp = _mini_engine(rng, "fp")
+    _, names, eng_q8 = _mini_engine(rng, "q8")
+    try:
+        entry = eng_q8.manager.weights[names[0]]
+        assert isinstance(entry, tuple) and len(entry) == 2
+        q, scale = entry
+        assert q.dtype == np.int8 and scale.dtype == np.float32
+        # ring slots hold the compressed staging footprint, two per group
+        assert eng_q8.pinned_overhead_bytes() == 2 * entry_slot_bytes(entry)
+        assert eng_q8.pinned_overhead_bytes() < eng_fp.pinned_overhead_bytes()
+    finally:
+        eng_fp.close()
+        eng_q8.close()
+
+
+def test_transfer_spans_carry_wire_bytes(rng):
+    """pin/transfer spans report the bytes that actually moved (wire),
+    with fp_bytes preserving the compute equivalent — and the streamed
+    trace still recalibrates."""
+    tr = Tracer()
+    _, names, eng = _mini_engine(rng, "q8", tracer=tr)
+    eng.warm_prefetch()
+    x = jnp.asarray(rng.standard_normal((2, 96)).astype(np.float32))
+    for nm in names:
+        eng.linear(x, nm)
+    eng.close()
+
+    entry = eng.manager.weights[names[0]]
+    wire = entry_wire_bytes(entry)
+    fp = eng._fp_shard_bytes[names[0]]
+    assert wire < fp
+    spans = tr.spans()
+    for track in ("pin", "transfer"):
+        ss = [s for s in spans if s.track == track]
+        assert ss
+        for s in ss:
+            assert s.attrs["bytes"] == wire
+            assert s.attrs["fp_bytes"] == fp
+    est = measured_speeds(spans, phase="decode")
+    assert est.wire_ratio == pytest.approx(wire / fp, rel=1e-9)
+    fit = recalibrate_alpha(spans, 0.5, phase="decode")
+    assert 0.0 <= fit.alpha <= 1.0
+
+
+# ---------------------------------------------------------------------------
+# policy: compression shifts alpha toward the device
+# ---------------------------------------------------------------------------
+
+def test_effective_link_speed():
+    assert effective_link_speed(8e9, 0.25) == pytest.approx(32e9)
+    assert effective_link_speed(8e9, 1.0) == 8e9
+    with pytest.raises(ValueError):
+        effective_link_speed(8e9, 0.0)
+    # the shifted law: r < 1 strictly raises the analytic alpha
+    a_fp = alpha_analytic(2e9, 50e9, 8e9)
+    a_q8 = alpha_analytic(2e9, 50e9, effective_link_speed(8e9, 0.26))
+    assert a_q8 > a_fp
+
+
+@pytest.mark.parametrize("bench", [False, True])
+def test_policy_alpha_increases_under_compression(opt_setup, bench):
+    cfg, _ = opt_setup
+    fp = build_policy(enumerate_linears(cfg, wstream="fp"), PAPER_A10,
+                      batch=2, use_alpha_benchmark=bench)
+    q8 = build_policy(enumerate_linears(cfg, wstream="q8"), PAPER_A10,
+                      batch=2, use_alpha_benchmark=bench)
+    assert fp.wstream == "fp" and q8.wstream == "q8"
+    assert q8.alpha > fp.alpha
+    # never slower: the link got cheaper (equal only if tile quantization
+    # lands both plans on the same split AND the host share dominates)
+    assert q8.predicted_step_time <= fp.predicted_step_time
+
+
+# ---------------------------------------------------------------------------
+# accuracy contract (docs/SERVING.md)
+# ---------------------------------------------------------------------------
+
+def test_q8_linear_error_bound(rng):
+    """Per-linear: |y_q8 - y_fp| <= (scale_j / 2) * sum_k |x_k| on the
+    device (streamed) columns; host columns are fp in both."""
+    W, names, eng_fp = _mini_engine(rng, "fp", n=1)
+    plan = [ModulePlan(nm, "g", "hetegen", 0.5) for nm in names]
+    eng_q8 = HeteGenEngine(W, plan, wstream="q8")
+    try:
+        x = rng.standard_normal((4, 96)).astype(np.float32)
+        xj = jnp.asarray(x)
+        y_fp = np.asarray(eng_fp.linear(xj, names[0]))
+        y_q8 = np.asarray(eng_q8.linear(xj, names[0]))
+        cols = eng_q8._dev_cols[names[0]]
+        assert cols == 128                       # 0.5 of 256, tile-aligned
+        _, scale = eng_q8.manager.weights[names[0]]
+        bound = 0.5 * np.abs(x).sum(axis=1)[:, None] * scale[None, :]
+        err = np.abs(y_q8[:, :cols] - y_fp[:, :cols])
+        assert np.all(err <= bound + 1e-3)
+        # host partition never quantizes: bit-identical tail
+        np.testing.assert_array_equal(y_q8[:, cols:], y_fp[:, cols:])
+    finally:
+        eng_fp.close()
+        eng_q8.close()
+
+
+def test_q8_executors_token_identical(opt_setup, rng):
+    """The q8 contract across executors: dense/paged x one-shot/continuous
+    all produce the same greedy tokens (quantization is deterministic, so
+    executor choice must not leak into outputs)."""
+    from repro.serving.api import LLM
+
+    cfg, params = opt_setup
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                        batch=2, alpha_override=0.5, wstream="q8")
+    prompts = [list(rng.integers(0, cfg.vocab_size, 6)) for _ in range(2)]
+    runs = {}
+    try:
+        # the decode partition really streams quantized entries
+        assert any(isinstance(e, tuple)
+                   for e in hb.engines["decode"].manager.weights.values())
+        for paged in (False, True):
+            with LLM(cfg, backend=hb, own_backend=False, wstream="q8",
+                     paged=paged, max_slots=2, max_len=64) as llm:
+                outs = llm.generate(prompts, max_new=5)
+                runs[f"oneshot_paged={paged}"] = [o.tokens for o in outs]
+                rids = [llm.submit(p, 5) for p in prompts]
+                outs = llm.drain()
+                runs[f"cont_paged={paged}"] = [outs[r].tokens for r in rids]
+    finally:
+        hb.close()
+    want = runs.pop("oneshot_paged=False")
+    assert all(len(t) == 5 for t in want)
+    for k, got in runs.items():
+        assert got == want, k
+
+
+def test_wstream_validation(opt_setup):
+    from repro.serving.api import LLM
+
+    cfg, params = opt_setup
+    with pytest.raises(ValueError, match="wire format"):
+        HeteGenBackend(cfg, params, wstream="fp8")
+    # q8 needs a streaming backend
+    with pytest.raises(ValueError, match="streaming backend"):
+        LLM(cfg, params, wstream="q8")
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                        batch=1, wstream="fp")
+    try:
+        with pytest.raises(ValueError, match="conflicts"):
+            LLM(cfg, backend=hb, own_backend=False, wstream="q8")
+        with LLM(cfg, backend=hb, own_backend=False, wstream="fp",
+                 max_slots=1, max_len=32) as llm:
+            assert llm.stats()["wstream"] == "fp"
+    finally:
+        hb.close()
+
+
+# ---------------------------------------------------------------------------
+# verify-phase recalibration (PR 8 follow-up)
+# ---------------------------------------------------------------------------
+
+def test_verify_phase_recalibration(opt_setup, rng):
+    """Verify-phase spans re-tune the verify plan through the same drift
+    hysteresis as decode — even when no decode spans exist at all."""
+    cfg, params = opt_setup
+    tr = Tracer()
+    hb = HeteGenBackend(cfg, params, hw=PAPER_A10, budget_bytes=0,
+                        batch=2, use_alpha_benchmark=False,
+                        tracer=tr, recalibrate=1e-9, recalibrate_every=1)
+    try:
+        toks = jnp.asarray(
+            rng.integers(0, cfg.vocab_size, (2, 4)).astype(np.int32))
+        cache = hb.init_cache(2, 16)
+        # 1st verify: builds the verify plan (no measurable spans yet)
+        cache, _ = hb.verify({"tokens": toks}, cache)
+        a0 = hb.policies["verify"].alpha
+        assert hb.recalibrations == 0
+        # 2nd verify: the 1st call's verify-tagged spans drive the re-fit
+        hb.verify({"tokens": toks}, cache)
+        assert hb.recalibrations >= 1
+        assert hb.last_fit is not None
+        assert hb.policies["verify"].alpha == pytest.approx(
+            hb.last_fit.alpha)
+        assert hb.policies["verify"].alpha != a0
+    finally:
+        hb.close()

@@ -325,4 +325,60 @@ print(f"traced smoke OK: {len(doc['traceEvents'])} events, "
       f"tracks={sorted(tracks)}, io_hidden={rep.io_hidden_frac:.3f}")
 EOF
 
+echo "== smoke: q8 weight streaming (opt-125m, wire bytes + overlap) =="
+# fp vs q8 wire format end to end (docs/ANALYSIS.md appendix): pin both
+# runs to the same split (alpha_override) so the transfer streams move the
+# same columns, then assert the q8 trace's wire bytes land at ~1/4 of fp
+# (int8 payload + fp32 scales; <= 0.6x is the gate), that the *planned*
+# alpha (pol.alpha — untouched by the override) strictly increases under
+# compression, and that the q8 trace still yields a valid overlap report.
+python - <<'EOF'
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.hw import PAPER_A10
+from repro.models import model as M
+from repro.serving.api import LLM
+from repro.serving.backends import HeteGenBackend, enumerate_linears
+from repro.telemetry import validate_chrome_trace
+
+cfg = get_config("opt-125m")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+total = sum(s.nbytes for s in enumerate_linears(cfg))
+rng = np.random.default_rng(0)
+prompts = [list(rng.integers(0, cfg.vocab_size, 8)) for _ in range(2)]
+
+wire, planned, outs = {}, {}, {}
+for ws in ("fp", "q8"):
+    be = HeteGenBackend(cfg, params, hw=PAPER_A10, batch=2,
+                        budget_bytes=0.25 * total, wstream=ws,
+                        alpha_override=0.5)
+    with LLM(cfg, params, backend=be, own_backend=True, max_slots=2,
+             max_len=32, trace=True) as llm:
+        for p in prompts:
+            llm.submit(p, 4)
+        outs[ws] = llm.drain()
+        planned[ws] = be.policies["decode"].alpha
+        wire[ws] = sum((s.attrs or {}).get("bytes", 0)
+                       for s in llm.tracer.spans()
+                       if s.track == "transfer")
+        if ws == "q8":
+            doc = llm.write_trace("/tmp/hetegen_q8_trace.json")
+            rep = llm.overlap_report()
+
+assert all(len(o.tokens) == 4 for o in outs["q8"].values()), outs["q8"]
+ratio = wire["q8"] / max(wire["fp"], 1)
+assert ratio <= 0.6, (ratio, wire)
+assert planned["q8"] > planned["fp"], planned
+problems = validate_chrome_trace(doc)
+assert problems == [], problems[:5]
+assert 0.0 <= rep.overall.io_hidden_frac <= 1.0, rep.overall
+assert rep.overall.io_busy > 0, "q8 decode moved no bytes?"
+print(f"q8 streaming smoke OK: wire ratio={ratio:.3f} "
+      f"(fp={wire['fp']} B, q8={wire['q8']} B), "
+      f"planned alpha fp={planned['fp']:.3f} -> q8={planned['q8']:.3f}, "
+      f"io_hidden={rep.overall.io_hidden_frac:.3f}")
+EOF
+
 echo "CI OK"
